@@ -1,0 +1,90 @@
+"""Paper Figure 1: decode-attention throughput across context lengths.
+
+The paper's workload: DeepSeek-R1 decode on one GPU-shard — 16 heads,
+head dim 576 (the MLA latent), one query token, KV context 512…64K,
+batch 16/32, five repeats.
+
+This container has no TPU, so wall-clock numbers are CPU-XLA; what is
+preserved from the paper is the *comparison structure*: ETAP (transposed)
+vs the standard (FlashMLA-like) pipeline on identical inputs, with derived
+attention-FLOPs throughput. The TPU-side performance argument lives in
+EXPERIMENTS.md §Roofline/§Perf (lowered-HLO analysis); kernel-level tiling
+is validated by tests/test_kernels.py in interpret mode.
+
+Usage: PYTHONPATH=src python -m benchmarks.fig1_throughput [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.etap import etap_decode_xla, standard_decode_xla
+
+HEADS, DIM, DV = 16, 576, 512   # DeepSeek-R1 decode geometry (paper §4.1)
+REPEATS = 5
+
+
+def attention_flops(bs: int, s: int) -> float:
+    # Sᵀ = K·Qᵀ (2·S·D·H) + Oᵀ = Vᵀ·Pᵀ (2·S·Dv·H), per batch row
+    return bs * (2.0 * s * DIM * HEADS + 2.0 * s * DV * HEADS)
+
+
+def bench(fn, q, k, v, block):
+    out = fn(q, k, v, None, scale=DIM ** -0.5, block=block)
+    jax.block_until_ready(out)           # compile+warm
+    ts = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        out = fn(q, k, v, None, scale=DIM ** -0.5, block=block)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.mean(ts))
+
+
+def run(full: bool = False, block: int = 512):
+    seqs = [512, 1024, 2048, 4096, 8192, 16384, 32768, 65536] if full else \
+        [512, 1024, 2048, 4096, 8192]
+    batches = [16, 32] if full else [16]
+    rng = np.random.default_rng(0)
+    rows = []
+    for bs in batches:
+        for s in seqs:
+            q = jnp.asarray(rng.normal(size=(bs, HEADS, DIM)), jnp.float32)
+            kv = jnp.asarray(rng.normal(size=(bs, s, DIM)), jnp.float32)
+            v = kv[..., :DV]
+            jit_etap = jax.jit(lambda q, k, v, l, **kw: etap_decode_xla(q, k, v, l, **kw),
+                               static_argnames=("scale", "block"))
+            jit_std = jax.jit(lambda q, k, v, l, **kw: standard_decode_xla(q, k, v, l, **kw),
+                              static_argnames=("scale", "block"))
+            t_etap = bench(jit_etap, q, kv, v, block)
+            t_std = bench(jit_std, q, kv, v, block)
+            fl = attention_flops(bs, s)
+            rows.append(dict(batch=bs, seq=s,
+                             etap_us=t_etap * 1e6, std_us=t_std * 1e6,
+                             etap_gflops=fl / t_etap / 1e9,
+                             std_gflops=fl / t_std / 1e9,
+                             speedup=t_std / t_etap))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper's full sweep (512…64K, bs 16+32)")
+    args = ap.parse_args()
+    rows = run(full=args.full)
+    print(f"{'bs':>4} {'seq':>7} {'ETAP us':>12} {'std us':>12} "
+          f"{'ETAP GF/s':>10} {'std GF/s':>10} {'speedup':>8}")
+    for r in rows:
+        print(f"{r['batch']:>4} {r['seq']:>7} {r['etap_us']:>12.0f} "
+              f"{r['std_us']:>12.0f} {r['etap_gflops']:>10.2f} "
+              f"{r['std_gflops']:>10.2f} {r['speedup']:>8.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Roofline table formatter: renders dryrun_results.jsonl (produced by
+``python -m repro.launch.dryrun --all --mesh both --out dryrun_results.jsonl``)
+as the EXPERIMENTS.md §Roofline markdown table."""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt(rows, mesh_filter=None):
+    out = []
+    out.append("| arch | shape | mesh | t_compute | t_memory | t_collective |"
+               " bottleneck | roofline frac | useful FLOPs | HBM GiB/dev |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        mem = (r.get("argument_size_in_bytes", 0)
+               + r.get("temp_size_in_bytes", 0)) / 2 ** 30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']*1e3:.2f} ms | {r['t_memory']*1e3:.2f} ms "
+            f"| {r['t_collective']*1e3:.2f} ms | {r['bottleneck']} "
+            f"| {r['roofline_fraction']*100:.1f}% "
+            f"| {min(r['useful_flops_ratio'], 9.99)*100:.0f}% | {mem:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.jsonl")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = [json.loads(l) for l in open(args.json)]
+    print(fmt(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

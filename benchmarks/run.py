@@ -1,0 +1,101 @@
+"""Benchmark harness entry point — one function per paper artifact.
+Prints ``name,us_per_call,derived`` CSV rows (derived = the artifact's
+headline metric)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bench_fig1_throughput():
+    """Paper Fig. 1 (reduced sweep): ETAP vs standard decode pipelines."""
+    from benchmarks.fig1_throughput import run
+    rows = run(full=False)
+    out = []
+    for r in rows:
+        out.append((f"fig1/etap/bs{r['batch']}/s{r['seq']}", r["etap_us"],
+                    f"{r['etap_gflops']:.2f}GF/s"))
+        out.append((f"fig1/standard/bs{r['batch']}/s{r['seq']}", r["std_us"],
+                    f"speedup={r['speedup']:.2f}x"))
+    return out
+
+
+def bench_table1_rmse():
+    """Paper Table 1: fp16/bf16 RMSE vs fp64 oracle."""
+    from benchmarks.table1_rmse import rmse_for
+    jax.config.update("jax_enable_x64", True)
+    try:
+        out = []
+        for dtype, name in ((jnp.float16, "fp16"), (jnp.bfloat16, "bf16")):
+            for mode in ("etap", "standard"):
+                t0 = time.perf_counter()
+                r = rmse_for(16, 2048, dtype, mode)
+                dt = (time.perf_counter() - t0) * 1e6
+                out.append((f"table1/{name}/{mode}", dt, f"rmse={r:.3e}"))
+        return out
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def bench_kernels_interpret():
+    """Pallas kernel paths (interpret mode) at the paper geometry."""
+    from repro.kernels.etap import ops as etap_ops
+    from repro.kernels.flash_decode import ops as fd_ops
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(4, 16, 576)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(4, 2048, 576)), jnp.float32)
+    v = k[..., :512]
+    out = []
+    for name, fn in (("kernel/etap", lambda: etap_ops.etap_decode(
+            q, k, v, None, scale=576 ** -0.5, block=512)),
+                     ("kernel/etap_mla_fused", lambda: etap_ops.etap_decode_mla(
+            q, k, 512, None, scale=576 ** -0.5, block=512)),
+                     ("kernel/flash_decode_baseline", lambda: fd_ops.flash_decode(
+            q, k, v, None, scale=576 ** -0.5, block=512))):
+        r = fn()
+        jax.block_until_ready(r)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        dt = (time.perf_counter() - t0) * 1e6
+        out.append((name, dt, "interpret=True"))
+    return out
+
+
+def bench_serving_e2e():
+    """End-to-end reduced-config serving step (deepseek MLA, both modes)."""
+    from repro.configs import get_config, reduced
+    from repro.models import model
+    cfg = reduced(get_config("deepseek_r1_671b"))
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0, cfg.vocab_size)
+    _, cache, pos = model.prefill(params, cfg, {"tokens": toks[:, :32]},
+                                  max_len=64)
+    out = []
+    for mode in ("etap", "standard"):
+        step = jax.jit(lambda p, c, t, i, m=mode: model.decode_step(
+            p, cfg, c, t, i, mode=m))
+        logits, c2 = step(params, cache, toks[:, 32], pos)
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for i in range(8):
+            logits, c2 = step(params, c2, toks[:, 32], pos + 1 + i)
+        jax.block_until_ready(logits)
+        dt = (time.perf_counter() - t0) / 8 * 1e6
+        out.append((f"serve/decode_step/{mode}", dt, "reduced deepseek_r1"))
+    return out
+
+
+def main() -> None:
+    benches = [bench_table1_rmse, bench_kernels_interpret,
+               bench_serving_e2e, bench_fig1_throughput]
+    print("name,us_per_call,derived")
+    for b in benches:
+        for name, us, derived in b():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

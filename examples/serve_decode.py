@@ -1,0 +1,36 @@
+"""Serving example: batched prefill + ETAP autoregressive decode on the
+paper's own architecture (reduced deepseek-r1 MLA+MoE), comparing the ETAP
+and standard decode pipelines token-for-token.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import model
+
+cfg = reduced(get_config("deepseek_r1_671b"))
+params = model.init(jax.random.PRNGKey(0), cfg)
+
+B, PROMPT, GEN = 4, 48, 16
+tokens = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0, cfg.vocab_size)
+
+logits, cache, pos = model.prefill(params, cfg, {"tokens": tokens},
+                                   max_len=PROMPT + GEN)
+print(f"prefilled {B}x{PROMPT} tokens; latent cache entries:",
+      sum(x.size for x in jax.tree.leaves(cache)))
+
+outs = {}
+for mode in ("etap", "standard"):
+    c, cur, toks = cache, jnp.argmax(logits, axis=-1), []
+    for i in range(GEN):
+        toks.append(cur)
+        lg, c = model.decode_step(params, cfg, c, cur, pos + i, mode=mode)
+        cur = jnp.argmax(lg, axis=-1)
+    outs[mode] = jnp.stack(toks, 1)
+    print(f"{mode:9s} generated: {outs[mode][0].tolist()}")
+
+assert (outs["etap"] == outs["standard"]).all(), "pipelines must agree"
+print("\nETAP and standard pipelines generate IDENTICAL tokens — the "
+      "transposition is a schedule change, not a model change.")

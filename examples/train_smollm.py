@@ -1,0 +1,28 @@
+"""End-to-end training example: train a (reduced) smollm-360m for a few
+hundred steps on the synthetic pipeline with checkpointing — then kill it
+mid-run and restart, demonstrating the fault-tolerance path.
+
+    PYTHONPATH=src python examples/train_smollm.py
+"""
+import shutil
+import tempfile
+
+from repro.launch import train
+from repro.runtime.fault_tolerance import WorkerFailure
+
+ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+base = ["--arch", "smollm_360m", "--reduced", "--steps", "300",
+        "--batch", "8", "--seq", "64", "--ckpt-dir", ckpt_dir,
+        "--ckpt-every", "50", "--log-every", "50", "--n-micro", "2"]
+
+print("=== phase 1: training crashes at step 120 (injected) ===")
+try:
+    train.run(train.parse_args(base + ["--fail-at", "120"]))
+except WorkerFailure as e:
+    print(f"worker died: {e}")
+
+print("\n=== phase 2: restart from the latest committed checkpoint ===")
+out = train.run(train.parse_args(base + ["--restart"]))
+print(f"\nfinal nll={out['losses'][-1]:.4f} "
+      f"(started {out['losses'][0]:.4f}); stragglers={out['stragglers']}")
+shutil.rmtree(ckpt_dir, ignore_errors=True)

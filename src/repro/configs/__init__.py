@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, MLAConfig, MoEConfig,
+                                ModelConfig, SSMConfig, ShapeCell, cells_for,
+                                get_config, reduced)

@@ -1,0 +1,403 @@
+"""Efficient Transpose Attention Pipeline (ETAP) — the paper's contribution.
+
+Decode attention computes, per (batch, kv-group):
+    standard:  S  = Q Kᵀ,  P = softmax_rows(S),  O = P V          (thin M = heads)
+    ETAP:      Sᵀ = K Qᵀ,  Pᵀ = softmax_cols(Sᵀ), Oᵀ = Vᵀ Pᵀ,  O = (Oᵀ)ᵀ
+with the online-softmax recurrence carried per *column* of the transposed block
+(paper Algorithm 1).  The KV context length rides the M-dimension of every GEMM
+in the hot loop, so the thin head dimension never pads the systolic array's
+M side, and the score/probability tiles keep S on sublanes end-to-end (see
+DESIGN.md §2 for the TPU adaptation of the WGMMA argument).
+
+This module is the *XLA* implementation (lax.scan over KV blocks) used by the
+dry-run and as a mid-level reference; ``repro.kernels.etap`` is the Pallas TPU
+kernel with the same math, and ``repro.kernels.etap.ref`` is the direct oracle.
+
+Shapes (grouped-query form — MLA is the special case group_size=H, kv "heads"=1):
+    q:  [BG, H, Dk]     BG = batch * kv_heads, H = q heads per kv head
+    k:  [BG, S, Dk]
+    v:  [BG, S, Dv]
+    length: [BG] valid cache length per row (mask positions >= length)
+returns O: [BG, H, Dv]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _blocks(s: int, block: int) -> int:
+    assert s % block == 0, f"S={s} not divisible by block={block}"
+    return s // block
+
+
+def etap_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512):
+    """ETAP transposed decode attention, online softmax over KV blocks.
+
+    Blocks are taken with lax.dynamic_slice inside a fori_loop (not scan xs),
+    so the KV cache is streamed in place — no [nb, ...] transpose copy of the
+    whole cache per decode step (that copy would double the memory roofline
+    term of the paper's core workload)."""
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[2]
+    block = min(block, S)
+    nb = _blocks(S, block)
+    if length is None:
+        length = jnp.full((BG,), S, jnp.int32)
+
+    qT = jnp.swapaxes(q, 1, 2).astype(jnp.float32)            # [BG, Dk, H]
+
+    def step(j, carry):
+        m, l, accT = carry                                    # [BG,H] [BG,H] [BG,Dv,H]
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
+        # Sᵀ = K·Qᵀ : [BG, block, H] — KV block length on the M dimension.
+        sT = jnp.einsum("bkd,bdh->bkh", kj, qT.astype(k.dtype),
+                        preferred_element_type=jnp.float32) * scale
+        pos = j * block + jnp.arange(block, dtype=jnp.int32)  # [block]
+        valid = pos[None, :] < length[:, None]                # [BG, block]
+        sT = jnp.where(valid[:, :, None], sT, NEG_INF)
+        # column-wise (per-head) online softmax statistics.
+        m_new = jnp.maximum(m, jnp.max(sT, axis=1))           # [BG, H]
+        pT = jnp.exp(sT - m_new[:, None, :])                  # [BG, block, H]
+        corr = jnp.exp(m - m_new)                             # [BG, H]
+        l_new = l * corr + jnp.sum(pT, axis=1)
+        # Oᵀ += Vᵀ·Pᵀ : contraction over the KV block (the long axis).
+        accT = accT * corr[:, None, :] + jnp.einsum(
+            "bkv,bkh->bvh", vj, pT.astype(v.dtype),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, accT)
+
+    init = (jnp.full((BG, H), NEG_INF, jnp.float32),
+            jnp.zeros((BG, H), jnp.float32),
+            jnp.zeros((BG, Dv, H), jnp.float32))
+    m, l, accT = jax.lax.fori_loop(0, nb, step, init)
+    oT = accT / l[:, None, :]                                 # [BG, Dv, H]
+    return jnp.swapaxes(oT, 1, 2).astype(v.dtype)             # final O = (Oᵀ)ᵀ
+
+
+def standard_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512):
+    """Baseline (FlashMLA-without-ETAP): untransposed flash decode. Same
+    signature/semantics as :func:`etap_decode_xla`; the thin head dim rides M."""
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[2]
+    block = min(block, S)
+    nb = _blocks(S, block)
+    if length is None:
+        length = jnp.full((BG,), S, jnp.int32)
+
+    qf = q.astype(jnp.float32)
+
+    def step(j, carry):
+        m, l, acc = carry                                     # [BG,H] [BG,H] [BG,H,Dv]
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
+        s = jnp.einsum("bhd,bkd->bhk", qf.astype(k.dtype), kj,
+                       preferred_element_type=jnp.float32) * scale
+        pos = j * block + jnp.arange(block, dtype=jnp.int32)
+        valid = pos[None, :] < length[:, None]                # [BG, block]
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=2))
+        p = jnp.exp(s - m_new[:, :, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=2)
+        acc = acc * corr[:, :, None] + jnp.einsum(
+            "bhk,bkv->bhv", p.astype(v.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc)
+
+    init = (jnp.full((BG, H), NEG_INF, jnp.float32),
+            jnp.zeros((BG, H), jnp.float32),
+            jnp.zeros((BG, H, Dv), jnp.float32))
+    m, l, acc = jax.lax.fori_loop(0, nb, step, init)
+    return (acc / l[:, :, None]).astype(v.dtype)
+
+
+def etap_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
+                     vary_axis=None):
+    """ETAP loop WITHOUT the epilogue: returns raw (m, l, accT) softmax
+    statistics — the combinable form used by sequence-sharded decode.
+    vary_axis: shard_map manual axis name(s) to mark the carry varying over
+    (required when called inside shard_map)."""
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[2]
+    block = min(block, S)
+    nb = _blocks(S, block)
+
+    qT = jnp.swapaxes(q, 1, 2).astype(jnp.float32)
+
+    def step(j, carry):
+        m, l, accT = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
+        sT = jnp.einsum("bkd,bdh->bkh", kj, qT.astype(k.dtype),
+                        preferred_element_type=jnp.float32) * scale
+        pos = j * block + jnp.arange(block, dtype=jnp.int32)
+        valid = pos[None, :] < length[:, None]
+        sT = jnp.where(valid[:, :, None], sT, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sT, axis=1))
+        pT = jnp.exp(sT - m_new[:, None, :])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pT, axis=1)
+        accT = accT * corr[:, None, :] + jnp.einsum(
+            "bkv,bkh->bvh", vj, pT.astype(v.dtype),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, accT)
+
+    init = (jnp.full((BG, H), NEG_INF, jnp.float32),
+            jnp.zeros((BG, H), jnp.float32),
+            jnp.zeros((BG, Dv, H), jnp.float32))
+    if vary_axis is not None:
+        init = jax.tree.map(lambda a: jax.lax.pvary(a, vary_axis), init)
+    return jax.lax.fori_loop(0, nb, step, init)
+
+
+def combine_partials(m, l, accT):
+    """Merge per-shard (m, l, accT) stats (leading shard axis) into O.
+    m,l: [n,BG,H]; accT: [n,BG,Dv,H] -> [BG,H,Dv]."""
+    m_g = jnp.max(m, axis=0)                                  # [BG,H]
+    w = jnp.exp(m - m_g[None])                                # [n,BG,H]
+    l_g = jnp.sum(l * w, axis=0)
+    acc_g = jnp.sum(accT * w[:, :, None, :], axis=0)          # [BG,Dv,H]
+    oT = acc_g / l_g[:, None, :]
+    return jnp.swapaxes(oT, 1, 2)
+
+
+def seq_sharded_decode(q, cache, new_row, pos, *, dv: int, scale: float,
+                       axis: str = "model", block: int = 512):
+    """Sequence-sharded MLA decode (shard_map over `axis`).
+
+    The MLA latent cache [B, S, L] has NO head dimension, so tensor
+    parallelism cannot shard it — instead S is sharded over the model axis;
+    each shard (1) writes the new latent row if it owns position `pos`,
+    (2) runs the ETAP partial loop over its local S/n slice, and (3) shards
+    exchange the tiny (m, l, accT) stats (flash-decode-style cross-device
+    softmax combine). q: [B,H,L]; cache: [B,S,L] S-sharded; new_row: [B,L].
+    Returns (O [B,H,dv], updated cache)."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.sharding.get_abstract_mesh()
+
+    def local(q, cache, new_row, pos):
+        n = jax.lax.axis_size(axis)
+        idx = jax.lax.axis_index(axis)
+        S_local = cache.shape[1]
+        start = idx * S_local
+        slot = jnp.clip(pos - start, 0, S_local - 1)
+        owns = (pos >= start) & (pos < start + S_local)
+        # single-row conditional write: non-owners rewrite their old row —
+        # O(row) traffic, never an O(cache) select copy (§Perf D4)
+        old = jax.lax.dynamic_slice_in_dim(cache, slot, 1, axis=1)
+        row = jnp.where(owns, new_row[:, None, :], old)
+        cache = jax.lax.dynamic_update_slice_in_dim(cache, row, slot, axis=1)
+        length = jnp.clip(pos + 1 - start, 0, S_local)
+        B = q.shape[0]
+        m, l, accT = etap_partial_xla(
+            q, cache, cache[..., :dv],
+            jnp.full((B,), length, jnp.int32), scale=scale, block=block,
+            vary_axis=(axis,))
+        # combine via weighted psum: one all-reduce of [B,dv,H] instead of
+        # an n-fold all-gather (§Perf iteration D3 — 8x less wire traffic)
+        m_g = jax.lax.pmax(m, axis)                           # [B,H]
+        w = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * w, axis)
+        acc_g = jax.lax.psum(accT * w[:, None, :], axis)      # [B,dv,H]
+        oT = acc_g / l_g[:, None, :]
+        return jnp.swapaxes(oT, 1, 2).astype(cache.dtype), cache
+
+    # manual ONLY over the model axis: batch (pod/data) sharding of q/cache
+    # keeps propagating automatically outside the manual region.
+    return jax.shard_map(
+        local, mesh=mesh, axis_names={axis},
+        in_specs=(P(), P(None, axis, None), P(), P()),
+        out_specs=(P(), P(None, axis, None)),
+        check_vma=False,
+    )(q, cache, new_row, pos)
+
+
+def decode_attention(q, k, v, length=None, *, scale: float, mode: str = "etap",
+                     block: int = 512, use_kernels: bool = False,
+                     interpret: bool = True):
+    """Unified decode attention entry point.
+
+    mode: "etap" (the paper) or "standard" (FlashMLA-like baseline).
+    use_kernels: dispatch to the Pallas implementations (tests/benchmarks run
+    them with interpret=True on CPU; on a real TPU interpret=False).
+    """
+    if use_kernels:
+        from repro.kernels.etap import ops as etap_ops
+        from repro.kernels.flash_decode import ops as fd_ops
+        fn = etap_ops.etap_decode if mode == "etap" else fd_ops.flash_decode
+        return fn(q, k, v, length, scale=scale, block=block, interpret=interpret)
+    fn = etap_decode_xla if mode == "etap" else standard_decode_xla
+    return fn(q, k, v, length, scale=scale, block=block)
+
+
+def gqa_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
+                    vary_axis=None):
+    """ETAP partial stats for GQA in the native [B,S,K,hd] cache layout.
+    q: [B,K,G,hd]. Returns (m, l, accT): [B,K,G], [B,K,G], [B,K,Dv,G]."""
+    B, K, G, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[3]
+    block = min(block, S)
+    nb = _blocks(S, block)
+    qf = q.astype(jnp.float32)
+
+    def step(j, carry):
+        m, l, accT = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
+        sT = jnp.einsum("bskd,bkgd->bksg", kj, qf.astype(k.dtype),
+                        preferred_element_type=jnp.float32) * scale
+        pos = j * block + jnp.arange(block, dtype=jnp.int32)
+        valid = pos[None, :] < length[:, None]
+        sT = jnp.where(valid[:, None, :, None], sT, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sT, axis=2))
+        pT = jnp.exp(sT - m_new[:, :, None, :])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pT, axis=2)
+        accT = accT * corr[:, :, None, :] + jnp.einsum(
+            "bskv,bksg->bkvg", vj, pT.astype(v.dtype),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, accT)
+
+    init = (jnp.full((B, K, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, K, G), jnp.float32),
+            jnp.zeros((B, K, Dv, G), jnp.float32))
+    if vary_axis is not None:
+        init = jax.tree.map(lambda a: jax.lax.pvary(a, vary_axis), init)
+    return jax.lax.fori_loop(0, nb, step, init)
+
+
+def seq_sharded_gqa_decode(q, k_cache, v_cache, new_k, new_v, pos, *,
+                           scale: float, axis: str = "model",
+                           block: int = 512):
+    """Sequence-sharded GQA decode (shard_map over `axis`) — the generic-
+    attention analogue of :func:`seq_sharded_decode`: each shard owns an
+    S/n slice of the [B,S,K,hd] cache, writes the new KV row if `pos` falls
+    in its range, runs the ETAP partial loop locally, and shards exchange
+    only the (m, l, accT) stats. q: [B,K,G,hd]; new_k/new_v: [B,K,hd].
+    Returns (O [B,K*G,Dv], new k_cache, new v_cache)."""
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.get_abstract_mesh()
+    B, K, G, Dk = q.shape
+    Dv = v_cache.shape[3]
+
+    def local(q, kc, vc, nk, nv, pos):
+        idx = jax.lax.axis_index(axis)
+        S_local = kc.shape[1]
+        start = idx * S_local
+        slot = jnp.clip(pos - start, 0, S_local - 1)
+        owns = (pos >= start) & (pos < start + S_local)
+        # single-row conditional writes (see seq_sharded_decode — §Perf D4)
+        def write(c, new):
+            old = jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1)
+            row = jnp.where(owns, new[:, None], old)
+            return jax.lax.dynamic_update_slice_in_dim(c, row, slot, axis=1)
+        kc = write(kc, nk)
+        vc = write(vc, nv)
+        length = jnp.full((B,), jnp.clip(pos + 1 - start, 0, S_local),
+                          jnp.int32)
+        m, l, accT = gqa_partial_xla(q, kc, vc, length, scale=scale,
+                                     block=block, vary_axis=(axis,))
+        # weighted-psum combine (one all-reduce, no n-fold gather — §Perf D3)
+        m_g = jax.lax.pmax(m, axis)                    # [B,K,G]
+        w = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * w, axis)
+        acc_g = jax.lax.psum(accT * w[:, :, None, :], axis)
+        o = jnp.swapaxes(acc_g / l_g[:, :, None, :], 2, 3)   # [B,K,G,Dv]
+        return o.reshape(B, K * G, Dv).astype(v_cache.dtype), kc, vc
+
+    cspec = P(None, axis, None, None)
+    return jax.shard_map(
+        local, mesh=mesh, axis_names={axis},
+        in_specs=(P(), cspec, cspec, P(), P(), P()),
+        out_specs=(P(), cspec, cspec),
+        check_vma=False,
+    )(q, k_cache, v_cache, new_k, new_v, pos)
+
+
+def gqa_decode_xla(q, k, v, length, *, scale: float, mode: str = "etap",
+                   block: int = 512):
+    """GQA decode attention operating NATIVELY on the [B,S,K,hd] cache layout
+    (no transpose/copy of the multi-GiB cache — it is streamed in place with
+    dynamic_slice). q: [B,K,G,hd]; k,v: [B,S,K,hd*]; length: [B].
+    Returns [B, K*G, Dv]. ETAP mode keeps the KV block on the long GEMM dim
+    with per-(k,g)-column softmax stats; standard mode is the thin-M baseline."""
+    B, K, G, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[3]
+    block = min(block, S)
+    nb = _blocks(S, block)
+    qf = q.astype(jnp.float32)
+
+    def step_etap(j, carry):
+        m, l, accT = carry                        # [B,K,G] [B,K,G] [B,K,Dv,G]
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
+        # Sᵀ: KV block on the long dim, per-(k,g) column statistics
+        sT = jnp.einsum("bskd,bkgd->bksg", kj, qf.astype(k.dtype),
+                        preferred_element_type=jnp.float32) * scale
+        pos = j * block + jnp.arange(block, dtype=jnp.int32)
+        valid = pos[None, :] < length[:, None]    # [B, block]
+        sT = jnp.where(valid[:, None, :, None], sT, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sT, axis=2))
+        pT = jnp.exp(sT - m_new[:, :, None, :])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pT, axis=2)
+        accT = accT * corr[:, :, None, :] + jnp.einsum(
+            "bskv,bksg->bkvg", vj, pT.astype(v.dtype),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, accT)
+
+    def step_std(j, carry):
+        m, l, acc = carry                         # [B,K,G] [B,K,G] [B,K,G,Dv]
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
+        s = jnp.einsum("bkgd,bskd->bkgs", qf.astype(k.dtype), kj,
+                       preferred_element_type=jnp.float32) * scale
+        pos = j * block + jnp.arange(block, dtype=jnp.int32)
+        valid = pos[None, :] < length[:, None]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=3))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=3)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgs,bskv->bkgv", p.astype(v.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc)
+
+    stats = (jnp.full((B, K, G), NEG_INF, jnp.float32),
+             jnp.zeros((B, K, G), jnp.float32))
+    if mode == "etap":
+        init = stats + (jnp.zeros((B, K, Dv, G), jnp.float32),)
+        m, l, accT = jax.lax.fori_loop(0, nb, step_etap, init)
+        o = jnp.swapaxes(accT / l[:, :, None, :], 2, 3)       # [B,K,G,Dv]
+    else:
+        init = stats + (jnp.zeros((B, K, G, Dv), jnp.float32),)
+        m, l, acc = jax.lax.fori_loop(0, nb, step_std, init)
+        o = acc / l[..., None]
+    return o.reshape(B, K * G, Dv).astype(v.dtype)
+
+
+def gqa_to_grouped(q, k, v):
+    """[B,H,D],[B,S,K,D],[B,S,K,Dv] -> grouped (BG=B*K) form + a restorer."""
+    B, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D).reshape(B * K, G, D)
+    kg = jnp.swapaxes(k, 1, 2).reshape(B * K, k.shape[1], k.shape[3])
+    vg = jnp.swapaxes(v, 1, 2).reshape(B * K, v.shape[1], v.shape[3])
+
+    def restore(o):                                           # [B*K, G, Dv]
+        return o.reshape(B, K, G, o.shape[-1]).reshape(B, H, o.shape[-1])
+    return qg, kg, vg, restore

@@ -1,0 +1,124 @@
+"""Multi-head Latent Attention (DeepSeek) with ETAP decode.
+
+Training / prefill use the "naive" (decompressed) form. Decode uses the
+*absorbed* form FlashMLA targets: the per-head up-projections W_uk / W_uv are
+folded into the query and output, so attention runs over the shared 576-d
+latent cache  c = [rmsnorm(c_kv) ; rope(k_r)]  — a single [B,S,576] stream
+serving both K and V (V = c[..., :kv_lora_rank]).  This is the exact
+16-heads-vs-huge-context GEMM the paper transposes with ETAP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.etap import decode_attention, seq_sharded_decode
+from repro.models import layers
+from repro.models.attention import causal_attention
+
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": layers.init_dense(ks[0], D, m.q_lora_rank, dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "w_uq": layers.init_dense(ks[1], m.q_lora_rank, H * m.qk_head_dim, dtype),
+        # fused down-projection: [kv_lora | rope] columns
+        "w_dkv": layers.init_dense(ks[2], D, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "w_uk": layers.init_dense(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype),
+        "w_uv": layers.init_dense(ks[4], m.kv_lora_rank, H * m.v_head_dim, dtype),
+        "w_o": layers.init_dense(ks[5], H * m.v_head_dim, D, dtype),
+    }
+
+
+def _queries(params, cfg, x, positions):
+    """x: [..., D] -> (q_nope [..., H, nope], q_rope [..., H, rope])."""
+    m, H = cfg.mla, cfg.num_heads
+    cq = layers.rms_norm(layers.dense(x, params["w_dq"]), params["q_norm"], cfg.norm_eps)
+    q = layers.dense(cq, params["w_uq"]).reshape(*x.shape[:-1], H, m.qk_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(params, cfg, x, positions):
+    """x: [..., D] -> latent cache rows [..., kv_lora+rope] (c in the paper)."""
+    m = cfg.mla
+    dkv = layers.dense(x, params["w_dkv"])
+    c_kv = layers.rms_norm(dkv[..., : m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = layers.apply_rope(dkv[..., m.kv_lora_rank:], positions, cfg.rope_theta)
+    return jnp.concatenate([c_kv, k_rope], axis=-1)
+
+
+def mla_train(params, cfg, x, positions, *, return_cache: bool = False):
+    """Naive (decompressed) MLA for training/prefill. x: [B,S,D] -> [B,S,D]."""
+    m, H = cfg.mla, cfg.num_heads
+    B, S, D = x.shape
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c = _latent(params, cfg, x, positions)                    # [B,S,kv+rope]
+    c_kv, k_rope = c[..., : m.kv_lora_rank], c[..., m.kv_lora_rank:]
+    k_nope = layers.dense(c_kv, params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = layers.dense(c_kv, params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    scale = m.qk_head_dim ** -0.5
+    o = causal_attention(q, k, v, scale=scale)                # kv heads == H
+    out = layers.dense(o.reshape(B, S, H * m.v_head_dim), params["w_o"])
+    if return_cache:
+        return out, {"c": c}
+    return out
+
+
+def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap"):
+    """Absorbed-form decode. x: [B,D]; cache: {"c": [B,Smax,latent]}.
+
+    q_c[b,h] = q_nope[b,h] · W_uk[:,h]  (512-d), q = [q_c ; q_rope] (576-d)
+    scores   = q · cᵀ  — via ETAP as  c · qᵀ  with the context on M.
+    o_latent = P · c[..., :512]; o[b,h] = o_latent[b,h] · W_uvᵀ.
+    """
+    m, H = cfg.mla, cfg.num_heads
+    B, D = x.shape
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _queries(params, cfg, x[:, None, :], positions)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]               # [B,H,*]
+    # absorb W_uk into the query: [B,H,nope] x [kv,H,nope] -> [B,H,kv]
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bhd,chd->bhc", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.concatenate([q_c, q_rope], axis=-1)               # [B,H,latent]
+
+    c_t = _latent(params, cfg, x[:, None, :], positions)[:, 0]  # [B,latent]
+    scale = m.qk_head_dim ** -0.5
+    from repro.sharding.rules import seq_shardable
+    mesh = jax.sharding.get_abstract_mesh()
+    seq_shard = seq_shardable(cache["c"].shape[1], mesh)
+    if seq_shard:
+        # latent cache is S-sharded over the model axis (no head dim to
+        # shard — the paper's single-instance scenario); flash-decode-style
+        # cross-shard softmax combine. See core.etap.seq_sharded_decode.
+        o_lat, cache_c = seq_sharded_decode(
+            q, cache["c"], c_t, pos, dv=m.kv_lora_rank, scale=scale)
+    else:
+        cache_c = jax.lax.dynamic_update_index_in_dim(cache["c"], c_t, pos, 1)
+        length = jnp.full((B,), pos + 1, jnp.int32)
+        # Single latent stream: K is the full 576 latent, V its first 512 cols.
+        o_lat = decode_attention(q, cache_c, cache_c[..., : m.kv_lora_rank],
+                                 length, scale=scale, mode=mode,
+                                 use_kernels=cfg.use_kernels)  # [B,H,512]
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bhc,chd->bhd", o_lat.astype(jnp.float32),
+                   w_uv.astype(jnp.float32)).astype(x.dtype)
+    return layers.dense(o.reshape(B, -1), params["w_o"]), {"c": cache_c}
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype):
+    return {"c": jnp.zeros((batch, max_len, cfg.mla.latent_dim), dtype)}
+
+
+def mla_prefill_cache(params, cfg, x, positions):
+    """Latent cache rows for a whole prompt (used by prefill)."""
+    return _latent(params, cfg, x, positions)

@@ -1,0 +1,95 @@
+"""Deterministic synthetic data pipeline with host-sharded loading.
+
+Each step's global batch is a pure function of (seed, step) so any worker —
+or a restarted worker — regenerates exactly its shard: checkpoint/restart
+and elastic re-meshing need no data-loader state beyond the step counter.
+A background prefetch thread keeps `depth` batches in flight.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.frontend import FRONTEND_DIMS
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 17
+    global_batch: int = 8
+    seq_len: int = 128
+
+
+def batch_struct(cfg, data: DataConfig):
+    """abstract ShapeDtypeStructs for one batch (matches launch.input_specs)."""
+    B, S = data.global_batch, data.seq_len
+    if cfg.frontend:
+        return {"embeds": jax.ShapeDtypeStruct((B, S, FRONTEND_DIMS[cfg.frontend]),
+                                               cfg.jax_dtype),
+                "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def make_batch(cfg, data: DataConfig, step: int, *, lo: int = 0,
+               hi: Optional[int] = None) -> dict:
+    """Deterministic batch for `step`; [lo, hi) selects a host's batch rows."""
+    hi = data.global_batch if hi is None else hi
+    rng = np.random.default_rng((data.seed, step))
+    tokens = rng.integers(0, cfg.vocab_size, size=(data.global_batch, data.seq_len),
+                          dtype=np.int32)[lo:hi]
+    if cfg.frontend:
+        emb = rng.standard_normal(
+            (data.global_batch, data.seq_len, FRONTEND_DIMS[cfg.frontend]),
+            dtype=np.float32)[lo:hi]
+        out = {"embeds": emb.astype(cfg.jax_dtype), "targets": tokens}
+    else:
+        out = {"tokens": tokens}
+    return out
+
+
+def device_batch(cfg, data: DataConfig, step: int, sharding) -> dict:
+    """Globally-sharded jax arrays built shard-by-shard (multi-host pattern:
+    each host materializes only its rows via make_array_from_callback)."""
+    host = make_batch(cfg, data, step)
+
+    def put(arr):
+        arr = np.asarray(arr)
+        return jax.make_array_from_callback(
+            arr.shape, sharding(arr.ndim), lambda idx: arr[idx])
+    return {k: put(v) for k, v in host.items()}
+
+
+class Prefetcher:
+    """Background-thread batch prefetch (depth-bounded)."""
+
+    def __init__(self, cfg, data: DataConfig, sharding, start_step: int = 0,
+                 depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not self._stop.is_set():
+                batch = device_batch(cfg, data, step, sharding)
+                self._q.put((step, batch))
+                step += 1
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self) -> Iterator:
+        while True:
+            yield self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

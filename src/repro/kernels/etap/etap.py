@@ -1,0 +1,126 @@
+"""ETAP decode-attention Pallas TPU kernel (paper Algorithm 1, TPU-adapted).
+
+Per (batch-group, KV-block) grid step the kernel computes the *transposed*
+attention update:
+
+    Sᵀ_j = K_j Qᵀ            [B_kv, H]   (KV block length on the GEMM M dim)
+    m, ℓ  : per-COLUMN online-softmax stats            [1, H]
+    Accᵀ += Vᵀ_j Pᵀ_j         [Dv, H]    (contraction over the long KV axis)
+    epilogue: O = (Accᵀ / ℓ)ᵀ  [H, Dv]   (the single final transpose)
+
+The HBM→VMEM producer pipeline of the paper's warpgroup1 is Pallas grid
+pipelining (serial KV grid dimension, double-buffered by Mosaic); see
+DESIGN.md §2. The MLA-fused variant streams the 576-wide latent cache once
+and reuses its first Dv columns as V — one HBM stream for both GEMMs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _etap_body(length_ref, q_ref, k_ref, v_ref, o_ref,
+               acc_ref, m_ref, l_ref, *, scale: float, block: int,
+               nb: int, fused_dv: int):
+    """Shared kernel body. With fused_dv > 0, v_ref is None and V is the
+    first fused_dv columns of the K (latent) block."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_blk = k_ref[0]                                   # [block, Dk]
+    q = q_ref[0]                                       # [H, Dk]
+    # Sᵀ = K·Qᵀ — context block on M, heads on N (no M padding waste).
+    sT = jax.lax.dot_general(
+        k_blk, q, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # [block, H]
+
+    length = length_ref[pl.program_id(0)]
+    pos = j * block + jax.lax.broadcasted_iota(jnp.int32, sT.shape, 0)
+    sT = jnp.where(pos < length, sT, NEG_INF)
+
+    m_old = m_ref[...]                                 # [1, H]
+    m_new = jnp.maximum(m_old, jnp.max(sT, axis=0, keepdims=True))
+    p = jnp.exp(sT - m_new)                            # [block, H]  (Pᵀ)
+    corr = jnp.exp(m_old - m_new)                      # [1, H]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
+    m_ref[...] = m_new
+
+    v_blk = k_blk[:, :fused_dv] if fused_dv else v_ref[0]
+    # Accᵀ += Vᵀ·Pᵀ — contraction over the KV block.
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        v_blk, p, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [Dv, H]
+
+    @pl.when(j == nb - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).T.astype(o_ref.dtype)
+
+
+def _body_fused(length_ref, q_ref, k_ref, o_ref, acc, m, l, **kw):
+    _etap_body(length_ref, q_ref, k_ref, None, o_ref, acc, m, l, **kw)
+
+
+def _call(q, k, v, length, *, scale, block, interpret, fused_dv):
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = fused_dv or v.shape[2]
+    block = min(block, S)
+    assert S % block == 0, (S, block)
+    nb = S // block
+
+    in_specs = [
+        pl.BlockSpec((1, H, Dk), lambda b, j, *_: (b, 0, 0)),      # q
+        pl.BlockSpec((1, block, Dk), lambda b, j, *_: (b, j, 0)),  # k (or latent)
+    ]
+    operands = [q, k]
+    if not fused_dv:
+        in_specs.append(pl.BlockSpec((1, block, Dv), lambda b, j, *_: (b, j, 0)))
+        operands.append(v)
+
+    kw = dict(scale=scale, block=block, nb=nb, fused_dv=fused_dv)
+    body = functools.partial(_body_fused if fused_dv else _etap_body, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BG, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, H, Dv), lambda b, j, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Dv, H), jnp.float32),                  # Accᵀ
+            pltpu.VMEM((1, H), jnp.float32),                   # m
+            pltpu.VMEM((1, H), jnp.float32),                   # ℓ
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BG, H, Dv), (v if v is not None else k).dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(length.astype(jnp.int32), *operands)
+
+
+def etap_decode_pallas(q, k, v, length, *, scale: float, block: int = 512,
+                       interpret: bool = True):
+    """Generic (separate-V) ETAP decode kernel."""
+    return _call(q, k, v, length, scale=scale, block=block,
+                 interpret=interpret, fused_dv=0)
+
+
+def etap_decode_mla_pallas(q, kv, dv: int, length, *, scale: float,
+                           block: int = 512, interpret: bool = True):
+    """MLA-fused ETAP: single latent stream, V = kv[..., :dv]."""
+    return _call(q, kv, None, length, scale=scale, block=block,
+                 interpret=interpret, fused_dv=dv)

@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the ETAP kernel: shape normalization (pad S to a
+block multiple — masked via `length`), dtype checks, MLA-fused entry point."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.etap.etap import etap_decode_mla_pallas, etap_decode_pallas
+
+
+def _pad_seq(x, block: int):
+    S = x.shape[1]
+    pad = (-S) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block", "interpret"))
+def etap_decode(q, k, v, length=None, *, scale: float, block: int = 512,
+                interpret: bool = True):
+    """ETAP decode attention. q: [BG,H,Dk]; k: [BG,S,Dk]; v: [BG,S,Dv];
+    length: [BG] valid-prefix lengths (None = all S). Returns [BG,H,Dv]."""
+    BG, _, _ = q.shape
+    S = k.shape[1]
+    if length is None:
+        length = jnp.full((BG,), S, jnp.int32)
+    block = min(block, S)
+    k = _pad_seq(k, block)     # padded tail is masked out via `length`
+    v = _pad_seq(v, block)
+    return etap_decode_pallas(q, k, v, length, scale=scale, block=block,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("dv", "scale", "block", "interpret"))
+def etap_decode_mla(q, kv, dv: int, length=None, *, scale: float,
+                    block: int = 512, interpret: bool = True):
+    """MLA-fused ETAP: one latent stream [BG,S,latent]; V = kv[..., :dv]."""
+    BG = q.shape[0]
+    S = kv.shape[1]
+    if length is None:
+        length = jnp.full((BG,), S, jnp.int32)
+    block = min(block, S)
+    kv = _pad_seq(kv, block)
+    return etap_decode_mla_pallas(q, kv, dv, length, scale=scale, block=block,
+                                  interpret=interpret)

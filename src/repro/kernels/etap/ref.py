@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for ETAP decode attention (and its fp64 variant for the
+paper's Table-1 RMSE study). No blocking, no online softmax — the direct
+mathematical definition, written in the *transposed* (ETAP) orientation so
+the kernel's algebra can be checked step by step:
+
+    Sᵀ = K Qᵀ          [S, H]
+    Pᵀ = softmax_cols(Sᵀ)
+    Oᵀ = Vᵀ Pᵀ          [Dv, H]
+    O  = (Oᵀ)ᵀ          [H, Dv]
+
+which is elementwise identical to softmax_rows(Q Kᵀ) V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def etap_decode_ref(q, k, v, length=None, *, scale: float, dtype=jnp.float32):
+    """q: [BG,H,Dk]; k: [BG,S,Dk]; v: [BG,S,Dv]; length: [BG] or None.
+    Computes in `dtype` (float64 for the RMSE oracle) and returns [BG,H,Dv]."""
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    qf, kf, vf = (a.astype(dtype) for a in (q, k, v))
+    sT = jnp.einsum("bsd,bhd->bsh", kf, qf) * dtype(scale)    # Sᵀ = K Qᵀ
+    if length is not None:
+        pos = jnp.arange(S)
+        sT = jnp.where((pos[None, :] < length[:, None])[:, :, None], sT,
+                       dtype(-jnp.inf))
+    pT = jax.nn.softmax(sT, axis=1)                           # softmax over S (cols)
+    oT = jnp.einsum("bsv,bsh->bvh", vf, pT)                   # Oᵀ = Vᵀ Pᵀ
+    return jnp.swapaxes(oT, 1, 2).astype(v.dtype)             # O = (Oᵀ)ᵀ

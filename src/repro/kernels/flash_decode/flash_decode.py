@@ -1,0 +1,90 @@
+"""Baseline flash decode-attention kernel — the *untransposed* pipeline
+(FlashMLA-without-ETAP). Identical tiling/pipelining to the ETAP kernel so
+the two differ ONLY in computation orientation:
+
+    S_j = Q Kᵀ_j     [H, B_kv]    (thin head dim on the GEMM M dimension)
+    m, ℓ : per-ROW online stats   [H, 1]
+    Acc += P_j V_j   [H, Dv]
+
+This is the comparison target for the paper's Figure-1 claim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _body(length_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+          *, scale: float, block: int, nb: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                        # [H, Dk]
+    k_blk = k_ref[0]                                    # [block, Dk]
+    s = jax.lax.dot_general(
+        q, k_blk, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # [H, block]
+
+    length = length_ref[pl.program_id(0)]
+    pos = j * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_old = m_ref[...]                                  # [H, 1]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                              # [H, block]
+    corr = jnp.exp(m_old - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [H, Dv]
+
+    @pl.when(j == nb - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q, k, v, length, *, scale: float, block: int = 512,
+                        interpret: bool = True):
+    """q: [BG,H,Dk]; k: [BG,S,Dk]; v: [BG,S,Dv]; length: [BG]. -> [BG,H,Dv]."""
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[2]
+    block = min(block, S)
+    assert S % block == 0
+    nb = S // block
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BG, nb),
+        in_specs=[
+            pl.BlockSpec((1, H, Dk), lambda b, j, *_: (b, 0, 0)),
+            pl.BlockSpec((1, block, Dk), lambda b, j, *_: (b, j, 0)),
+            pl.BlockSpec((1, block, Dv), lambda b, j, *_: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, Dv), lambda b, j, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, Dv), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_body, scale=scale, block=block, nb=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BG, H, Dv), v.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(length.astype(jnp.int32), q, k, v)

@@ -1,0 +1,25 @@
+"""jit'd wrapper for the baseline (untransposed) flash decode kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block", "interpret"))
+def flash_decode(q, k, v, length=None, *, scale: float, block: int = 512,
+                 interpret: bool = True):
+    BG = q.shape[0]
+    S = k.shape[1]
+    if length is None:
+        length = jnp.full((BG,), S, jnp.int32)
+    block = min(block, S)
+    pad = (-S) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    return flash_decode_pallas(q, k, v, length, scale=scale, block=block,
+                               interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the causal prefill kernel (direct masked softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v, *, scale: float, dtype=jnp.float32):
+    """q: [B,S,H,D]; k,v: [B,S,K,D*] -> [B,S,H,Dv] (GQA by head grouping)."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.reshape(B, S, K, G, D).astype(dtype)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qf, k.astype(dtype)) * dtype(scale)
+    mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+    s = jnp.where(mask[None, :, None, None, :], s, dtype(-jnp.inf))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskv->bqkgv", p, v.astype(dtype))
+    return o.reshape(B, S, H, v.shape[-1]).astype(v.dtype)

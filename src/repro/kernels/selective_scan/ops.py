@@ -1,0 +1,36 @@
+"""jit'd wrapper for the selective-scan kernel (pads L and D to blocks)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selective_scan.scan import selective_scan_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "d_block", "interpret"))
+def selective_scan(dA, dBx, c, *, chunk: int = 256, d_block: int = 256,
+                   interpret: bool = True):
+    """dA, dBx: [B,L,D,N]; c: [B,L,N] -> y [B,L,D] (f32).
+    Pads L (zero dA/dBx rows keep the padded steps inert: h := 0·h + 0)
+    and D to block multiples; slices the result back."""
+    B, L, D, N = dA.shape
+    chunk = min(chunk, L)
+    d_block = min(d_block, D)
+    padL = (-L) % chunk
+    padD = (-D) % d_block
+    if padL or padD:
+        dA = jnp.pad(dA, ((0, 0), (0, padL), (0, padD), (0, 0)))
+        dBx = jnp.pad(dBx, ((0, 0), (0, padL), (0, padD), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, padL), (0, 0)))
+    y, h = selective_scan_pallas(dA.astype(jnp.float32),
+                                 dBx.astype(jnp.float32),
+                                 c.astype(jnp.float32),
+                                 chunk=chunk, d_block=d_block,
+                                 interpret=interpret)
+    # padded steps have dA=dBx=0, so h after padding is 0 — but the final
+    # state must be the one at step L: with right-padding dA=0 zeroes it.
+    # ops therefore only exposes h when L % chunk == 0 (no padding).
+    return (y[:, :L, :D], h[:, :D] if not padL else None)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the selective scan: direct sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dA, dBx, c, dtype=jnp.float32):
+    """dA, dBx: [B,L,D,N]; c: [B,L,N] -> y [B,L,D]; computed in `dtype`."""
+    dA = dA.astype(dtype)
+    dBx = dBx.astype(dtype)
+    c = c.astype(dtype)
+
+    def step(h, xs):
+        a, b, ct = xs
+        h = a * h + b                                   # [B,D,N]
+        return h, jnp.einsum("bdn,bn->bd", h, ct)
+
+    B, L, D, N = dA.shape
+    h0 = jnp.zeros((B, D, N), dtype)
+    _, y = jax.lax.scan(step, h0, (jnp.swapaxes(dA, 0, 1),
+                                   jnp.swapaxes(dBx, 0, 1),
+                                   jnp.swapaxes(c, 0, 1)))
+    return jnp.swapaxes(y, 0, 1)

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import json
+import sys
+import time
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cells_for, get_config
+from repro.data.pipeline import DataConfig, batch_struct
+from repro.launch import hlo_analysis, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import TrainConfig, make_serve_step, make_train_step
+from repro.models import model
+from repro.models.frontend import FRONTEND_DIMS
+from repro.optim import optimizers as opt
+from repro.sharding import rules
+
+BIG_ARCHES = {"llama4_maverick_400b", "deepseek_r1_671b"}   # adafactor cells
+
+
+def input_specs(arch: str, shape: str, *, mesh=None):
+    """ShapeDtypeStruct stand-ins for every model input of one (arch, shape)
+    cell — weak-type-correct, shardable, zero device allocation."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+    if cell.is_decode:
+        return {
+            "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    return batch_struct(cfg, DataConfig(global_batch=B, seq_len=S))
+
+
+def _batch_shardings(batch, mesh):
+    b = rules.batch_axes(mesh)
+
+    def one(leaf):
+        spec = [rules._fit(b, leaf.shape[0], mesh)] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, batch)
+
+
+def _train_config(arch: str, cell) -> TrainConfig:
+    ocfg = opt.OptimizerConfig(
+        name="adafactor" if arch in BIG_ARCHES else "adamw")
+    n_micro = 8 if cell.global_batch >= 64 else 1
+    return TrainConfig(optimizer=ocfg, n_micro=n_micro)
+
+
+def lower_cell(arch: str, shape: str, mesh, *, verbose: bool = True,
+               serve_profile: bool = False, n_micro: int = None,
+               no_remat: bool = False):
+    """Lower + compile one (arch × shape × mesh) cell. Returns report dict.
+
+    Hillclimb knobs (see EXPERIMENTS.md §Perf):
+      serve_profile: TP/EP-only weights for decode cells (no FSDP regather)
+      n_micro: override the gradient-accumulation depth for train cells
+    """
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    rng = jax.random.PRNGKey(0)
+    t0 = time.time()
+
+    profile = "serve" if (serve_profile and cell.is_decode) else "train"
+    if no_remat:
+        import dataclasses as _dc0
+        cfg = _dc0.replace(cfg, remat=False)
+    params_s = jax.eval_shape(functools.partial(model.init, cfg=cfg), rng)
+    p_shard = rules.param_shardings(params_s, mesh, profile=profile)
+
+    with jax.set_mesh(mesh):
+        if cell.is_decode:
+            cache_s = jax.eval_shape(
+                lambda: model.init_cache(cfg, cell.global_batch, cell.seq_len))
+            c_specs = rules.cache_specs(cache_s, mesh)
+            c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+            ins = input_specs(arch, shape)
+            tok_shard = _batch_shardings({"t": ins["tokens"]}, mesh)["t"]
+            logits_shard = NamedSharding(mesh, P(
+                rules._fit(rules.batch_axes(mesh), cell.global_batch, mesh), None))
+            step_fn = make_serve_step(cfg)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, c_shard, tok_shard, None),
+                out_shardings=(logits_shard, c_shard),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_s, cache_s,
+                                   ins["tokens"], ins["pos"])
+        else:
+            import dataclasses as _dc
+            tcfg = _train_config(arch, cell)
+            if n_micro is not None:
+                tcfg = _dc.replace(tcfg, n_micro=n_micro)
+            if cell.kind == "train":
+                opt_s = jax.eval_shape(
+                    functools.partial(opt.opt_init, tcfg.optimizer), params_s)
+                o_specs = rules.opt_state_specs(opt_s, mesh)
+                o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs)
+                batch = input_specs(arch, shape)
+                b_shard = _batch_shardings(batch, mesh)
+                step_fn = make_train_step(cfg, tcfg)
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(p_shard, o_shard, b_shard, None),
+                    out_shardings=(p_shard, o_shard, None),
+                    donate_argnums=(0, 1),
+                )
+                lowered = jitted.lower(params_s, opt_s, batch,
+                                       jax.ShapeDtypeStruct((), jnp.int32))
+            else:   # prefill
+                batch = input_specs(arch, shape)
+                b_shard = _batch_shardings(batch, mesh)
+
+                def prefill_logits(params, batch):
+                    logits, _, cache = model.forward(params, cfg, batch,
+                                                     collect_cache=True)
+                    return logits[:, -1, :], cache
+                jitted = jax.jit(prefill_logits,
+                                 in_shardings=(p_shard, b_shard))
+                lowered = jitted.lower(params_s, batch)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    analysis = hlo_analysis.analyze(hlo_text)
+    terms = roofline.roofline_terms_from_analysis(analysis)
+    coll = roofline.CollectiveStats(
+        bytes_by_kind=analysis["collective_by_kind"],
+        count_by_kind=roofline.parse_collectives(hlo_text).count_by_kind)
+    n_active = roofline.active_params(cfg)
+    mf = roofline.model_flops(cfg, cell, n_active)
+    n_chips = mesh.devices.size
+    report = {
+        "arch": arch, "shape": shape, "mesh": "x".join(map(str, mesh.devices.shape)),
+        "kind": cell.kind,
+        **terms,
+        "model_flops_per_chip": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / terms["hlo_flops"]
+        if terms["hlo_flops"] else 0.0,
+        "active_params": n_active,
+        "total_params": roofline.total_params(cfg),
+        "collectives": coll.count_by_kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                report[attr] = int(v)
+    if verbose:
+        print(f"[dryrun] {arch} × {shape} × {report['mesh']}: "
+              f"compute={terms['t_compute']*1e3:.2f}ms "
+              f"memory={terms['t_memory']*1e3:.2f}ms "
+              f"collective={terms['t_collective']*1e3:.2f}ms "
+              f"bottleneck={terms['bottleneck']} "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        if mem is not None:
+            print(f"  memory_analysis: args={report.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temps={report.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+        print(f"  cost_analysis: flops/chip={terms['hlo_flops']:.3e} "
+              f"bytes/chip={terms['hlo_bytes']:.3e} "
+              f"coll_bytes/chip={terms['collective_bytes']:.3e} {coll.count_by_kind}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run + roofline")
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSON lines here")
+    ap.add_argument("--serve-profile", action="store_true",
+                    help="TP/EP-only weights for decode cells (§Perf S1)")
+    ap.add_argument("--n-micro", type=int, default=None,
+                    help="override gradient-accumulation depth (§Perf)")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable per-block remat (§Perf)")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    jobs = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = cells_for(cfg)
+        if args.shape:
+            cells = [c for c in cells if c.name == args.shape]
+        for c in cells:
+            for mp in meshes:
+                jobs.append((arch, c.name, mp))
+
+    failures = []
+    for arch, shape, mp in jobs:
+        mesh = make_production_mesh(multi_pod=mp)
+        try:
+            rep = lower_cell(arch, shape, mesh,
+                             serve_profile=args.serve_profile,
+                             n_micro=args.n_micro, no_remat=args.no_remat)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rep) + "\n")
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((arch, shape, mp, repr(e)[:400]))
+            print(f"[dryrun] FAIL {arch} × {shape} × multi={mp}: {e!r}"[:600])
+    print(f"\n[dryrun] {len(jobs) - len(failures)}/{len(jobs)} cells OK")
+    for f in failures:
+        print("  FAIL:", f)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

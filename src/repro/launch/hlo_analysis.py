@@ -1,0 +1,295 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop BODY once — for a
+scan-over-layers model that undercounts FLOPs/bytes/collective-traffic by the
+layer count (× microbatch count × attention-chunk count…). This module parses
+the post-optimization HLO text, reconstructs the computation call graph
+(while bodies, conditionals, fusions), extracts loop trip counts from the
+condition computations, and accumulates:
+
+    flops            2·M·N·K for dots (+1/elem for elementwise fusions)
+    bytes            operand+result bytes at fusion granularity (HBM-traffic
+                     approximation: fusion internals stay in registers/VMEM)
+    collective_bytes result bytes of all-gather/all-reduce/reduce-scatter/
+                     all-to-all/collective-permute, trip-multiplied
+
+Trip counts: the largest s32 literal in the while's condition computation —
+exact for scan/fori loops (cond is ``iter < N``), documented heuristic
+otherwise.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops that move no HBM bytes of their own
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "while", "call",
+             "conditional", "custom-call"}
+
+
+def _shape_info(shape_str: str):
+    """-> (bytes, elements) over all array shapes in the string."""
+    total_b, total_e = 0, 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+        total_e += n
+    return total_b, total_e
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: List[str]
+    attrs: str
+    inside: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    int_constants: List[int] = field(default_factory=list)
+
+
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:\S+?\[[\d,]*\]\S*|\w+\[\]|\w+))\s+([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_ATTR_COMP = {
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+}
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and "{" in line:
+            cur = Computation(mc.group(2))
+            comps[cur.name] = cur
+            if mc.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, shape, op, rest = mi.groups()
+        # operand names: up to the closing paren at depth 0
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        inside, attrs = rest[:i - 1], rest[i:]
+        ops_names = _OPERAND_RE.findall(inside)
+        cur.instrs.append(Instr(name, shape, op, ops_names, attrs, inside))
+        if op == "constant" and shape.startswith(("s32", "s64", "u32")):
+            m = re.search(r"constant\((-?\d+)\)", line)
+            if m:
+                cur.int_constants.append(int(m.group(1)))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _dot_flops(inst: Instr, shapes: Dict[str, str]) -> float:
+    rb, re_ = _shape_info(inst.shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+    if not m or not inst.operands:
+        return 2.0 * re_          # fallback
+    lhs_shape = shapes.get(inst.operands[0], "")
+    dims = _SHAPE_RE.findall(lhs_shape)
+    if not dims:
+        return 2.0 * re_
+    lhs_dims = [int(d) for d in dims[0][1].split(",") if d]
+    k = 1
+    for ci in m.group(1).split(","):
+        if ci and int(ci) < len(lhs_dims):
+            k *= lhs_dims[int(ci)]
+    return 2.0 * re_ * k
+
+
+def analyze(text: str) -> dict:
+    comps = parse_module(text)
+    entry = comps["__entry__"]
+    # global name->result-shape map (names are unique per module in practice)
+    shapes: Dict[str, str] = {}
+    for c in comps.values():
+        for i in c.instrs:
+            shapes[i.name] = i.shape
+
+    memo: Dict[tuple, dict] = {}
+    _eff_memo: Dict[str, dict] = {}
+
+    def eff_param_bytes(cname: str) -> dict:
+        """index -> effective read bytes (or None = full) of a fused
+        computation's parameters: a parameter consumed ONLY by
+        (dynamic-)slice ops reads just the slices, not the (possibly huge)
+        base buffer — the KV-cache streaming case. A parameter consumed only
+        by dynamic-update-slice writes just the updated region."""
+        if cname in _eff_memo:
+            return _eff_memo[cname]
+        comp = comps.get(cname)
+        out: dict = {}
+        if comp is not None:
+            name_to_idx = {}
+            for i in comp.instrs:
+                if i.op == "parameter":
+                    m = re.match(r"\s*(\d+)", i.inside)
+                    if m:
+                        name_to_idx[i.name] = int(m.group(1))
+            for pname, idx in name_to_idx.items():
+                users = [u for u in comp.instrs if pname in u.operands]
+                if users and all(u.op in ("dynamic-slice", "slice")
+                                 for u in users):
+                    out[idx] = sum(_shape_info(u.shape)[0] for u in users)
+                elif users and all(
+                        u.op == "dynamic-update-slice"
+                        and u.operands and u.operands[0] == pname
+                        for u in users):
+                    out[idx] = sum(
+                        _shape_info(shapes.get(u.operands[1], ""))[0]
+                        for u in users if len(u.operands) > 1)
+        _eff_memo[cname] = out
+        return out
+
+    def comp_cost(cname: str, in_fusion: bool) -> dict:
+        key = (cname, in_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = {"flops": 0.0, "bytes": 0.0, "coll": 0.0,
+                     "coll_by_kind": {}}   # cycle guard
+        out = {"flops": 0.0, "bytes": 0.0, "coll": 0.0, "coll_by_kind": {}}
+        comp = comps.get(cname)
+        if comp is None:
+            return out
+        seen_reads: set = set()   # each buffer read counted once per execution
+
+        def operand_bytes(inst):
+            b = 0
+            for o in inst.operands:
+                if o in seen_reads:
+                    continue
+                seen_reads.add(o)
+                b += _shape_info(shapes.get(o, ""))[0]
+            return b
+
+        for inst in comp.instrs:
+            rbytes, relems = _shape_info(inst.shape)
+            kind = next((c for c in _COLLECTIVES if inst.op == c
+                         or inst.op.startswith(c + "-start")
+                         or inst.op.startswith(c + ".")), None)
+            if kind:
+                out["coll"] += rbytes
+                out["coll_by_kind"][kind] = out["coll_by_kind"].get(kind, 0) + rbytes
+                out["bytes"] += rbytes
+                continue
+            if inst.op == "dot":
+                out["flops"] += _dot_flops(inst, shapes)
+                if not in_fusion:
+                    out["bytes"] += rbytes + operand_bytes(inst)
+                continue
+            if inst.op in ("dynamic-slice", "slice"):
+                # reads only the slice, not the (possibly huge) base buffer
+                if not in_fusion:
+                    out["bytes"] += 2 * rbytes
+                continue
+            if inst.op == "dynamic-update-slice":
+                # in-place update: read+write of the updated region only
+                if not in_fusion and len(inst.operands) >= 2:
+                    upd = _shape_info(shapes.get(inst.operands[1], ""))[0]
+                    out["bytes"] += 2 * upd
+                continue
+            if inst.op == "while":
+                body = _ATTR_COMP["body"].search(inst.attrs)
+                cond = _ATTR_COMP["condition"].search(inst.attrs)
+                trip = 1
+                if cond and comps.get(cond.group(1)):
+                    consts = comps[cond.group(1)].int_constants
+                    trip = max([c for c in consts if c > 0], default=1)
+                if body:
+                    sub = comp_cost(body.group(1), in_fusion)
+                    for k2 in ("flops", "bytes", "coll"):
+                        out[k2] += trip * sub[k2]
+                    for k2, v in sub["coll_by_kind"].items():
+                        out["coll_by_kind"][k2] = \
+                            out["coll_by_kind"].get(k2, 0) + trip * v
+                continue
+            if inst.op == "fusion":
+                m = _ATTR_COMP["calls"].search(inst.attrs)
+                eff = {}
+                if m:
+                    sub = comp_cost(m.group(1), True)   # flops only inside
+                    out["flops"] += sub["flops"]
+                    out["coll"] += sub["coll"]
+                    eff = eff_param_bytes(m.group(1))
+                if not in_fusion:
+                    b = rbytes
+                    for oi, o in enumerate(inst.operands):
+                        if o in seen_reads:
+                            continue
+                        seen_reads.add(o)
+                        if oi in eff:
+                            b += eff[oi]
+                        else:
+                            b += _shape_info(shapes.get(o, ""))[0]
+                    out["bytes"] += b
+                out["flops"] += relems                  # elementwise floor
+                continue
+            if inst.op in ("call", "conditional"):
+                for pat in ("calls", "branches"):
+                    m = _ATTR_COMP[pat].search(inst.attrs)
+                    if m:
+                        for sub_name in _OPERAND_RE.findall(m.group(1)) or \
+                                [m.group(1)]:
+                            sub = comp_cost(sub_name, in_fusion)
+                            for k2 in ("flops", "bytes", "coll"):
+                                out[k2] += sub[k2]
+                            for k2, v in sub["coll_by_kind"].items():
+                                out["coll_by_kind"][k2] = \
+                                    out["coll_by_kind"].get(k2, 0) + v
+                continue
+            if inst.op in _FREE_OPS:
+                continue
+            # other top-level op (dynamic-slice, copy, convert, reduce, …)
+            out["flops"] += relems
+            if not in_fusion:
+                out["bytes"] += rbytes + operand_bytes(inst)
+        memo[key] = out
+        return out
+
+    total = comp_cost(entry.name, False)
+    return {"flops": total["flops"], "bytes": total["bytes"],
+            "collective_bytes": total["coll"],
+            "collective_by_kind": total["coll_by_kind"]}

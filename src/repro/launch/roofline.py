@@ -1,0 +1,174 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN.md §7).
+
+TPU v5e constants (per chip):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI per link      : ~50 GB/s
+
+The SPMD-partitioned HLO module is the *per-device* program, so
+cost_analysis() FLOPs/bytes are per-chip already:
+    compute term    = HLO_FLOPs / peak
+    memory term     = HLO_bytes / HBM_bw
+    collective term = collective_bytes / link_bw
+collective_bytes is parsed from the HLO text: the result-shape bytes of each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shapes like bf16[16,512]{1,0} or f32[] ; tuples handled by re-scanning
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in (per-device) HLO."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((c for c in _COLLECTIVES
+                     if op == c or op.startswith(c + ".")), None)
+        if kind is None:
+            continue
+        b = _shape_bytes(m.group(1))
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def roofline_terms_from_analysis(analysis: dict) -> dict:
+    """Terms from hlo_analysis.analyze() (trip-count-aware — the primary
+    source; cost_analysis() counts while bodies once and is kept only as a
+    cross-check column)."""
+    flops = float(analysis["flops"])
+    byts = float(analysis["bytes"])
+    coll = float(analysis["collective_bytes"])
+    out = {
+        "hlo_flops": flops,
+        "hlo_bytes": byts,
+        "collective_bytes": coll,
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": byts / HBM_BW,
+        "t_collective": coll / ICI_BW,
+    }
+    dom = max(("t_compute", "t_memory", "t_collective"), key=lambda k: out[k])
+    out["bottleneck"] = dom[2:]
+    t_total = max(out["t_compute"], out["t_memory"], out["t_collective"])
+    out["roofline_fraction"] = out["t_compute"] / t_total if t_total > 0 else 0.0
+    return out
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    out = {
+        "hlo_flops": flops,
+        "hlo_bytes": byts,
+        "collective_bytes": float(coll.total_bytes),
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": byts / HBM_BW,
+        "t_collective": coll.total_bytes / ICI_BW,
+    }
+    dom = max(("t_compute", "t_memory", "t_collective"), key=lambda k: out[k])
+    out["bottleneck"] = dom[2:]
+    t_total = max(out["t_compute"], out["t_memory"], out["t_collective"])
+    out["roofline_fraction"] = out["t_compute"] / t_total if t_total > 0 else 0.0
+    return out
+
+
+def model_flops(cfg, cell, n_active_params: int) -> float:
+    """6·N·D (train) / 2·N·D (inference fwd) convention, attention excluded.
+    decode processes global_batch tokens; train/prefill B·S tokens."""
+    tokens = cell.global_batch * (1 if cell.is_decode else cell.seq_len)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_active_params * tokens
+
+
+def active_params(cfg) -> int:
+    """Approximate activated parameter count (MoE: top_k of num_experts +
+    shared expert; embeddings counted once)."""
+    D, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    hd = cfg.resolved_head_dim
+    total = V * D
+    kinds = cfg.layer_kinds()
+    for i, kind in enumerate(kinds):
+        if kind == "attn":
+            if cfg.attention_kind == "mla":
+                m = cfg.mla
+                total += D * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * m.qk_head_dim
+                total += D * (m.kv_lora_rank + m.qk_rope_head_dim)
+                total += m.kv_lora_rank * cfg.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                total += cfg.num_heads * m.v_head_dim * D
+            else:
+                total += D * hd * (cfg.num_heads + 2 * cfg.num_kv_heads) \
+                    + cfg.num_heads * hd * D
+        elif kind == "rglru":
+            W = cfg.lru_width or D
+            total += 2 * D * W + 2 * W * W + W * D
+        elif kind == "ssm":
+            di = cfg.ssm.expand * D
+            dtr = cfg.ssm.dt_rank or -(-D // 16)
+            total += 2 * D * di + di * (dtr + 2 * cfg.ssm.d_state) \
+                + dtr * di + di * D
+        if kind == "ssm":
+            continue
+        if cfg.moe_layer(i):
+            F = cfg.moe.d_ff_expert or cfg.d_ff
+            total += cfg.moe.top_k * 3 * D * F          # activated experts
+            if cfg.moe.shared_expert:
+                total += 3 * D * F
+        elif kind in ("attn", "rglru"):
+            total += 3 * D * cfg.d_ff
+    return int(total)
+
+
+def total_params(cfg) -> int:
+    """Full parameter count (MoE: all experts)."""
+    act = active_params(cfg)
+    if cfg.moe is None:
+        return act
+    F = cfg.moe.d_ff_expert or cfg.d_ff
+    n_moe = sum(1 for i in range(cfg.num_layers) if cfg.moe_layer(i))
+    extra = n_moe * (cfg.moe.num_experts - cfg.moe.top_k) * 3 * cfg.d_model * F
+    return act + extra

@@ -1,0 +1,80 @@
+"""train_step / serve_step factories shared by the dry-run, the trainer and
+the server. Gradient accumulation runs as a lax.scan over microbatches
+(activation footprint / n_micro); remat is per-block (models.model).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.optim import optimizers as opt
+from repro.sharding.rules import constrain
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt.OptimizerConfig = opt.OptimizerConfig()
+    n_micro: int = 1              # gradient-accumulation microbatches
+    compress_grads: bool = False  # int8+error-feedback cross-pod reduction
+
+
+def make_train_step(cfg, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch, step) -> (params, opt_state,
+    metrics). Microbatching splits the batch's leading dim into n_micro chunks."""
+
+    def grads_of(params, batch):
+        return jax.grad(lambda p: model.loss_fn(p, cfg, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch, step):
+        if tcfg.n_micro > 1:
+            def reshape(x):
+                return x.reshape((tcfg.n_micro, x.shape[0] // tcfg.n_micro)
+                                 + x.shape[1:])
+            micro = jax.tree.map(reshape, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, m_acc = carry
+                g, metrics = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype) / tcfg.n_micro, g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b / tcfg.n_micro,
+                                     m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+            m0 = {k: jnp.zeros((), jnp.float32)
+                  for k in ("nll",) + model.AUX_KEYS}
+            (grads, metrics), _ = jax.lax.scan(acc_fn, (g0, m0), micro)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        if tcfg.compress_grads:
+            from repro.optim.compress import compress_tree_for_pod_reduce
+            grads = compress_tree_for_pod_reduce(grads)
+
+        grads, gnorm = opt.clip_by_global_norm(grads, tcfg.optimizer.clip_norm)
+        params, opt_state = opt.opt_update(tcfg.optimizer, grads, opt_state, params)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg, *, mode: str = "etap"):
+    """serve_step(params, cache, tokens, pos) -> (logits, cache): one decode
+    token against the existing KV/state cache (the paper's workload)."""
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cfg, cache, tokens, pos, mode=mode)
+    return serve_step
+
+
+def make_prefill_step(cfg, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, cfg, batch, max_len=max_len)
+    return prefill_step

@@ -1,0 +1,25 @@
+"""Modality frontends for [audio]/[vlm] backbones. Per the brief these are
+STUBS: ``input_specs()`` supplies *precomputed* frame/patch embeddings; the
+frontend here is just the projection into the backbone width. Decode operates
+in token space (EnCodec codes / text tokens) via the normal embedding table.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+FRONTEND_DIMS = {"audio": 128, "vision": 1024}
+
+
+def init_frontend(key, cfg, dtype):
+    if not cfg.frontend:
+        return None
+    d_in = FRONTEND_DIMS[cfg.frontend]
+    return {"proj": layers.init_dense(key, d_in, cfg.d_model, dtype)}
+
+
+def apply_frontend(params, embeds):
+    """embeds: [B,S,d_frontend] precomputed frames/patches -> [B,S,d_model]."""
+    return layers.dense(embeds, params["proj"])

@@ -1,0 +1,144 @@
+"""Mamba-1 selective SSM block (falcon-mamba). Training/prefill run a
+*chunked* selective scan: an outer lax.scan over sequence chunks carries the
+[B, d_inner, d_state] state, and the chunk interior uses an associative scan —
+states for at most one chunk are ever materialized (the full [B,S,d_inner,N]
+tensor would be terabytes at 32K).  Decode is a single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.sharding.rules import BATCH, constrain
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, s.d_state, s.d_conv
+
+
+def init_mamba(key, cfg, dtype):
+    d_inner, dt_rank, N, K = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 7)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (d_inner, N))
+    return {
+        "w_in": layers.init_dense(ks[0], D, 2 * d_inner, dtype),   # x and z branches
+        "conv_w": (jax.random.normal(ks[1], (K, d_inner), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_bcdt": layers.init_dense(ks[2], d_inner, dt_rank + 2 * N, dtype),
+        "w_dt": layers.init_dense(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.full((d_inner,), -4.0, jnp.float32),        # softplus ~ small dt
+        "log_neg_A": jnp.log(A),                                   # A = -exp(log_neg_A)
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "w_out": layers.init_dense(ks[4], d_inner, D, dtype),
+    }
+
+
+def _ssm_inputs(params, cfg, xc):
+    """xc: [..., d_inner] post-conv. Returns per-step (dA, dBx, C) terms:
+    recurrence h = dA * h + dBx, output y = sum_n C*h + D*x."""
+    d_inner, dt_rank, N, _ = _dims(cfg)
+    bcdt = layers.dense(xc, params["w_bcdt"]).astype(jnp.float32)
+    dt_in, B, C = jnp.split(bcdt, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(layers.dense(dt_in.astype(xc.dtype), params["w_dt"])
+                         .astype(jnp.float32) + params["dt_bias"])   # [..., d_inner]
+    A = -jnp.exp(params["log_neg_A"])                                # [d_inner, N]
+    dA = jnp.exp(dt[..., None] * A)                                  # [..., d_inner, N]
+    dBx = dt[..., None] * B[..., None, :] * xc.astype(jnp.float32)[..., None]
+    return dA, dBx, C
+
+
+def _chunk_scan(h0, dA, dBx):
+    """Within-chunk associative scan. h0: [B,d,N]; dA,dBx: [B,L,d,N]."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    # fold the carried state into the first step
+    dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    return h                                                        # [B,L,d,N]
+
+
+def mamba_seq(params, cfg, x, *, return_state: bool = False):
+    """x: [B,S,D] -> [B,S,D]; chunked selective scan."""
+    d_inner, _, N, K = _dims(cfg)
+    B_, S_in, D = x.shape
+    chunk = min(cfg.ssm.chunk, S_in)
+    pad = (-S_in) % chunk                 # left-pad to a chunk multiple: zero
+    if pad:                               # inputs leave the zero state unchanged
+        x = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    S = S_in + pad
+    xz = layers.dense(x, params["w_in"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv; keep d_inner on the model axis throughout the
+    # scan internals (otherwise the [B,S,d_inner,N] state tensors replicate
+    # — the falcon_mamba train_4k §Perf-M1 fix)
+    xs = constrain(xs, P(BATCH, None, "model"))
+    xp = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = sum(xp[:, i: i + S, :] * params["conv_w"][i] for i in range(K))
+    xc = jax.nn.silu(xc + params["conv_b"])
+    xc = constrain(xc, P(BATCH, None, "model"))
+    dA, dBx, C = _ssm_inputs(params, cfg, xc)
+    dA = constrain(dA, P(BATCH, None, "model", None))
+    dBx = constrain(dBx, P(BATCH, None, "model", None))
+
+    if cfg.use_kernels:
+        # Pallas selective-scan: state lives in VMEM across the chunk grid;
+        # HBM traffic = one pass over dA/dBx/C + one write of y
+        # (the §Perf-M endgame — kernels/selective_scan).
+        from repro.kernels.selective_scan.ops import selective_scan
+        y, h_last = selective_scan(dA, dBx, C, chunk=chunk)
+        y = y.reshape(B_, S, d_inner)
+    else:
+        nc = S // chunk
+        dAc = dA.reshape(B_, nc, chunk, d_inner, N)
+        dBxc = dBx.reshape(B_, nc, chunk, d_inner, N)
+        Cc = C.reshape(B_, nc, chunk, N)
+
+        def outer(h, xs_):
+            dAj, dBxj, Cj = xs_
+            h_all = _chunk_scan(h, dAj, dBxj)                       # [B,chunk,d,N]
+            h_all = constrain(h_all, P(BATCH, None, "model", None))
+            y = jnp.einsum("bldn,bln->bld", h_all, Cj)
+            return h_all[:, -1], y
+
+        h0 = jnp.zeros((B_, d_inner, N), jnp.float32)
+        h_last, y = jax.lax.scan(outer, h0, (jnp.swapaxes(dAc, 0, 1),
+                                             jnp.swapaxes(dBxc, 0, 1),
+                                             jnp.swapaxes(Cc, 0, 1)))
+        y = jnp.swapaxes(y, 0, 1).reshape(B_, S, d_inner)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = layers.dense(y, params["w_out"])[:, pad:]
+    if not return_state:
+        return out
+    tail = xs[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+        xs, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, {"h": h_last, "conv": tail}
+
+
+def mamba_decode(params, cfg, x, state):
+    """x: [B,D]; state {"h": [B,d,N] f32, "conv": [B,K-1,d]}."""
+    d_inner, _, N, K = _dims(cfg)
+    xz = layers.dense(x, params["w_in"])
+    xt, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state["conv"], xt[:, None, :]], axis=1)
+    xc = jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+    dA, dBx, C = _ssm_inputs(params, cfg, xc)                       # [B,d,N]x2,[B,N]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C) + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return layers.dense(y, params["w_out"]), {"h": h, "conv": window[:, 1:, :]}
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    d_inner, _, N, K = _dims(cfg)
+    return {"h": jnp.zeros((batch, d_inner, N), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, d_inner), dtype)}

@@ -1,0 +1,317 @@
+"""Config-driven LM: embedding -> grouped/scanned block stack -> head.
+
+Layers are *grouped* so jax.lax.scan compiles each distinct block body once:
+ - homogeneous stacks (dense/MoE/SSM) scan a single stacked group;
+ - periodic hybrids (recurrentgemma's rglru,rglru,attn cycle) scan a stacked
+   "superblock" group + unrolled remainder;
+ - irregular prefixes (deepseek's 3 dense + 58 MoE layers) become run-length
+   segments.
+The KV/state cache pytree mirrors the grouping, so decode scans layers with
+(params, cache) as scan xs and the updated cache as scan ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mla as mla_mod
+from repro.models import attention, frontend, layers, mamba, moe, rglru
+from repro.sharding.rules import BATCH, constrain
+
+AUX_KEYS = ("load_balance", "router_z")
+
+
+# ------------------------------------------------------------- layer groups
+def signatures(cfg) -> list:
+    """(kind, is_moe) per layer."""
+    return [(k, bool(cfg.moe_layer(i)) and k == "attn")
+            for i, k in enumerate(cfg.layer_kinds())]
+
+
+def _rle(seq):
+    runs = []
+    for s in seq:
+        if runs and runs[-1][0] == s:
+            runs[-1][1] += 1
+        else:
+            runs.append([s, 1])
+    return [(s, n) for s, n in runs]
+
+
+def layer_groups(cfg) -> list:
+    """Static plan: list of {"sigs": [sig,...], "n": repeats}."""
+    sigs = signatures(cfg)
+    runs = _rle(sigs)
+    if len(runs) <= 4:
+        return [{"sigs": [s], "n": n} for s, n in runs]
+    for p in range(1, 7):                              # periodic superblock
+        if all(sigs[i] == sigs[i % p] for i in range(len(sigs))):
+            n = len(sigs) // p
+            groups = [{"sigs": sigs[:p], "n": n}]
+            groups += [{"sigs": [s], "n": 1} for s in sigs[n * p:]]
+            return groups
+    return [{"sigs": [s], "n": 1} for s in sigs]       # fallback: unrolled
+
+
+# -------------------------------------------------------------- block defs
+def _init_block(key, cfg, sig, dtype):
+    kind, is_moe = sig
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    D = cfg.d_model
+    p = {"norm1": jnp.zeros((D,), dtype)}
+    if kind == "attn":
+        p["mix"] = (mla_mod.init_mla(k1, cfg, dtype) if cfg.attention_kind == "mla"
+                    else attention.init_attention(k1, cfg, dtype))
+    elif kind == "rglru":
+        p["mix"] = rglru.init_rglru(k1, cfg, dtype)
+    elif kind == "ssm":
+        p["mix"] = mamba.init_mamba(k1, cfg, dtype)
+        return p                                        # mamba block has no FFN
+    else:
+        raise ValueError(kind)
+    p["norm2"] = jnp.zeros((D,), dtype)
+    p["ffn"] = moe.init_moe(k2, cfg, dtype) if is_moe else \
+        layers.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _zero_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _block_seq(params, cfg, sig, x, positions, collect_cache: bool):
+    """One block over a full sequence. Returns (x, aux, cache_rows_or_{})."""
+    kind, is_moe = sig
+    aux = _zero_aux()
+    cache = {}
+    h = layers.rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        fn = mla_mod.mla_train if cfg.attention_kind == "mla" else attention.attention_train
+        if collect_cache:
+            mixed, cache = fn(params["mix"], cfg, h, positions, return_cache=True)
+        else:
+            mixed = fn(params["mix"], cfg, h, positions)
+    elif kind == "rglru":
+        if collect_cache:
+            mixed, cache = rglru.rglru_seq(params["mix"], cfg, h, return_state=True)
+        else:
+            mixed = rglru.rglru_seq(params["mix"], cfg, h)
+    else:  # ssm
+        if collect_cache:
+            mixed, cache = mamba.mamba_seq(params["mix"], cfg, h, return_state=True)
+        else:
+            mixed = mamba.mamba_seq(params["mix"], cfg, h)
+    x = x + mixed
+    if kind == "ssm":
+        return x, aux, cache
+    h2 = layers.rms_norm(x, params["norm2"], cfg.norm_eps)
+    if is_moe:
+        f, aux = moe.moe_ffn(params["ffn"], cfg, h2)
+    else:
+        f = layers.mlp(params["ffn"], h2)
+    return x + f, aux, cache
+
+
+def _block_decode(params, cfg, sig, x, cache, pos, mode):
+    """One block, one token. x: [B,D]. Returns (x, new_cache)."""
+    kind, is_moe = sig
+    h = layers.rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            mixed, cache = mla_mod.mla_decode(params["mix"], cfg, h, cache, pos, mode=mode)
+        else:
+            mixed, cache = attention.attention_decode(params["mix"], cfg, h, cache,
+                                                      pos, mode=mode)
+    elif kind == "rglru":
+        mixed, cache = rglru.rglru_decode(params["mix"], cfg, h, cache)
+    else:
+        mixed, cache = mamba.mamba_decode(params["mix"], cfg, h, cache)
+    x = x + mixed
+    if kind == "ssm":
+        return x, cache
+    h2 = layers.rms_norm(x, params["norm2"], cfg.norm_eps)
+    if is_moe:
+        # serving: one group of B tokens, dropless routing
+        f, _ = moe.moe_ffn(params["ffn"], cfg, h2[None], dropless=True)
+        f = f[0]
+    else:
+        f = layers.mlp(params["ffn"], h2)
+    return x + f, cache
+
+
+def _init_block_cache(cfg, sig, batch: int, max_len: int, dtype):
+    kind, _ = sig
+    if kind == "attn":
+        if cfg.attention_kind == "mla":
+            return mla_mod.init_mla_cache(cfg, batch, max_len, dtype)
+        return attention.init_attention_cache(cfg, batch, max_len, dtype)
+    if kind == "rglru":
+        return rglru.init_rglru_cache(cfg, batch, dtype)
+    return mamba.init_mamba_cache(cfg, batch, dtype)
+
+
+# ------------------------------------------------------------------- model
+def init(rng, cfg):
+    dtype = cfg.jax_dtype
+    groups = layer_groups(cfg)
+    keys = jax.random.split(rng, len(groups) + 2)
+    params: dict = {
+        "embed": layers.init_embed(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    fe = frontend.init_frontend(keys[1], cfg, dtype)
+    if fe is not None:
+        params["frontend"] = fe
+    gp = []
+    for g, key in zip(groups, keys[2:]):
+        gkeys = jax.random.split(key, g["n"])
+        def one(k):
+            ks = jax.random.split(k, len(g["sigs"]))
+            return {f"b{j}": _init_block(ks[j], cfg, s, dtype)
+                    for j, s in enumerate(g["sigs"])}
+        gp.append(jax.vmap(one)(gkeys))
+    params["groups"] = gp
+    return params
+
+
+def _embed_inputs(params, cfg, batch):
+    if "embeds" in batch:
+        return frontend.apply_frontend(params["frontend"], batch["embeds"])
+    return layers.embed(params["embed"], batch["tokens"])
+
+
+def forward(params, cfg, batch, *, collect_cache: bool = False):
+    """batch: {"tokens": [B,S]} or {"embeds": [B,S,Df], "targets": [B,S]}.
+    Returns (logits [B,S,V], aux, cache or None)."""
+    x = _embed_inputs(params, cfg, batch)
+    # activations ride the batch axes; d_model replicated between blocks
+    x = constrain(x, P(BATCH, None, None))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    groups = layer_groups(cfg)
+    aux_total = _zero_aux()
+    caches = []
+
+    for g, gparams in zip(groups, params["groups"]):
+        def body(carry, xs):
+            x, aux = carry
+            lp = xs
+            crows = {}
+            for j, sig in enumerate(g["sigs"]):
+                fn = _block_seq
+                if cfg.remat:
+                    fn = jax.checkpoint(fn, static_argnums=(1, 2, 5))
+                x, a, c = fn(lp[f"b{j}"], cfg, sig, x, positions, collect_cache)
+                # sequence parallelism: the residual stream (and hence the
+                # per-layer remat residuals) is S-sharded over `model`.
+                # Attention-free stacks (mamba) keep d_inner on `model`
+                # instead — alternating layouts would round-trip the
+                # activations through collectives every layer (§Perf M3).
+                if cfg.attention_kind != "none":
+                    x = constrain(x, P(BATCH, "model", None))
+                else:
+                    x = constrain(x, P(BATCH, None, None))
+                crows[f"b{j}"] = c
+                aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+            return (x, aux), crows
+
+        (x, aux_total), gc = jax.lax.scan(body, (x, aux_total), gparams)
+        caches.append(gc)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = constrain(layers.unembed(params["embed"], x),
+                       P(BATCH, None, "model"))   # vocab-sharded logits
+    return logits, aux_total, (caches if collect_cache else None)
+
+
+def loss_fn(params, cfg, batch):
+    """Next-token cross-entropy (+ MoE aux). Returns (loss, metrics)."""
+    logits, aux, _ = forward(params, cfg, batch)
+    targets = batch.get("targets", batch.get("tokens"))
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = targets[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    total = loss + 0.01 * aux["load_balance"] + 0.001 * aux["router_z"]
+    return total, {"nll": loss, **aux}
+
+
+# ----------------------------------------------------------------- serving
+def init_cache(cfg, batch: int, max_len: int):
+    dtype = cfg.jax_dtype
+    groups = layer_groups(cfg)
+
+    def stack(leaf_fn, n):
+        one = leaf_fn()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    return [
+        {f"b{j}": stack(lambda s=s: _init_block_cache(cfg, s, batch, max_len, dtype),
+                        g["n"])
+         for j, s in enumerate(g["sigs"])}
+        for g in groups
+    ]
+
+
+def _pad_cache_rows(cfg, sig, cache_rows, max_len, batch_s):
+    """Pad per-layer prefill cache rows out to the serving cache layout."""
+    kind, _ = sig
+    if kind in ("rglru", "ssm"):
+        return cache_rows
+    if cfg.attention_kind == "mla":
+        c = cache_rows["c"]
+        pad = max_len - c.shape[1]
+        return {"c": jnp.pad(c, ((0, 0), (0, pad), (0, 0)))}
+    n = min(max_len, cfg.window_size) if cfg.attention_kind == "local" else max_len
+    out = {}
+    for key in ("k", "v"):
+        rows = cache_rows[key]                          # [B,S,K,hd]
+        S = rows.shape[1]
+        if cfg.attention_kind == "local" and S > n:
+            rows = rows[:, -n:]
+        pad = n - rows.shape[1]
+        out[key] = jnp.pad(rows, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out
+
+
+def prefill(params, cfg, batch, max_len: int):
+    """Run the prompt, build the serving cache. Returns (last_logits, cache, pos)."""
+    logits, _, caches = forward(params, cfg, batch, collect_cache=True)
+    S = logits.shape[1]
+    groups = layer_groups(cfg)
+    padded = []
+    for g, gc in zip(groups, caches):
+        padded.append({f"b{j}": jax.vmap(
+            lambda rows, s=s: _pad_cache_rows(cfg, s, rows, max_len, S))(gc[f"b{j}"])
+            for j, s in enumerate(g["sigs"])})
+    return logits[:, -1, :], padded, S
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, mode: str = "etap"):
+    """One serving step. tokens: [B] int32; pos: scalar index of the new token.
+    Returns (logits [B,V], new_cache)."""
+    x = constrain(layers.embed(params["embed"], tokens), P(BATCH, None))
+    groups = layer_groups(cfg)
+    new_caches = []
+    for g, gparams, gcache in zip(groups, params["groups"], cache):
+        def body(x, xs):
+            lp, lc = xs
+            ncs = {}
+            for j, sig in enumerate(g["sigs"]):
+                x, nc = _block_decode(lp[f"b{j}"], cfg, sig, x, lc[f"b{j}"], pos, mode)
+                ncs[f"b{j}"] = nc
+            return x, ncs
+        x, gc_new = jax.lax.scan(body, x, (gparams, gcache))
+        new_caches.append(gc_new)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x)
+    return logits, new_caches
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN with sort-based top-k dispatch.
+
+Instead of the GShard one-hot dispatch tensor [G,S,E,C] (O(tokens·E·C) — TBs
+at our shapes), token→slot assignment is computed with a stable argsort over
+expert ids (O(tokens·k)), then experts are fed via *batched local gathers*:
+
+    x [G,S,D] (G sharded on data)  --gather-->  xe [G,E,C,D]
+    xe resharded G->E via with_sharding_constraint (GSPMD emits all-to-all)
+    expert FFN einsum with weights [E(model),D,F]  (expert parallelism)
+    ye resharded E->G (all-to-all back), combine via local gather + gate sum
+
+Capacity semantics match GShard: per group, each expert takes at most C
+tokens, earlier (token, choice) pairs win (stable sort), overflow is dropped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.sharding.rules import constrain
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    D = cfg.d_model
+    F = m.d_ff_expert or cfg.d_ff
+    E = m.num_experts
+    ks = jax.random.split(key, 5)
+    std = D ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * std).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * std).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * std).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32) * (F ** -0.5)).astype(dtype),
+    }
+    if m.shared_expert:
+        p["shared"] = layers.init_mlp(ks[4], D, F, dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    m = cfg.moe
+    c = int(m.top_k * tokens_per_group * m.capacity_factor / m.num_experts)
+    return max(4, -(-c // 4) * 4)   # >=4, rounded up to a multiple of 4
+
+
+def _assign_slots(idx_k, E: int, C: int):
+    """idx_k: [G, S, k] expert choices. Returns
+    slot_of_choice [G, S*k] in [0, E*C] (E*C = dropped) and
+    token_of_slot [G, E*C] in [0, S*k] (S*k = empty slot sentinel)."""
+    G, S, k = idx_k.shape
+    T = S * k
+    flat_e = idx_k.reshape(G, T)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)           # [G,T]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # position within expert, in sorted order: i - first index of this expert
+    ar = jnp.arange(T, dtype=jnp.int32)
+    change = jnp.concatenate(
+        [jnp.ones((G, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=-1)
+    first = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(change, ar[None, :], 0), axis=-1)
+    pos_sorted = ar[None, :] - first                            # [G,T]
+    # back to (token, choice) order
+    pos = jnp.zeros_like(pos_sorted).at[
+        jnp.arange(G)[:, None], order].set(pos_sorted)
+    dropped = pos >= C
+    slot = jnp.where(dropped, E * C, flat_e * C + jnp.minimum(pos, C - 1))
+    # invert: token index feeding each expert slot (S = empty-slot sentinel);
+    # dropped pairs write into bucket E*C, sliced off below.
+    token_of_slot = jnp.full((G, E * C + 1), S, jnp.int32).at[
+        jnp.arange(G)[:, None], slot].set(ar[None, :] // k)
+    return slot.astype(jnp.int32), token_of_slot[:, : E * C]
+
+
+def moe_ffn(params, cfg, x, *, dropless: bool = False):
+    """x: [G,S,D] -> (out [G,S,D], aux losses). G rides the data axis; the
+    expert dimension rides the model axis (expert parallelism).
+    dropless=True (serving): capacity = S, nothing dropped."""
+    m = cfg.moe
+    G, S, D = x.shape
+    E, k = m.num_experts, m.top_k
+    if dropless:
+        # serving: bounded-overflow capacity — 4x the balanced per-expert
+        # load. C = S would be truly dropless but makes every expert
+        # process up to ALL tokens (E/topk-fold FLOPs waste) and forces an
+        # E*C*D-sized combine gather (§Perf iteration D2).
+        C = min(S, max(k, 4 * -(-k * S // E)))
+    else:
+        C = min(_capacity(S, cfg), max(4, S))
+    T = S * k
+
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), params["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(gates, k)                     # [G,S,k]
+
+    slot, token_of_slot = _assign_slots(idx_k, E, C)            # [G,T],[G,E*C]
+    # gather expert inputs (sentinel token S -> zero row)
+    xpad = jnp.concatenate([x, jnp.zeros((G, 1, D), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(xpad, token_of_slot[..., None], axis=1)
+    xe = xe.reshape(G, E, C, D)
+    # reshard G->E sharded (GSPMD all-to-all) for expert parallelism.
+    # Serving (dropless) uses the EP-over-data layout matching the serve
+    # weight profile; training EP rides the model axis.
+    xe = constrain(xe, P(None, "data" if dropless else "model", None, None))
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])      # [G,E,C,D]
+    ye = constrain(ye, P(("pod", "data"), None, None, None))
+
+    # combine: per (token, choice) gather its slot's output, weight by gate
+    ypad = jnp.concatenate([ye.reshape(G, E * C, D),
+                            jnp.zeros((G, 1, D), ye.dtype)], axis=1)
+    yk = jnp.take_along_axis(ypad, slot[..., None], axis=1)     # [G,T,D]
+    yk = yk.reshape(G, S, k, D)
+    out = jnp.sum(yk.astype(jnp.float32) * gate_k[..., None], axis=2).astype(x.dtype)
+
+    if m.shared_expert:
+        out = out + layers.mlp(params["shared"], x)
+
+    # load-balance + router-z losses (Switch/ST-MoE)
+    me = jnp.mean(gates, axis=(0, 1))                           # [E]
+    assign = jnp.zeros((E,), jnp.float32).at[idx_k.reshape(-1)].add(1.0) / (G * S * k)
+    aux = {
+        "load_balance": E * jnp.sum(me * assign),
+        "router_z": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+    }
+    return out, aux

@@ -1,0 +1,89 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin): conv1d + gated linear
+recurrence. Sequence form uses an associative scan (log-depth on TPU);
+decode is a single-step state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0          # RG-LRU decay sharpness constant (Griffin)
+_MAX_LOG_A = -8.0 # softplus(lambda) init spread
+
+
+def init_rglru(key, cfg, dtype):
+    D = cfg.d_model
+    W = cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": layers.init_dense(ks[0], D, W, dtype),        # recurrence branch
+        "w_gate": layers.init_dense(ks[1], D, W, dtype),     # GeLU gate branch
+        "conv_w": (jax.random.normal(ks[2], (4, W), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "w_a": layers.init_dense(ks[3], W, W, dtype),        # recurrence gate r_t
+        "w_i": layers.init_dense(ks[4], W, W, dtype),        # input gate i_t
+        # Λ parametrized so a = exp(-c·softplus(Λ)·r) starts near 1
+        "log_lambda": jnp.linspace(0.3, 0.9, W, dtype=jnp.float32),
+        "w_out": layers.init_dense(ks[5], W, D, dtype),
+    }
+
+
+def _gates(params, xw):
+    """xw: [..., W] post-conv activations -> (a, bx) of the recurrence
+    h = a * h_prev + bx with b = sqrt(1-a^2) * i_t * x."""
+    r = jax.nn.sigmoid(layers.dense(xw, params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(xw, params["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["log_lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, b * i * xw.astype(jnp.float32)
+
+
+def _conv_seq(params, x):
+    """Causal depthwise conv1d (k=4) over [B,S,W]."""
+    k = params["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * params["conv_w"][i] for i in range(k))
+    return out + params["conv_b"]
+
+
+def rglru_seq(params, cfg, x, *, return_state: bool = False):
+    """x: [B,S,D] -> [B,S,D]; full-sequence recurrent block."""
+    gate = jax.nn.gelu(layers.dense(x, params["w_gate"]))
+    xt = layers.dense(x, params["w_x"])
+    xw = _conv_seq(params, xt)
+    a, bx = _gates(params, xw)                                # [B,S,W] f32
+    # first-order linear recurrence via associative scan over seq axis
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    out = layers.dense(h.astype(x.dtype) * gate, params["w_out"])
+    if not return_state:
+        return out
+    k = params["conv_w"].shape[0]
+    tail = xt[:, -(k - 1):, :] if x.shape[1] >= k - 1 else jnp.pad(
+        xt, ((0, 0), (k - 1 - x.shape[1], 0), (0, 0)))
+    return out, {"h": h[:, -1], "conv": tail}
+
+
+def rglru_decode(params, cfg, x, state):
+    """x: [B,D]; state {"h": [B,W] f32, "conv": [B,k-1,W]} -> (out, state)."""
+    gate = jax.nn.gelu(layers.dense(x, params["w_gate"]))
+    xt = layers.dense(x, params["w_x"])                        # [B,W]
+    k = params["conv_w"].shape[0]
+    window = jnp.concatenate([state["conv"], xt[:, None, :]], axis=1)  # [B,k,W]
+    xw = jnp.einsum("bkw,kw->bw", window, params["conv_w"]) + params["conv_b"]
+    a, bx = _gates(params, xw)
+    h = a * state["h"] + bx
+    out = layers.dense(h.astype(x.dtype) * gate, params["w_out"])
+    return out, {"h": h, "conv": window[:, 1:, :]}
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    W = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, W), jnp.float32),
+            "conv": jnp.zeros((batch, 3, W), dtype)}

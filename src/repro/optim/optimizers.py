@@ -1,0 +1,138 @@
+"""Optimizers: AdamW (configurable moment dtypes for HBM-constrained FSDP)
+and Adafactor (factored second moment — the 400B/671B train cells), plus
+global-norm clipping and a linear-warmup cosine schedule. Pure pytree
+functions; optimizer state shards exactly like params (moments inherit the
+param PartitionSpec; adafactor row/col stats inherit the reduced specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: str = "bfloat16"      # first-moment storage (adamw)
+    v_dtype: str = "bfloat16"      # second-moment storage (adamw)
+    # adafactor
+    min_dim_size_to_factor: int = 128
+
+
+def schedule(cfg: OptimizerConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+# -------------------------------------------------------------------- AdamW
+def adamw_init(cfg: OptimizerConfig, params):
+    mdt, vdt = jnp.dtype(cfg.m_dtype), jnp.dtype(cfg.v_dtype)
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, vdt), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    c = state["count"] + 1
+    lr = schedule(cfg, c)
+    b1c = 1.0 - cfg.b1 ** c.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** c.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        step = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "count": c}
+
+
+# ---------------------------------------------------------------- Adafactor
+def _factored(shape, cfg) -> bool:
+    return len(shape) >= 2 and shape[-1] >= cfg.min_dim_size_to_factor \
+        and shape[-2] >= cfg.min_dim_size_to_factor
+
+
+def adafactor_init(cfg: OptimizerConfig, params):
+    def one(p):
+        if _factored(p.shape, cfg):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(one, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    c = state["count"] + 1
+    lr = schedule(cfg, c)
+    beta2 = 1.0 - c.astype(jnp.float32) ** -0.8
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if "vr" in v:
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None] * vc[..., None, :]
+            step = g * jax.lax.rsqrt(denom + 1e-30)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": beta2 * v["v"] + (1 - beta2) * g2}
+            step = g * jax.lax.rsqrt(nv["v"] + 1e-30)
+        # update clipping (Adafactor d=1.0)
+        rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-30)
+        step = step / jnp.maximum(1.0, rms)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), nv
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_v = treedef.unflatten([o[1] for o in outs])
+    return new_p, {"v": new_v, "count": c}
+
+
+# ------------------------------------------------------------------ facade
+def opt_init(cfg: OptimizerConfig, params):
+    return adafactor_init(cfg, params) if cfg.name == "adafactor" \
+        else adamw_init(cfg, params)
+
+
+def opt_update(cfg: OptimizerConfig, grads, state, params):
+    if cfg.name == "adafactor":
+        return adafactor_update(cfg, grads, state, params)
+    return adamw_update(cfg, grads, state, params)

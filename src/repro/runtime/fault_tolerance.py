@@ -1,0 +1,92 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, failure
+injection and the restartable training driver pieces.
+
+On a real multi-pod deployment these run per-host against a coordination
+service; here the same logic runs in-process (single-host container) and is
+exercised by tests/test_runtime.py — the *state machines* are what matters:
+  · HeartbeatRegistry: workers check in; silence > timeout => failure
+  · StragglerDetector: per-host step-time z-score (robust MAD) => slow host
+  · FailureInjector  : deterministic fault schedule for drills
+  · plan_remesh      : failed hosts => next viable (data, model) mesh shape
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class HeartbeatRegistry:
+    def __init__(self, timeout_s: float = 30.0, clock=time.monotonic):
+        self.timeout_s = timeout_s
+        self._clock = clock
+        self._last: Dict[str, float] = {}
+
+    def beat(self, worker: str):
+        self._last[worker] = self._clock()
+
+    def alive(self) -> List[str]:
+        now = self._clock()
+        return [w for w, t in self._last.items() if now - t <= self.timeout_s]
+
+    def dead(self) -> List[str]:
+        now = self._clock()
+        return [w for w, t in self._last.items() if now - t > self.timeout_s]
+
+
+class StragglerDetector:
+    """Flags hosts whose step time exceeds median + z·MAD over a window."""
+
+    def __init__(self, window: int = 16, z: float = 4.0):
+        self.window = window
+        self.z = z
+        self._times: Dict[str, List[float]] = {}
+
+    def record(self, worker: str, step_time_s: float):
+        buf = self._times.setdefault(worker, [])
+        buf.append(step_time_s)
+        if len(buf) > self.window:
+            buf.pop(0)
+
+    def stragglers(self) -> List[str]:
+        if len(self._times) < 2:
+            return []
+        med_per = {w: float(np.median(t)) for w, t in self._times.items()
+                   if len(t) >= 4}
+        if len(med_per) < 2:
+            return []
+        meds = np.array(list(med_per.values()))
+        med = float(np.median(meds))
+        mad = float(np.median(np.abs(meds - med))) + 1e-9
+        return [w for w, m in med_per.items() if (m - med) / (1.4826 * mad) > self.z]
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic fault schedule: raise WorkerFailure at given steps."""
+    fail_at_steps: Sequence[int] = field(default_factory=tuple)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps:
+            raise WorkerFailure(f"injected failure at step {step}")
+
+
+class WorkerFailure(RuntimeError):
+    pass
+
+
+def plan_remesh(n_alive_hosts: int, chips_per_host: int,
+                model_parallel: int) -> Optional[tuple]:
+    """Largest (data, model) mesh that fits the surviving chips with the
+    required model-parallel degree; None if impossible. Elastic scale-down
+    keeps TP intact and shrinks the data axis (checkpoint reshard-on-load
+    handles the rest — see checkpoint.restore)."""
+    chips = n_alive_hosts * chips_per_host
+    if chips < model_parallel:
+        return None
+    data = chips // model_parallel
+    # power-of-two data axis keeps batch divisibility predictable
+    data = 1 << (data.bit_length() - 1)
+    return (data, model_parallel)

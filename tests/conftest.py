@@ -1,0 +1,7 @@
+# NOTE: deliberately empty of XLA device-count flags — smoke tests and
+# benches must see the host's real (single) device; only launch/dryrun.py
+# and explicit subprocess tests request 512/8 fake devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,121 @@
+"""The trip-count-aware HLO analyzer (launch/hlo_analysis.py) must agree
+with hand-computable workloads — it is the source of the roofline terms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_module
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_matmul_flops():
+    def f(x, w):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=10)[0]
+    x = jnp.zeros((128, 128))
+    r = analyze(_hlo(f, x, x))
+    expect = 10 * 2 * 128 ** 3
+    assert 0.95 < r["flops"] / expect < 1.15
+
+
+def test_nested_scan_flops():
+    def f(x, w):
+        def outer(c, _):
+            return jax.lax.scan(lambda c2, _: (c2 @ w, None), c, None,
+                                length=5)[0], None
+        return jax.lax.scan(outer, x, None, length=4)[0]
+    x = jnp.zeros((128, 128))
+    r = analyze(_hlo(f, x, x))
+    expect = 20 * 2 * 128 ** 3
+    assert 0.95 < r["flops"] / expect < 1.15
+
+
+def test_fori_loop_flops():
+    def f(x, w):
+        return jax.lax.fori_loop(0, 7, lambda i, c: c @ w, x)
+    x = jnp.zeros((128, 128))
+    r = analyze(_hlo(f, x, x))
+    assert 0.95 < r["flops"] / (7 * 2 * 128 ** 3) < 1.15
+
+
+def test_dynamic_slice_counts_slice_not_base():
+    """Streaming a big buffer block-by-block must count ~the buffer size,
+    not O(n_blocks · buffer)."""
+    big = jnp.zeros((64, 4096))          # 1 MiB f32
+
+    def f(k):
+        def step(j, acc):
+            blk = jax.lax.dynamic_slice_in_dim(k, j * 8, 8, axis=0)
+            return acc + jnp.sum(blk * 2.0)
+        return jax.lax.fori_loop(0, 8, step, 0.0)
+    r = analyze(_hlo(f, big))
+    base = big.size * 4
+    assert r["bytes"] < 6 * base, (r["bytes"], base)   # not 8x+ the buffer
+
+
+def test_parse_module_handles_tuple_types_with_index_comments():
+    txt = """
+HloModule m
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %d = f32[4,4]{1,0} dot(%g1, %g1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4,4]{1,0}) tuple(%g0, %d)
+}
+%cond (p2: (s32[], f32[4,4])) -> pred[] {
+  %p2 = (s32[], f32[4,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+  %x = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[4,4]{1,0}) tuple(%z, %x)
+  %w = (s32[], /*index=1*/f32[4,4]{1,0}) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    comps = parse_module(txt)
+    whiles = [i for c in comps.values() for i in c.instrs if i.op == "while"]
+    assert len(whiles) >= 1
+    r = analyze(txt)
+    assert r["flops"] == pytest.approx(12 * 2 * 4 ** 3, rel=0.01)
+
+
+def test_collective_bytes_trip_multiplied():
+    txt = """
+HloModule m
+%body (p: (s32[], f32[256])) -> (s32[], f32[256]) {
+  %p = (s32[], f32[256]{0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[256]{0} get-tuple-element(%p), index=1
+  %ar = f32[256]{0} all-reduce(%g1), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[256]{0}) tuple(%g0, %ar)
+}
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+%cond (p2: (s32[], f32[256])) -> pred[] {
+  %p2 = (s32[], f32[256]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+ENTRY %main (x: f32[256]) -> f32[256] {
+  %x = f32[256]{0} parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[256]{0}) tuple(%z, %x)
+  %w = (s32[], f32[256]{0}) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[256]{0} get-tuple-element(%w), index=1
+}
+"""
+    r = analyze(txt)
+    assert r["collective_bytes"] == 5 * 256 * 4
+    assert r["collective_by_kind"] == {"all-reduce": 5 * 256 * 4}
