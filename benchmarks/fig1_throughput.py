@@ -16,6 +16,7 @@ Usage: PYTHONPATH=src python -m benchmarks.fig1_throughput [--full]
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -71,11 +72,73 @@ def run(full: bool = False, block: int = 512):
     return rows
 
 
+def run_splitkv(full: bool = False, block: int = 512,
+                splits=(1, 2, 4, 8)):
+    """Split-KV sweep: two-phase ETAP decode (XLA split path — the same
+    partial/combine math the Pallas kernels run) across split counts, at the
+    small-batch × long-context geometry the tile scheduler targets. Each row
+    also records what the auto-scheduler would pick and the modeled TPU
+    roofline time for that split count."""
+    from repro.core.etap import etap_decode_splitkv_xla
+    from repro.kernels.etap.schedule import plan_splits
+    from repro.launch.roofline import splitkv_roofline
+
+    seqs = [4096, 16384, 32768] if full else [2048, 8192]
+    batches = [1, 8] if full else [1, 4]
+    rng = np.random.default_rng(0)
+    rows = []
+    for bs in batches:
+        for s in seqs:
+            q = jnp.asarray(rng.normal(size=(bs, HEADS, DIM)), jnp.float32)
+            kv = jnp.asarray(rng.normal(size=(bs, s, DIM)), jnp.float32)
+            v = kv[..., :DV]
+            auto = plan_splits(bs, s, HEADS, DV, block=block).n_splits
+            for n in splits:
+                fn = jax.jit(functools.partial(
+                    etap_decode_splitkv_xla, scale=DIM ** -0.5,
+                    block=block, n_splits=n))
+                t = bench(lambda q, k, v, l, **_: fn(q, k, v, l), q, kv, v,
+                          block)
+                fl = attention_flops(bs, s)
+                # mla_fused=False: the measured XLA path streams separate
+                # K and V arrays, so the model must account Dk+Dv bytes.
+                rl = splitkv_roofline(bs, s, HEADS, DIM, DV, n,
+                                      mla_fused=False)
+                rows.append(dict(
+                    batch=bs, seq=s, n_splits=n, us=t * 1e6,
+                    gflops=fl / t / 1e9, auto_n_splits=auto,
+                    roofline_t_total_us=rl["t_total"] * 1e6,
+                    roofline_overhead=rl["overhead"],
+                    roofline_occupancy=rl["occupancy"]))
+    return rows
+
+
+def write_splitkv_json(rows, path: str = "BENCH_splitkv.json"):
+    import json
+    with open(path, "w") as f:
+        json.dump({"geometry": {"heads": HEADS, "dim": DIM, "dv": DV},
+                   "rows": rows}, f, indent=2)
+    return path
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper's full sweep (512…64K, bs 16+32)")
+    ap.add_argument("--kv-splits", action="store_true",
+                    help="run the split-KV sweep and write BENCH_splitkv.json")
     args = ap.parse_args()
+    if args.kv_splits:
+        rows = run_splitkv(full=args.full)
+        path = write_splitkv_json(rows)
+        print(f"{'bs':>4} {'seq':>7} {'splits':>6} {'us':>12} {'GF/s':>10} "
+              f"{'auto':>5} {'model us':>10}")
+        for r in rows:
+            print(f"{r['batch']:>4} {r['seq']:>7} {r['n_splits']:>6} "
+                  f"{r['us']:>12.0f} {r['gflops']:>10.2f} "
+                  f"{r['auto_n_splits']:>5} {r['roofline_t_total_us']:>10.1f}")
+        print(f"wrote {path}")
+        return rows
     rows = run(full=args.full)
     print(f"{'bs':>4} {'seq':>7} {'ETAP us':>12} {'std us':>12} "
           f"{'ETAP GF/s':>10} {'std GF/s':>10} {'speedup':>8}")

@@ -1,8 +1,10 @@
 """Benchmark harness entry point — one function per paper artifact.
 Prints ``name,us_per_call,derived`` CSV rows (derived = the artifact's
-headline metric)."""
+headline metric).  ``--kv-splits`` runs the split-KV decode sweep instead
+and records per-split-count results to BENCH_splitkv.json."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -88,9 +90,32 @@ def bench_serving_e2e():
     return out
 
 
-def main() -> None:
-    benches = [bench_table1_rmse, bench_kernels_interpret,
-               bench_serving_e2e, bench_fig1_throughput]
+def bench_splitkv(full: bool = False):
+    """Split-KV ETAP decode sweep → CSV rows + BENCH_splitkv.json."""
+    from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
+    rows = run_splitkv(full=full)
+    path = write_splitkv_json(rows)
+    out = []
+    for r in rows:
+        out.append((f"splitkv/bs{r['batch']}/s{r['seq']}/n{r['n_splits']}",
+                    r["us"],
+                    f"{r['gflops']:.2f}GF/s;auto={r['auto_n_splits']};"
+                    f"model={r['roofline_t_total_us']:.1f}us"))
+    out.append(("splitkv/json", 0.0, path))
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kv-splits", action="store_true",
+                    help="run the split-KV decode sweep and write "
+                         "BENCH_splitkv.json")
+    ap.add_argument("--full", action="store_true",
+                    help="wider sweep geometry")
+    args = ap.parse_args(argv)
+    benches = [lambda: bench_splitkv(full=args.full)] if args.kv_splits else \
+        [bench_table1_rmse, bench_kernels_interpret,
+         bench_serving_e2e, bench_fig1_throughput]
     print("name,us_per_call,derived")
     for b in benches:
         for name, us, derived in b():

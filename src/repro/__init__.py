@@ -1,0 +1,10 @@
+"""repro — FlashMLA-ETAP reproduction package.
+
+Importing the package installs the JAX version-compat shims (see
+``repro.compat``): tests and launch scripts written against the newer mesh
+APIs (``jax.set_mesh``, ``jax.sharding.AxisType``, ...) then run unmodified
+on older installed JAX.
+"""
+from repro import compat as _compat
+
+_compat.install()

@@ -1,0 +1,170 @@
+"""Version-tolerant JAX API shims.
+
+The codebase is written against the newer mesh-context APIs — ``jax.set_mesh``
+/ ``jax.sharding.get_abstract_mesh`` / ``jax.shard_map(..., axis_names=...,
+check_vma=...)`` / ``jax.lax.pvary`` — which older installed JAX (0.4.x) does
+not expose.  This module maps each of them onto the closest older-API
+equivalent (the thread-resources mesh context, ``jax.experimental.shard_map``
+with ``auto=``, a no-op ``pvary``), and :func:`install` backfills the handful
+of public names that tests and launch scripts call directly on the ``jax``
+module, so one tree runs unmodified on either JAX generation.
+
+Everything here is a *lookup-then-fallback*: when the modern API exists it is
+used verbatim, so upgrading JAX changes nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+
+
+# ----------------------------------------------------------- mesh discovery
+def get_mesh():
+    """The mesh of the current mesh context, or None when no mesh is active.
+
+    New JAX: ``jax.sharding.get_abstract_mesh()`` (set by ``jax.set_mesh``).
+    Old JAX: the thread-resources physical mesh (set by ``with mesh:``).
+    Both sources are checked on every call so either entry style works.
+    """
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        try:
+            m = get_am()
+        except Exception:  # pragma: no cover - defensive
+            m = None
+        if m is not None and getattr(m, "axis_names", ()):
+            return m
+    try:
+        from jax._src import mesh as _mesh_lib
+    except ImportError:  # pragma: no cover
+        return None
+    am_fn = getattr(_mesh_lib, "get_abstract_mesh", None)
+    if am_fn is not None:
+        m = am_fn()
+        if getattr(m, "axis_names", ()):
+            return m
+    tr = getattr(_mesh_lib, "thread_resources", None)
+    if tr is not None:
+        pm = tr.env.physical_mesh
+        if not pm.empty:
+            return pm
+    return None
+
+
+def concrete_mesh():
+    """Like :func:`get_mesh` but preferring a concrete (device-backed) Mesh —
+    what old-JAX shard_map needs as its ``mesh=`` argument."""
+    try:
+        from jax._src import mesh as _mesh_lib
+        pm = _mesh_lib.thread_resources.env.physical_mesh
+        if not pm.empty:
+            return pm
+    except Exception:  # pragma: no cover
+        pass
+    get_cm = getattr(jax.sharding, "get_concrete_mesh", None)
+    if get_cm is not None:
+        try:
+            m = get_cm()
+            if m is not None and getattr(m, "axis_names", ()):
+                return m
+        except Exception:  # pragma: no cover
+            pass
+    return get_mesh()
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.set_mesh`` when available, else the legacy ``with mesh:``
+    thread-resources context (which :func:`get_mesh` also understands)."""
+    native = getattr(jax, "set_mesh", None)
+    if native is not None and native is not set_mesh:
+        with native(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+class AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on older JAX (where every mesh
+    axis is implicitly Auto)."""
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+_native_make_mesh = jax.make_mesh
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` that tolerates the ``axis_types=`` kwarg missing on
+    older JAX (old meshes are Auto-typed already, so dropping it is exact)."""
+    try:
+        return _native_make_mesh(axis_shapes, axis_names, **kwargs)
+    except TypeError:
+        kwargs.pop("axis_types", None)
+        return _native_make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+# --------------------------------------------------------------- shard_map
+def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+              check=False):
+    """``jax.shard_map`` front-end with the modern keyword surface.
+
+    axis_names: the axes the body is *manual* over (others stay automatic).
+    check: maps to ``check_vma`` (new) / ``check_rep`` (old).
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check)
+        if axis_names:
+            kwargs["axis_names"] = set(axis_names)
+        return native(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if mesh is None or not hasattr(mesh, "devices"):
+        cm = concrete_mesh()
+        mesh = cm if cm is not None else mesh
+    auto = frozenset(set(mesh.axis_names) - set(axis_names or mesh.axis_names))
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, auto=auto)
+
+
+def pvary(x, axis_name):
+    """``jax.lax.pvary`` (varying-manual-axis marker) — identity on older JAX,
+    which has no VMA tracking."""
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axis_name) if fn is not None else x
+
+
+# ------------------------------------------------------------------ pallas
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new name) / ``pltpu.TPUCompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+# ----------------------------------------------------------------- install
+def install():
+    """Backfill missing public ``jax`` names used directly by tests/scripts.
+
+    Only ever *adds* attributes that the installed JAX lacks — on a modern
+    JAX this is a no-op, so behaviour never diverges from upstream.
+    """
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = get_mesh
+    try:
+        import inspect
+        if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+            jax.make_mesh = make_mesh
+    except (TypeError, ValueError):  # pragma: no cover
+        pass

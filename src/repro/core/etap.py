@@ -27,6 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -155,7 +157,7 @@ def etap_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
             jnp.zeros((BG, H), jnp.float32),
             jnp.zeros((BG, Dv, H), jnp.float32))
     if vary_axis is not None:
-        init = jax.tree.map(lambda a: jax.lax.pvary(a, vary_axis), init)
+        init = jax.tree.map(lambda a: compat.pvary(a, vary_axis), init)
     return jax.lax.fori_loop(0, nb, step, init)
 
 
@@ -168,6 +170,40 @@ def combine_partials(m, l, accT):
     acc_g = jnp.sum(accT * w[:, :, None, :], axis=0)          # [BG,Dv,H]
     oT = acc_g / l_g[:, None, :]
     return jnp.swapaxes(oT, 1, 2)
+
+
+def etap_decode_splitkv_xla(q, k, v, length=None, *, scale: float,
+                            block: int = 512, n_splits: int = 2):
+    """Two-phase split-KV ETAP decode in pure XLA (DESIGN.md §3).
+
+    The KV context is cut into n_splits contiguous segments; each segment's
+    (m, l, accT) partial stats come from a vmapped :func:`etap_partial_xla`
+    (XLA parallelizes across segments — the same shape the Pallas phase-1
+    kernel gives the TPU grid), merged by :func:`combine_partials`. A fully
+    masked segment carries m = NEG_INF and drops out of the merge with
+    weight exp(NEG_INF - m*) = 0."""
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[2]
+    if length is None:
+        length = jnp.full((BG,), S, jnp.int32)
+    if n_splits <= 1:
+        return etap_decode_xla(q, k, v, length, scale=scale, block=block)
+    from repro.kernels.etap.schedule import split_geometry
+    block, npb, padded_s = split_geometry(S, block, n_splits)
+    seg = npb * block
+    pad = padded_s - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    ks = jnp.moveaxis(k.reshape(BG, n_splits, seg, Dk), 1, 0)  # [n,BG,seg,Dk]
+    vs = jnp.moveaxis(v.reshape(BG, n_splits, seg, Dv), 1, 0)
+    starts = jnp.arange(n_splits, dtype=jnp.int32)[:, None] * seg
+    seg_len = jnp.clip(length[None, :] - starts, 0, seg)       # [n,BG]
+    m, l, accT = jax.vmap(
+        lambda kk, vv, ll: etap_partial_xla(q, kk, vv, ll, scale=scale,
+                                            block=block))(ks, vs, seg_len)
+    return combine_partials(m, l, accT).astype(v.dtype)
 
 
 def seq_sharded_decode(q, cache, new_row, pos, *, dv: int, scale: float,
@@ -183,11 +219,15 @@ def seq_sharded_decode(q, cache, new_row, pos, *, dv: int, scale: float,
     Returns (O [B,H,dv], updated cache)."""
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_mesh()
 
-    def local(q, cache, new_row, pos):
-        n = jax.lax.axis_size(axis)
-        idx = jax.lax.axis_index(axis)
+    # shard ids ride in as an axis-sharded operand instead of
+    # jax.lax.axis_index: the latter lowers to partition-id, which SPMD
+    # can't place inside a partially-auto manual region on older JAX.
+    shard_ids = jnp.arange(mesh.shape[axis], dtype=jnp.int32)
+
+    def local(q, cache, new_row, pos, sid):
+        idx = sid[0]
         S_local = cache.shape[1]
         start = idx * S_local
         slot = jnp.clip(pos - start, 0, S_local - 1)
@@ -214,28 +254,48 @@ def seq_sharded_decode(q, cache, new_row, pos, *, dv: int, scale: float,
 
     # manual ONLY over the model axis: batch (pod/data) sharding of q/cache
     # keeps propagating automatically outside the manual region.
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh, axis_names={axis},
-        in_specs=(P(), P(None, axis, None), P(), P()),
+        in_specs=(P(), P(None, axis, None), P(), P(), P(axis)),
         out_specs=(P(), P(None, axis, None)),
-        check_vma=False,
-    )(q, cache, new_row, pos)
+        check=False,
+    )(q, cache, new_row, pos, shard_ids)
 
 
 def decode_attention(q, k, v, length=None, *, scale: float, mode: str = "etap",
                      block: int = 512, use_kernels: bool = False,
-                     interpret: bool = True):
+                     interpret: bool = True, n_splits=None):
     """Unified decode attention entry point.
 
     mode: "etap" (the paper) or "standard" (FlashMLA-like baseline).
     use_kernels: dispatch to the Pallas implementations (tests/benchmarks run
     them with interpret=True on CPU; on a real TPU interpret=False).
+    n_splits: KV-split count for the two-phase split-KV pipeline.
+    None → auto via kernels.etap.schedule (resolves to 1 at short contexts /
+    large batches, i.e. exactly the old single-pass behaviour) on both the
+    kernel and XLA "etap" paths; 1 → force single-pass. The "standard" XLA
+    loop streams serially regardless — it is the deliberately unsplit
+    baseline.
     """
     if use_kernels:
         from repro.kernels.etap import ops as etap_ops
         from repro.kernels.flash_decode import ops as fd_ops
-        fn = etap_ops.etap_decode if mode == "etap" else fd_ops.flash_decode
-        return fn(q, k, v, length, scale=scale, block=block, interpret=interpret)
+        if mode == "etap":
+            return etap_ops.etap_decode_splitkv(
+                q, k, v, length, scale=scale, block=block,
+                n_splits=int(n_splits or 0), interpret=interpret)
+        return fd_ops.flash_decode_splitkv(
+            q, k, v, length, scale=scale, block=block,
+            n_splits=int(n_splits or 0), interpret=interpret)
+    if mode == "etap":
+        if n_splits is None:
+            from repro.kernels.etap.schedule import plan_splits
+            n_splits = plan_splits(q.shape[0], k.shape[1], q.shape[1],
+                                   v.shape[2], block=block).n_splits
+        if n_splits > 1:
+            return etap_decode_splitkv_xla(q, k, v, length, scale=scale,
+                                           block=block,
+                                           n_splits=int(n_splits))
     fn = etap_decode_xla if mode == "etap" else standard_decode_xla
     return fn(q, k, v, length, scale=scale, block=block)
 
@@ -273,7 +333,7 @@ def gqa_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
             jnp.zeros((B, K, G), jnp.float32),
             jnp.zeros((B, K, Dv, G), jnp.float32))
     if vary_axis is not None:
-        init = jax.tree.map(lambda a: jax.lax.pvary(a, vary_axis), init)
+        init = jax.tree.map(lambda a: compat.pvary(a, vary_axis), init)
     return jax.lax.fori_loop(0, nb, step, init)
 
 
@@ -287,12 +347,14 @@ def seq_sharded_gqa_decode(q, k_cache, v_cache, new_k, new_v, pos, *,
     only the (m, l, accT) stats. q: [B,K,G,hd]; new_k/new_v: [B,K,hd].
     Returns (O [B,K*G,Dv], new k_cache, new v_cache)."""
     from jax.sharding import PartitionSpec as P
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_mesh()
     B, K, G, Dk = q.shape
     Dv = v_cache.shape[3]
 
-    def local(q, kc, vc, nk, nv, pos):
-        idx = jax.lax.axis_index(axis)
+    shard_ids = jnp.arange(mesh.shape[axis], dtype=jnp.int32)  # see above
+
+    def local(q, kc, vc, nk, nv, pos, sid):
+        idx = sid[0]
         S_local = kc.shape[1]
         start = idx * S_local
         slot = jnp.clip(pos - start, 0, S_local - 1)
@@ -317,12 +379,12 @@ def seq_sharded_gqa_decode(q, k_cache, v_cache, new_k, new_v, pos, *,
         return o.reshape(B, K * G, Dv).astype(v_cache.dtype), kc, vc
 
     cspec = P(None, axis, None, None)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh, axis_names={axis},
-        in_specs=(P(), cspec, cspec, P(), P(), P()),
+        in_specs=(P(), cspec, cspec, P(), P(), P(), P(axis)),
         out_specs=(P(), cspec, cspec),
-        check_vma=False,
-    )(q, k_cache, v_cache, new_k, new_v, pos)
+        check=False,
+    )(q, k_cache, v_cache, new_k, new_v, pos, shard_ids)
 
 
 def gqa_decode_xla(q, k, v, length, *, scale: float, mode: str = "etap",

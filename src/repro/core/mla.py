@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.etap import decode_attention, seq_sharded_decode
 from repro.models import layers
 from repro.models.attention import causal_attention
@@ -73,8 +74,10 @@ def mla_train(params, cfg, x, positions, *, return_cache: bool = False):
     return out
 
 
-def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap"):
+def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
+               n_splits=None):
     """Absorbed-form decode. x: [B,D]; cache: {"c": [B,Smax,latent]}.
+    n_splits: split-KV count for the decode kernel (None = auto-scheduled).
 
     q_c[b,h] = q_nope[b,h] · W_uk[:,h]  (512-d), q = [q_c ; q_rope] (576-d)
     scores   = q · cᵀ  — via ETAP as  c · qᵀ  with the context on M.
@@ -94,7 +97,7 @@ def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap"):
     c_t = _latent(params, cfg, x[:, None, :], positions)[:, 0]  # [B,latent]
     scale = m.qk_head_dim ** -0.5
     from repro.sharding.rules import seq_shardable
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_mesh()
     seq_shard = seq_shardable(cache["c"].shape[1], mesh)
     if seq_shard:
         # latent cache is S-sharded over the model axis (no head dim to
@@ -108,7 +111,8 @@ def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap"):
         # Single latent stream: K is the full 576 latent, V its first 512 cols.
         o_lat = decode_attention(q, cache_c, cache_c[..., : m.kv_lora_rank],
                                  length, scale=scale, mode=mode,
-                                 use_kernels=cfg.use_kernels)  # [B,H,512]
+                                 use_kernels=cfg.use_kernels,
+                                 n_splits=n_splits)            # [B,H,512]
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     o = jnp.einsum("bhc,chd->bhd", o_lat.astype(jnp.float32),
                    w_uv.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,92 @@
+"""Split-KV phase 2: merge per-split (m, ℓ, Acc) partial stats into O.
+
+The merge stays in the (m, ℓ, acc) statistic domain (AMLA-style — one
+global rescale per split, never a renormalize-then-renormalize chain):
+
+    m* = max_s m_s            w_s = exp(m_s - m*)
+    ℓ* = Σ_s w_s ℓ_s          Acc* = Σ_s w_s Acc_s
+    O  = epilogue(Acc* / ℓ*)   (transpose for the ETAP orientation)
+
+A fully-masked split carries (m = -1e30, ℓ = 0, Acc = garbage·0-weight);
+its weight w_s = exp(-1e30 - m*) underflows to exactly 0, so it drops out
+of the merge without a branch — the ``ℓ = 0`` edge case costs nothing.
+
+With a single split the weights are exp(0) = 1 and the merge reduces
+bitwise to the single-pass epilogue ``(Acc / ℓ)ᵀ`` — split-KV with
+n_splits=1 is bit-compatible with the one-phase kernels.
+
+Two backends: a Pallas kernel (one grid step per batch-group row) and an
+XLA fallback reusing :func:`repro.core.etap.combine_partials`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import compat
+
+
+def _combine_body(m_ref, l_ref, acc_ref, o_ref, *, transposed: bool):
+    m = m_ref[0]                                       # [n, H]
+    l = l_ref[0]                                       # [n, H]
+    acc = acc_ref[0]                                   # [n,Dv,H] | [n,H,Dv]
+    m_g = jnp.max(m, axis=0, keepdims=True)            # [1, H]
+    w = jnp.exp(m - m_g)                               # [n, H]
+    l_g = jnp.sum(l * w, axis=0, keepdims=True)        # [1, H]
+    if transposed:                                     # ETAP: epilogue (·)ᵀ
+        acc_g = jnp.sum(acc * w[:, None, :], axis=0)   # [Dv, H]
+        o_ref[0] = (acc_g / l_g).T.astype(o_ref.dtype)
+    else:                                              # standard orientation
+        acc_g = jnp.sum(acc * w[:, :, None], axis=0)   # [H, Dv]
+        o_ref[0] = (acc_g / l_g.T).astype(o_ref.dtype)
+
+
+def combine_splits_pallas(m, l, acc, *, transposed: bool, out_dtype,
+                          interpret: bool = True):
+    """m, l: [BG,n,H]; acc: [BG,n,Dv,H] (transposed) or [BG,n,H,Dv].
+    Returns O: [BG,H,Dv]."""
+    BG, n, H = m.shape
+    Dv = acc.shape[2] if transposed else acc.shape[3]
+    acc_blk = (1, n, Dv, H) if transposed else (1, n, H, Dv)
+    return pl.pallas_call(
+        functools.partial(_combine_body, transposed=transposed),
+        grid=(BG,),
+        in_specs=[
+            pl.BlockSpec((1, n, H), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n, H), lambda b: (b, 0, 0)),
+            pl.BlockSpec(acc_blk, lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, Dv), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BG, H, Dv), out_dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(m, l, acc)
+
+
+def combine_splits_xla(m, l, acc, *, transposed: bool, out_dtype):
+    """XLA fallback (identical math; used when the combine kernel is not
+    worth a launch, e.g. under vmap or on non-TPU backends)."""
+    if transposed:
+        from repro.core.etap import combine_partials
+        o = combine_partials(jnp.moveaxis(m, 1, 0), jnp.moveaxis(l, 1, 0),
+                             jnp.moveaxis(acc, 1, 0))
+        return o.astype(out_dtype)
+    m_g = jnp.max(m, axis=1, keepdims=True)            # [BG,1,H]
+    w = jnp.exp(m - m_g)                               # [BG,n,H]
+    l_g = jnp.sum(l * w, axis=1)                       # [BG,H]
+    acc_g = jnp.sum(acc * w[..., None], axis=1)        # [BG,H,Dv]
+    return (acc_g / l_g[..., None]).astype(out_dtype)
+
+
+def combine_splits(m, l, acc, *, transposed: bool, out_dtype,
+                   combine: str = "pallas", interpret: bool = True):
+    """Dispatch phase-2 merge: combine = "pallas" | "xla"."""
+    if combine == "xla":
+        return combine_splits_xla(m, l, acc, transposed=transposed,
+                                  out_dtype=out_dtype)
+    return combine_splits_pallas(m, l, acc, transposed=transposed,
+                                 out_dtype=out_dtype, interpret=interpret)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -106,7 +108,7 @@ def _call(q, k, v, length, *, scale, block, interpret, fused_dv):
         body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((BG, H, Dv), (v if v is not None else k).dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(length.astype(jnp.int32), *operands)
@@ -124,3 +126,119 @@ def etap_decode_mla_pallas(q, kv, dv: int, length, *, scale: float,
     """MLA-fused ETAP: single latent stream, V = kv[..., :dv]."""
     return _call(q, kv, None, length, scale=scale, block=block,
                  interpret=interpret, fused_dv=dv)
+
+
+# ------------------------------------------------------- split-KV (phase 1)
+def _etap_partial_body(length_ref, q_ref, k_ref, v_ref,
+                       m_out_ref, l_out_ref, acc_out_ref,
+                       acc_ref, m_ref, l_ref, *, scale: float, block: int,
+                       npb: int, fused_dv: int):
+    """Split-KV partial: same transposed update as :func:`_etap_body`, on a
+    3-D ``(BG, n_splits, nb_per_split)`` grid.  Each (b, split) pair owns a
+    contiguous KV segment and emits raw ``(m, ℓ, Accᵀ)`` stats instead of O —
+    the combine kernel (phase 2, ``combine.py``) merges them in the stat
+    domain, so splits are fully independent and can run on different cores."""
+    s = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_blk = k_ref[0]                                   # [block, Dk]
+    q = q_ref[0]                                       # [H, Dk]
+    sT = jax.lax.dot_general(
+        k_blk, q, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # [block, H]
+
+    length = length_ref[pl.program_id(0)]
+    pos = (s * npb + j) * block + jax.lax.broadcasted_iota(
+        jnp.int32, sT.shape, 0)
+    sT = jnp.where(pos < length, sT, NEG_INF)
+
+    m_old = m_ref[...]                                 # [1, H]
+    m_new = jnp.maximum(m_old, jnp.max(sT, axis=0, keepdims=True))
+    p = jnp.exp(sT - m_new)                            # [block, H]
+    corr = jnp.exp(m_old - m_new)                      # [1, H]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
+    m_ref[...] = m_new
+
+    v_blk = k_blk[:, :fused_dv] if fused_dv else v_ref[0]
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        v_blk, p, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [Dv, H]
+
+    @pl.when(j == npb - 1)
+    def _emit():
+        m_out_ref[0] = m_ref[...]
+        l_out_ref[0] = l_ref[...]
+        acc_out_ref[0, 0] = acc_ref[...]
+
+
+def _partial_body_fused(length_ref, q_ref, k_ref, m_out, l_out, acc_out,
+                        acc, m, l, **kw):
+    _etap_partial_body(length_ref, q_ref, k_ref, None, m_out, l_out, acc_out,
+                       acc, m, l, **kw)
+
+
+def etap_partial_pallas(q, k, v, length, *, scale: float, block: int,
+                        n_splits: int, interpret: bool = True,
+                        fused_dv: int = 0):
+    """Phase-1 split-KV ETAP kernel.
+
+    q: [BG,H,Dk]; k: [BG,S,Dk] with S == n_splits * nb_per_split * block
+    (callers pad — the tail is masked via `length`).  Returns fp32 partial
+    stats (m, l, accT): [BG,n_splits,H], [BG,n_splits,H], [BG,n_splits,Dv,H].
+    With fused_dv > 0, v is ignored and V = k[..., :fused_dv] (MLA latent)."""
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = fused_dv or v.shape[2]
+    assert S % (n_splits * block) == 0, (S, n_splits, block)
+    npb = S // (n_splits * block)
+
+    in_specs = [
+        pl.BlockSpec((1, H, Dk), lambda b, s, j, *_: (b, 0, 0)),       # q
+        pl.BlockSpec((1, block, Dk),
+                     lambda b, s, j, *_, npb=npb: (b, s * npb + j, 0)),  # k
+    ]
+    operands = [q, k]
+    if not fused_dv:
+        in_specs.append(pl.BlockSpec(
+            (1, block, Dv), lambda b, s, j, *_, npb=npb: (b, s * npb + j, 0)))
+        operands.append(v)
+
+    kw = dict(scale=scale, block=block, npb=npb, fused_dv=fused_dv)
+    body = functools.partial(
+        _partial_body_fused if fused_dv else _etap_partial_body, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BG, n_splits, npb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, H), lambda b, s, j, *_: (b, s, 0)),      # m
+            pl.BlockSpec((1, 1, H), lambda b, s, j, *_: (b, s, 0)),      # ℓ
+            pl.BlockSpec((1, 1, Dv, H), lambda b, s, j, *_: (b, s, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Dv, H), jnp.float32),                  # Accᵀ
+            pltpu.VMEM((1, H), jnp.float32),                   # m
+            pltpu.VMEM((1, H), jnp.float32),                   # ℓ
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BG, n_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((BG, n_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((BG, n_splits, Dv, H), jnp.float32),
+        ],
+        # splits are independent work items — only the within-split KV walk
+        # is a sequential accumulation.
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(length.astype(jnp.int32), *operands)

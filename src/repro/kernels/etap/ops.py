@@ -1,5 +1,6 @@
-"""jit'd public wrappers for the ETAP kernel: shape normalization (pad S to a
-block multiple — masked via `length`), dtype checks, MLA-fused entry point."""
+"""jit'd public wrappers for the ETAP kernels: shape normalization (pad S to
+a block/split multiple — masked via `length`), dtype checks, MLA-fused and
+split-KV two-phase entry points."""
 from __future__ import annotations
 
 import functools
@@ -7,12 +8,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.etap.etap import etap_decode_mla_pallas, etap_decode_pallas
+from repro.kernels.etap.combine import combine_splits
+from repro.kernels.etap.etap import (etap_decode_mla_pallas,
+                                     etap_decode_pallas, etap_partial_pallas)
+from repro.kernels.etap.schedule import plan_splits, split_geometry
 
 
-def _pad_seq(x, block: int):
+def _pad_seq(x, multiple: int):
     S = x.shape[1]
-    pad = (-S) % block
+    pad = (-S) % multiple
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
     return x
@@ -46,3 +50,87 @@ def etap_decode_mla(q, kv, dv: int, length=None, *, scale: float,
     kv = _pad_seq(kv, block)
     return etap_decode_mla_pallas(q, kv, dv, length, scale=scale, block=block,
                                   interpret=interpret)
+
+
+# ------------------------------------------------------ split-KV two-phase
+def _partial(q, kv, v, length, *, scale, block, n_splits, interpret, fused_dv):
+    """Pad S to a (n_splits · block) multiple and run the phase-1 kernel."""
+    block, _, target = split_geometry(kv.shape[1], block, n_splits)
+    kv = _pad_seq(kv, target)
+    if v is not None:
+        v = _pad_seq(v, target)
+    return etap_partial_pallas(q, kv, v, length, scale=scale, block=block,
+                               n_splits=n_splits, interpret=interpret,
+                               fused_dv=fused_dv)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block", "n_splits",
+                                             "interpret"))
+def etap_partial(q, k, v, length=None, *, scale: float, block: int = 512,
+                 n_splits: int = 2, interpret: bool = True):
+    """Phase-1 split-KV stats. Returns (m, l, accT):
+    [BG,n,H], [BG,n,H], [BG,n,Dv,H] (fp32)."""
+    BG = q.shape[0]
+    if length is None:
+        length = jnp.full((BG,), k.shape[1], jnp.int32)
+    return _partial(q, k, v, length, scale=scale, block=block,
+                    n_splits=n_splits, interpret=interpret, fused_dv=0)
+
+
+@functools.partial(jax.jit, static_argnames=("dv", "scale", "block",
+                                             "n_splits", "interpret"))
+def etap_partial_mla(q, kv, dv: int, length=None, *, scale: float,
+                     block: int = 512, n_splits: int = 2,
+                     interpret: bool = True):
+    """Phase-1 split-KV stats, MLA-fused (V = kv[..., :dv])."""
+    BG = q.shape[0]
+    if length is None:
+        length = jnp.full((BG,), kv.shape[1], jnp.int32)
+    return _partial(q, kv, None, length, scale=scale, block=block,
+                    n_splits=n_splits, interpret=interpret, fused_dv=dv)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block", "n_splits",
+                                             "combine", "interpret"))
+def etap_decode_splitkv(q, k, v, length=None, *, scale: float,
+                        block: int = 512, n_splits: int = 0,
+                        combine: str = "pallas", interpret: bool = True):
+    """Two-phase split-KV ETAP decode. n_splits = 0 → auto (scheduler);
+    n_splits = 1 routes to the single-pass kernel (bit-identical — the
+    combine weights degenerate to exp(0) = 1, so the two-phase path computes
+    the same epilogue; routing just skips the stats round-trip)."""
+    BG, H, _ = q.shape
+    S = k.shape[1]
+    if not n_splits:
+        n_splits = plan_splits(BG, S, H, v.shape[2], block=block).n_splits
+    if n_splits <= 1:
+        return etap_decode(q, k, v, length, scale=scale, block=block,
+                           interpret=interpret)
+    if length is None:
+        length = jnp.full((BG,), S, jnp.int32)
+    m, l, accT = _partial(q, k, v, length, scale=scale, block=block,
+                          n_splits=n_splits, interpret=interpret, fused_dv=0)
+    return combine_splits(m, l, accT, transposed=True, out_dtype=v.dtype,
+                          combine=combine, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("dv", "scale", "block",
+                                             "n_splits", "combine",
+                                             "interpret"))
+def etap_decode_mla_splitkv(q, kv, dv: int, length=None, *, scale: float,
+                            block: int = 512, n_splits: int = 0,
+                            combine: str = "pallas", interpret: bool = True):
+    """Two-phase split-KV, MLA-fused single-latent-stream variant."""
+    BG, H, _ = q.shape
+    S = kv.shape[1]
+    if not n_splits:
+        n_splits = plan_splits(BG, S, H, dv, block=block).n_splits
+    if n_splits <= 1:
+        return etap_decode_mla(q, kv, dv, length, scale=scale, block=block,
+                               interpret=interpret)
+    if length is None:
+        length = jnp.full((BG,), S, jnp.int32)
+    m, l, accT = _partial(q, kv, None, length, scale=scale, block=block,
+                          n_splits=n_splits, interpret=interpret, fused_dv=dv)
+    return combine_splits(m, l, accT, transposed=True, out_dtype=kv.dtype,
+                          combine=combine, interpret=interpret)

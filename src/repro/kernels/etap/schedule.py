@@ -1,0 +1,81 @@
+"""Auto-tuned KV-split scheduler for two-phase ETAP decode (DESIGN.md §3).
+
+Mirrors FlashMLA's ``num_splits`` logic: decode launches one work item per
+(batch-group, split); at small batch × long context the single-split grid
+leaves almost every core idle, so the context is cut until the grid fills
+the machine — but never so far that (a) a split owns too few KV blocks to
+amortize its prologue/epilogue, or (b) the per-split (m, ℓ, Accᵀ) stat
+traffic that phase 2 re-reads stops being negligible next to the one
+mandatory streaming of the KV cache (the roofline term the paper's workload
+is bound by — see launch/roofline.py:splitkv_roofline).
+
+All three caps are monotone non-decreasing in S with everything else fixed,
+so the chosen split count grows monotonically with context length and is 1
+for short contexts / large batches — where the single-pass kernel is already
+occupancy-bound and split-KV would only add combine overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# Parallel compute units to occupy. TPU decode work items are distributed at
+# core granularity (v5e: 1 TensorCore/chip, but the grid also feeds the
+# 8-way megacore/sparsecore pipelining; H20 in the paper: 78 SMs). The
+# constant is deliberately conservative — doubling it only matters once
+# BG * n_splits exceeds it.
+DEFAULT_CORES = 8
+WAVE_FACTOR = 2            # aim for this many work items per core
+MIN_BLOCKS_PER_SPLIT = 2   # a split must own >= this many KV blocks
+STATS_TRAFFIC_BUDGET = 8   # stat bytes must stay under kv_bytes / this
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    """Chosen split-KV launch geometry."""
+    n_splits: int
+    block: int
+    nb_per_split: int          # KV blocks each split walks (after padding)
+
+    @property
+    def padded_s(self) -> int:
+        return self.n_splits * self.nb_per_split * self.block
+
+
+def _floor_pow2(n: int) -> int:
+    return 1 << (max(n, 1).bit_length() - 1)
+
+
+def split_geometry(S: int, block: int, n_splits: int):
+    """Canonical launch geometry for cutting an S-long context into
+    n_splits segments: (block, nb_per_split, padded_s). Every split-KV
+    entry point (Pallas wrappers, XLA path) pads S to `padded_s` with this
+    ONE function so the phase-1 kernels' S % (n·npb·block) == 0 contract
+    can never diverge between paths."""
+    S = max(int(S), 1)
+    block = max(1, min(block, S))
+    nb = -(-S // block)
+    npb = max(1, -(-nb // n_splits))
+    return block, npb, n_splits * npb * block
+
+
+def plan_splits(BG: int, S: int, H: int, Dv: int, *, block: int = 512,
+                num_cores: int = DEFAULT_CORES,
+                kv_itemsize: int = 2) -> SplitPlan:
+    """Pick (n_splits, block) for a decode of shape (BG, S, H, Dv).
+
+    occupancy: want BG * n_splits >= WAVE_FACTOR * num_cores
+    granularity: each split keeps >= MIN_BLOCKS_PER_SPLIT KV blocks
+    traffic: n_splits * stat_bytes <= kv_bytes / STATS_TRAFFIC_BUDGET
+    """
+    S = max(int(S), 1)
+    block = max(1, min(block, S))
+    nb = -(-S // block)
+    want = -(-WAVE_FACTOR * num_cores // max(int(BG), 1))
+    cap_blocks = max(1, nb // MIN_BLOCKS_PER_SPLIT)
+    # per-split phase-2 payload: fp32 (m, ℓ) [2·H] + Accᵀ [Dv·H]
+    stat_bytes = 4 * H * (Dv + 2)
+    kv_bytes = 2 * S * Dv * kv_itemsize        # K + V streams (≈; MLA: one)
+    cap_traffic = max(1, kv_bytes // (STATS_TRAFFIC_BUDGET * stat_bytes))
+    n = _floor_pow2(min(want, cap_blocks, int(cap_traffic)))
+    npb = -(-nb // n)
+    return SplitPlan(n_splits=n, block=block, nb_per_split=npb)

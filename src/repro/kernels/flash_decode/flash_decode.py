@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -84,7 +86,98 @@ def flash_decode_pallas(q, k, v, length, *, scale: float, block: int = 512,
         functools.partial(_body, scale=scale, block=block, nb=nb),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((BG, H, Dv), v.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(length.astype(jnp.int32), q, k, v)
+
+
+# ------------------------------------------------------- split-KV (phase 1)
+def _partial_body(length_ref, q_ref, k_ref, v_ref,
+                  m_out_ref, l_out_ref, acc_out_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float, block: int,
+                  npb: int):
+    """Split-KV partial for the untransposed baseline: 3-D
+    ``(BG, n_splits, nb_per_split)`` grid emitting per-split (m, ℓ, Acc)
+    stats in the standard [H, ·] orientation (merged by
+    ``kernels.etap.combine`` with transposed=False)."""
+    s = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                        # [H, Dk]
+    k_blk = k_ref[0]                                    # [block, Dk]
+    sc = jax.lax.dot_general(
+        q, k_blk, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # [H, block]
+
+    length = length_ref[pl.program_id(0)]
+    pos = (s * npb + j) * block + jax.lax.broadcasted_iota(
+        jnp.int32, sc.shape, 1)
+    sc = jnp.where(pos < length, sc, NEG_INF)
+
+    m_old = m_ref[...]                                  # [H, 1]
+    m_new = jnp.maximum(m_old, jnp.max(sc, axis=1, keepdims=True))
+    p = jnp.exp(sc - m_new)
+    corr = jnp.exp(m_old - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [H, Dv]
+
+    @pl.when(j == npb - 1)
+    def _emit():
+        m_out_ref[0] = m_ref[...].T                     # [1, H]
+        l_out_ref[0] = l_ref[...].T
+        acc_out_ref[0, 0] = acc_ref[...]
+
+
+def flash_decode_partial_pallas(q, k, v, length, *, scale: float, block: int,
+                                n_splits: int, interpret: bool = True):
+    """Phase-1 stats for the baseline kernel. S == n·npb·block (pre-padded).
+    Returns (m, l, acc): [BG,n,H], [BG,n,H], [BG,n,H,Dv] (fp32)."""
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[2]
+    assert S % (n_splits * block) == 0, (S, n_splits, block)
+    npb = S // (n_splits * block)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BG, n_splits, npb),
+        in_specs=[
+            pl.BlockSpec((1, H, Dk), lambda b, s, j, *_: (b, 0, 0)),
+            pl.BlockSpec((1, block, Dk),
+                         lambda b, s, j, *_, npb=npb: (b, s * npb + j, 0)),
+            pl.BlockSpec((1, block, Dv),
+                         lambda b, s, j, *_, npb=npb: (b, s * npb + j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, H), lambda b, s, j, *_: (b, s, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, s, j, *_: (b, s, 0)),
+            pl.BlockSpec((1, 1, H, Dv), lambda b, s, j, *_: (b, s, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, Dv), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_partial_body, scale=scale, block=block, npb=npb),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BG, n_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((BG, n_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((BG, n_splits, H, Dv), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(length.astype(jnp.int32), q, k, v)

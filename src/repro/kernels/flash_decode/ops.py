@@ -1,4 +1,5 @@
-"""jit'd wrapper for the baseline (untransposed) flash decode kernel."""
+"""jit'd wrappers for the baseline (untransposed) flash decode kernel:
+single-pass and split-KV two-phase entry points."""
 from __future__ import annotations
 
 import functools
@@ -6,7 +7,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
+from repro.kernels.etap.combine import combine_splits
+from repro.kernels.etap.schedule import plan_splits, split_geometry
+from repro.kernels.flash_decode.flash_decode import (
+    flash_decode_pallas, flash_decode_partial_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block", "interpret"))
@@ -23,3 +27,33 @@ def flash_decode(q, k, v, length=None, *, scale: float, block: int = 512,
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
     return flash_decode_pallas(q, k, v, length, scale=scale, block=block,
                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block", "n_splits",
+                                             "combine", "interpret"))
+def flash_decode_splitkv(q, k, v, length=None, *, scale: float,
+                         block: int = 512, n_splits: int = 0,
+                         combine: str = "pallas", interpret: bool = True):
+    """Two-phase split-KV baseline decode (same scheduler as the ETAP path;
+    n_splits = 0 → auto, 1 → single-pass, bit-identical — see
+    kernels/etap/combine.py)."""
+    BG, H, _ = q.shape
+    S = k.shape[1]
+    Dv = v.shape[2]
+    if not n_splits:
+        n_splits = plan_splits(BG, S, H, Dv, block=block).n_splits
+    if n_splits <= 1:
+        return flash_decode(q, k, v, length, scale=scale, block=block,
+                            interpret=interpret)
+    if length is None:
+        length = jnp.full((BG,), S, jnp.int32)
+    block, _, target = split_geometry(S, block, n_splits)
+    pad = target - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    m, l, acc = flash_decode_partial_pallas(q, k, v, length, scale=scale,
+                                            block=block, n_splits=n_splits,
+                                            interpret=interpret)
+    return combine_splits(m, l, acc, transposed=False, out_dtype=v.dtype,
+                          combine=combine, interpret=interpret)

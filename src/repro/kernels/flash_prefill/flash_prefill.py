@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -97,7 +99,7 @@ def flash_prefill_pallas(q, k, v, *, scale: float, bq: int = 256,
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
         out_shape=jax.ShapeDtypeStruct((B * H, S, Dv), v.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(qh, kh, vh)

@@ -117,6 +117,43 @@ def roofline_terms(cost: dict, coll: CollectiveStats) -> dict:
     return out
 
 
+def splitkv_roofline(BG: int, S: int, H: int, Dk: int, Dv: int,
+                     n_splits: int, *, kv_itemsize: int = 2,
+                     mla_fused: bool = False) -> dict:
+    """Roofline terms for the two-phase split-KV decode pipeline
+    (DESIGN.md §3): phase 1 streams the KV cache once and writes per-split
+    fp32 (m, ℓ, Accᵀ) stats; phase 2 re-reads the stats and writes O.
+
+    The split count buys parallelism (occupancy factor on the compute term)
+    and pays for it in stat traffic — the scheduler's STATS_TRAFFIC_BUDGET
+    cap is exactly the requirement that `overhead` stays ≪ 1 here."""
+    from repro.kernels.etap.schedule import DEFAULT_CORES
+
+    q_bytes = BG * H * Dk * kv_itemsize
+    kv_bytes = BG * S * (Dk if mla_fused else Dk + Dv) * kv_itemsize
+    stat_bytes = BG * n_splits * (2 * H + Dv * H) * 4
+    o_bytes = BG * H * Dv * kv_itemsize
+    flops = 2.0 * BG * S * H * (Dk + Dv)
+
+    occupancy = min(1.0, BG * n_splits / DEFAULT_CORES)
+    t_partial_mem = (q_bytes + kv_bytes + stat_bytes) / HBM_BW
+    t_partial_compute = flops / (PEAK_FLOPS * occupancy)
+    t_combine = (stat_bytes + o_bytes) / HBM_BW
+    t_total = max(t_partial_mem, t_partial_compute) + t_combine
+    return {
+        "kv_bytes": kv_bytes,
+        "stat_bytes": stat_bytes,
+        "t_partial_mem": t_partial_mem,
+        "t_partial_compute": t_partial_compute,
+        "t_combine": t_combine,
+        "t_total": t_total,
+        "occupancy": occupancy,
+        "overhead": (2 * stat_bytes + o_bytes) / max(kv_bytes, 1),
+        "bottleneck": ("memory" if t_partial_mem >= t_partial_compute
+                       else "compute"),
+    }
+
+
 def model_flops(cfg, cell, n_active_params: int) -> float:
     """6·N·D (train) / 2·N·D (inference fwd) convention, attention excluded.
     decode processes global_batch tokens; train/prefill B·S tokens."""

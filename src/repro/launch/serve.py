@@ -31,21 +31,29 @@ def run(args) -> dict:
     logits, cache, pos = model.prefill(params, cfg, {"tokens": tokens}, max_len)
     t_prefill = time.perf_counter() - t0
 
-    decode = jax.jit(
-        lambda p, c, t, i: model.decode_step(p, cfg, c, t, i, mode=args.mode),
-        donate_argnums=(1,))
+    # the whole generation is ONE jitted lax.scan over steps (cache donated
+    # through the scan carry): decode timing measures the kernels, not
+    # per-token Python dispatch / host-device sync overhead.
+    def generate(params, cache, first_tok, pos0):
+        def step(carry, i):
+            tok, cache = carry
+            logits, cache = model.decode_step(params, cfg, cache, tok,
+                                              pos0 + i, mode=args.mode,
+                                              kv_splits=args.kv_splits)
+            return (jnp.argmax(logits, axis=-1), cache), tok
+        (_, cache), toks = jax.lax.scan(
+            step, (first_tok, cache), jnp.arange(args.gen, dtype=jnp.int32))
+        return jnp.swapaxes(toks, 0, 1), cache            # [B, gen]
 
-    out_tokens = []
+    gen_fn = jax.jit(generate, donate_argnums=(1,))
     cur = jnp.argmax(logits, axis=-1)
-    t0 = time.perf_counter()
-    for i in range(args.gen):
-        out_tokens.append(cur)
-        logits, cache = decode(params, cache, cur, pos + i)
-        cur = jnp.argmax(logits, axis=-1)
-    jax.block_until_ready(logits)
-    t_decode = time.perf_counter() - t0
+    pos0 = jnp.asarray(pos, jnp.int32)
+    compiled = gen_fn.lower(params, cache, cur, pos0).compile()
 
-    gen = jnp.stack(out_tokens, axis=1)
+    t0 = time.perf_counter()
+    gen, cache = compiled(params, cache, cur, pos0)
+    jax.block_until_ready(gen)
+    t_decode = time.perf_counter() - t0
     print(f"[serve] arch={args.arch} mode={args.mode} B={B} prompt={S} gen={args.gen}")
     print(f"[serve] prefill {t_prefill*1e3:.1f}ms; decode "
           f"{t_decode/args.gen*1e3:.2f}ms/token "
@@ -61,6 +69,9 @@ def parse_args(argv=None):
     ap.add_argument("--prompt", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--mode", default="etap", choices=["etap", "standard"])
+    ap.add_argument("--kv-splits", type=int, default=None,
+                    help="split-KV count for decode attention "
+                         "(default: auto-scheduled)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reduced", action="store_true")
     return ap.parse_args(argv)

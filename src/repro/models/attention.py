@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.etap import (decode_attention, gqa_decode_xla, gqa_to_grouped,
                              seq_sharded_gqa_decode)
 from repro.models import layers
@@ -24,7 +25,7 @@ NEG_INF = -1e30
 def _score_constraint(s):
     """Scores [B,H,q,S]: shard heads over `model` when divisible, else fall
     back to sharding the q-position dim (e.g. llava's 56 heads on TP16)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return s
     if s.shape[1] % mesh.shape["model"] == 0:
@@ -126,18 +127,25 @@ def local_attention(q, k, v, *, window: int, scale: float):
 
 # ------------------------------------------------------------------- decode
 def gqa_decode(q, k_cache, v_cache, length, *, scale: float, mode: str,
-               use_kernels: bool = False, block: int = 512):
+               use_kernels: bool = False, block: int = 512, n_splits=None):
     """One-token decode against a [B,S,K,D] cache. q: [B,H,D] -> [B,H,Dv].
     `mode` selects ETAP (paper) vs standard (baseline) pipelines.
     The XLA path streams the cache in its native layout (no reshuffle copy);
-    the Pallas path (tests/benchmarks) uses the grouped [BG,...] form."""
+    the Pallas path (tests/benchmarks) uses the grouped [BG,...] form.
+    n_splits: split-KV count (None = auto-scheduled on the kernel path).
+    An EXPLICIT n_splits > 1 on the XLA etap path is honoured through the
+    grouped form — that costs the cache reshuffle copy, so it is opt-in
+    rather than auto there."""
     B, H, D = q.shape
     K = k_cache.shape[2]
-    if use_kernels:
+    want_xla_split = (not use_kernels and mode == "etap"
+                     and n_splits is not None and n_splits > 1)
+    if use_kernels or want_xla_split:
         qg, kg, vg, restore = gqa_to_grouped(q, k_cache, v_cache)
         lg = jnp.repeat(length, K) if length.ndim else jnp.full((B * K,), length)
         o = decode_attention(qg, kg, vg, lg, scale=scale, mode=mode,
-                             use_kernels=True, block=block)
+                             use_kernels=use_kernels, block=block,
+                             n_splits=n_splits)
         return restore(o)
     q4 = q.reshape(B, K, H // K, D)
     return gqa_decode_xla(q4, k_cache, v_cache, length, scale=scale,
@@ -188,9 +196,11 @@ def attention_train(params, cfg, x, positions, *, return_cache: bool = False):
     return out
 
 
-def attention_decode(params, cfg, x, cache, pos, *, mode: str = "etap"):
+def attention_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
+                     n_splits=None):
     """x: [B,D] one token; cache: {"k","v"}: [B,S,K,hd] (ring buffer of size
-    window for local attention). Returns (out [B,D], new cache)."""
+    window for local attention). Returns (out [B,D], new cache).
+    n_splits: split-KV count for the kernel decode path (None = auto)."""
     B, D = x.shape
     positions = jnp.full((B, 1), pos, jnp.int32)
     q, k, v = _project_qkv(params, cfg, x[:, None, :], positions)
@@ -198,7 +208,7 @@ def attention_decode(params, cfg, x, cache, pos, *, mode: str = "etap"):
     Smax = cache["k"].shape[1]
     K = k.shape[1]
     scale = cfg.resolved_head_dim ** -0.5
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_mesh()
     seq_shard = (cfg.attention_kind == "full" and not cfg.use_kernels
                  and seq_shardable(Smax, mesh))
     if seq_shard:
@@ -213,7 +223,8 @@ def attention_decode(params, cfg, x, cache, pos, *, mode: str = "etap"):
         vc = jax.lax.dynamic_update_index_in_dim(cache["v"], v, slot, 1)
         length = jnp.minimum(pos + 1, Smax)
         o = gqa_decode(q, kc, vc, jnp.full((B,), length, jnp.int32),
-                       scale=scale, mode=mode, use_kernels=cfg.use_kernels)
+                       scale=scale, mode=mode, use_kernels=cfg.use_kernels,
+                       n_splits=n_splits)
     out = layers.dense(o.reshape(B, -1), params["w_o"])
     return out, {"k": kc, "v": vc}
 

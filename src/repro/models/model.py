@@ -117,16 +117,18 @@ def _block_seq(params, cfg, sig, x, positions, collect_cache: bool):
     return x + f, aux, cache
 
 
-def _block_decode(params, cfg, sig, x, cache, pos, mode):
+def _block_decode(params, cfg, sig, x, cache, pos, mode, kv_splits=None):
     """One block, one token. x: [B,D]. Returns (x, new_cache)."""
     kind, is_moe = sig
     h = layers.rms_norm(x, params["norm1"], cfg.norm_eps)
     if kind == "attn":
         if cfg.attention_kind == "mla":
-            mixed, cache = mla_mod.mla_decode(params["mix"], cfg, h, cache, pos, mode=mode)
+            mixed, cache = mla_mod.mla_decode(params["mix"], cfg, h, cache, pos,
+                                              mode=mode, n_splits=kv_splits)
         else:
             mixed, cache = attention.attention_decode(params["mix"], cfg, h, cache,
-                                                      pos, mode=mode)
+                                                      pos, mode=mode,
+                                                      n_splits=kv_splits)
     elif kind == "rglru":
         mixed, cache = rglru.rglru_decode(params["mix"], cfg, h, cache)
     else:
@@ -292,9 +294,14 @@ def prefill(params, cfg, batch, max_len: int):
     return logits[:, -1, :], padded, S
 
 
-def decode_step(params, cfg, cache, tokens, pos, *, mode: str = "etap"):
+def decode_step(params, cfg, cache, tokens, pos, *, mode: str = "etap",
+                kv_splits=None):
     """One serving step. tokens: [B] int32; pos: scalar index of the new token.
-    Returns (logits [B,V], new_cache)."""
+    Returns (logits [B,V], new_cache). kv_splits: split-KV count for decode
+    attention (None = auto-scheduled per layer geometry — serving picks up
+    split-KV with zero caller changes; exception: the native-layout GQA XLA
+    path only splits on an explicit count, since splitting there costs a
+    cache reshuffle copy — see models/attention.gqa_decode)."""
     x = constrain(layers.embed(params["embed"], tokens), P(BATCH, None))
     groups = layer_groups(cfg)
     new_caches = []
@@ -303,7 +310,8 @@ def decode_step(params, cfg, cache, tokens, pos, *, mode: str = "etap"):
             lp, lc = xs
             ncs = {}
             for j, sig in enumerate(g["sigs"]):
-                x, nc = _block_decode(lp[f"b{j}"], cfg, sig, x, lc[f"b{j}"], pos, mode)
+                x, nc = _block_decode(lp[f"b{j}"], cfg, sig, x, lc[f"b{j}"],
+                                      pos, mode, kv_splits)
                 ncs[f"b{j}"] = nc
             return x, ncs
         x, gc_new = jax.lax.scan(body, x, (gparams, gcache))

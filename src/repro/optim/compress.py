@@ -72,7 +72,8 @@ def pod_reduce_with_feedback(grads, residual, axis: str = "pod"):
         q, s = quantize(g32)
         deq = dequantize(q, s, g32.shape)
         new_r = g32 - deq
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro import compat
+        mesh = compat.get_mesh()
         if mesh is not None and axis in getattr(mesh, "axis_names", ()):
             try:
                 deq = jax.lax.psum(deq, axis) / mesh.shape[axis]

@@ -1,0 +1,30 @@
+"""Optional-hypothesis shim: property tests run when hypothesis is
+installed and are collected-then-skipped (never a collection error) when it
+is not.  Import ``given/settings/st`` from here instead of ``hypothesis``."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """st.* stand-in: any strategy constructor returns None (the stub
+        ``given`` never draws from it)."""
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    def given(*_a, **_k):
+        def deco(f):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = f.__name__
+            skipper.__doc__ = f.__doc__
+            return skipper
+        return deco

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.etap import etap_decode_xla, standard_decode_xla
 from repro.kernels.etap import ops as etap_ops

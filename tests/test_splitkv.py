@@ -1,0 +1,156 @@
+"""Split-KV two-phase decode validation (DESIGN.md §3): partial+combine vs
+the pure-jnp oracle across split counts and context lengths, the fully-masked
+split (ℓ = 0) edge case, bit-compatibility of n_splits=1 with the single-pass
+kernels, and the scheduler's monotonicity contract. All Pallas runs are
+interpret=True on CPU."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.etap import etap_decode_splitkv_xla
+from repro.kernels.etap import ops as etap_ops
+from repro.kernels.etap.combine import combine_splits
+from repro.kernels.etap.ref import etap_decode_ref
+from repro.kernels.etap.schedule import plan_splits
+from repro.kernels.flash_decode import ops as fd_ops
+
+RNG = np.random.default_rng(7)
+
+
+def _mk(BG, H, Dk, Dv, S, *, lengths=None):
+    q = jnp.asarray(RNG.normal(size=(BG, H, Dk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(BG, S, Dk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(BG, S, Dv)), jnp.float32)
+    if lengths is None:
+        lengths = RNG.integers(1, S + 1, size=(BG,))
+    return q, k, v, jnp.asarray(lengths, jnp.int32)
+
+
+def _rmse(a, b):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    return float(np.sqrt(np.mean((a - b) ** 2)))
+
+
+SPLIT_SWEEP = [(n, s) for n in (1, 2, 4, 8) for s in (1024, 4096, 16384)]
+
+
+@pytest.mark.parametrize("n_splits,S", SPLIT_SWEEP)
+def test_splitkv_separate_v_vs_ref(n_splits, S):
+    block = 512 if S >= 16384 else 256
+    q, k, v, L = _mk(2, 8, 64, 64, S)
+    scale = 64 ** -0.5
+    ref = etap_decode_ref(q, k, v, L, scale=scale)
+    out = etap_ops.etap_decode_splitkv(q, k, v, L, scale=scale, block=block,
+                                       n_splits=n_splits)
+    assert _rmse(out, ref) <= 1e-4
+
+
+@pytest.mark.parametrize("n_splits,S", SPLIT_SWEEP)
+def test_splitkv_mla_fused_vs_ref(n_splits, S):
+    block = 512 if S >= 16384 else 256
+    q, kv, _, L = _mk(2, 8, 96, 96, S)
+    dv = 64                                  # V = first 64 latent columns
+    scale = 96 ** -0.5
+    ref = etap_decode_ref(q, kv, kv[..., :dv], L, scale=scale)
+    out = etap_ops.etap_decode_mla_splitkv(q, kv, dv, L, scale=scale,
+                                           block=block, n_splits=n_splits)
+    assert _rmse(out, ref) <= 1e-4
+
+
+@pytest.mark.parametrize("n_splits", [2, 4, 8])
+def test_splitkv_fully_masked_splits(n_splits):
+    """Ragged lengths that leave whole splits masked: a split beyond
+    `length` carries (m = -inf-ish, ℓ = 0) and must drop out of the combine
+    with weight exactly 0 — not pollute O with NaN or garbage."""
+    S, block = 1024, 128
+    q, k, v, L = _mk(3, 8, 64, 64, S, lengths=[1, 130, S])
+    scale = 0.125
+    ref = etap_decode_ref(q, k, v, L, scale=scale)
+    out = etap_ops.etap_decode_splitkv(q, k, v, L, scale=scale, block=block,
+                                       n_splits=n_splits)
+    assert not np.any(np.isnan(np.asarray(out)))
+    assert _rmse(out, ref) <= 1e-4
+    # same edge case through the XLA two-phase path
+    out_x = etap_decode_splitkv_xla(q, k, v, L, scale=scale, block=block,
+                                    n_splits=n_splits)
+    assert _rmse(out_x, ref) <= 1e-4
+
+
+def test_splitkv_one_split_bitwise_single_pass():
+    """Two-phase with n_splits=1 must be BIT-compatible with the single-pass
+    kernel: the combine weights degenerate to exp(0) = 1, so the merge is
+    the identity and the epilogue division is the same operation."""
+    q, k, v, L = _mk(2, 16, 128, 96, 1024)
+    scale = 128 ** -0.5
+    one = etap_ops.etap_decode(q, k, v, L, scale=scale, block=256)
+    m, l, accT = etap_ops.etap_partial(q, k, v, L, scale=scale, block=256,
+                                       n_splits=1)
+    for combine in ("pallas", "xla"):
+        two = combine_splits(m, l, accT, transposed=True, out_dtype=v.dtype,
+                             combine=combine)
+        np.testing.assert_array_equal(np.asarray(two), np.asarray(one))
+
+
+def test_splitkv_baseline_flash_decode_vs_ref():
+    """The untransposed baseline kernel's split path (standard orientation
+    stats, no epilogue transpose) agrees with the same oracle."""
+    q, k, v, L = _mk(2, 8, 64, 64, 2048)
+    scale = 64 ** -0.5
+    ref = etap_decode_ref(q, k, v, L, scale=scale)
+    for n in (1, 2, 4):
+        out = fd_ops.flash_decode_splitkv(q, k, v, L, scale=scale, block=256,
+                                          n_splits=n)
+        assert _rmse(out, ref) <= 1e-4
+    # n=1 bitwise against the single-pass baseline kernel
+    one = fd_ops.flash_decode(q, k, v, L, scale=scale, block=256)
+    two = fd_ops.flash_decode_splitkv(q, k, v, L, scale=scale, block=256,
+                                      n_splits=1)
+    np.testing.assert_array_equal(np.asarray(two), np.asarray(one))
+
+
+def test_splitkv_xla_vs_ref():
+    q, k, v, L = _mk(3, 16, 576, 512, 4096)
+    scale = 576 ** -0.5
+    ref = etap_decode_ref(q, k, v, L, scale=scale)
+    for n in (1, 2, 4, 8):
+        out = etap_decode_splitkv_xla(q, k, v, L, scale=scale, block=512,
+                                      n_splits=n)
+        assert _rmse(out, ref) <= 1e-4
+
+
+def test_splitkv_ragged_tail_padding():
+    """S not divisible by n_splits*block: the padded tail must be masked."""
+    q, k, v, L = _mk(2, 8, 64, 64, 1000, lengths=[999, 1000])
+    scale = 0.1
+    ref = etap_decode_ref(q, k, v, L, scale=scale)
+    out = etap_ops.etap_decode_splitkv(q, k, v, L, scale=scale, block=128,
+                                       n_splits=4)
+    assert _rmse(out, ref) <= 1e-4
+
+
+# ---------------------------------------------------------------- scheduler
+def test_scheduler_monotone_in_context_length():
+    """FlashMLA num_splits contract: split count grows monotonically with S
+    (more context → more parallel work), at fixed batch/head geometry."""
+    seqs = [256, 512, 1024, 4096, 16384, 65536, 262144]
+    ns = [plan_splits(1, s, 16, 512).n_splits for s in seqs]
+    assert all(a <= b for a, b in zip(ns, ns[1:])), ns
+    assert ns[-1] > 1                      # long context does split
+    assert plan_splits(1, 256, 16, 512).n_splits == 1   # short doesn't
+
+
+def test_scheduler_large_batch_stays_single_pass():
+    """At the paper's batch-16 geometry the grid is already occupancy-bound;
+    the scheduler must not pay combine overhead for nothing."""
+    assert plan_splits(64, 65536, 16, 512).n_splits == 1
+
+
+def test_scheduler_split_granularity():
+    """Every split owns at least one full KV block and the padded context
+    the plan implies covers S."""
+    for s in (512, 4096, 65536):
+        for bg in (1, 4, 16):
+            p = plan_splits(bg, s, 16, 512)
+            assert p.n_splits >= 1 and p.nb_per_split >= 1
+            assert p.padded_s >= s
