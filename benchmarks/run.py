@@ -1,7 +1,10 @@
 """Benchmark harness entry point — one function per paper artifact.
 Prints ``name,us_per_call,derived`` CSV rows (derived = the artifact's
 headline metric).  ``--kv-splits`` runs the split-KV decode sweep instead
-and records per-split-count results to BENCH_splitkv.json."""
+and records per-split-count results to BENCH_splitkv.json.  ``--smoke``
+runs the fast CI subset (kernel interpret paths + paged cache + a tiny
+split-KV sweep) and records BENCH_smoke.json + BENCH_smoke_splitkv.json — the
+per-PR perf-trajectory artifacts the CI smoke job uploads."""
 from __future__ import annotations
 
 import argparse
@@ -90,6 +93,59 @@ def bench_serving_e2e():
     return out
 
 
+def bench_paged():
+    """Paged vs dense ETAP decode (interpret kernels) at the paper's MLA
+    geometry, plus the allocator round-trip → BENCH_paged.json rows."""
+    from repro.kernels.etap import ops as etap_ops
+    from repro.runtime.paged_cache import BlockPool, dense_to_paged, layout_for
+
+    B, H, DIM, DV, S, page = 2, 16, 576, 512, 1024, 64
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, H, DIM)), jnp.float32)
+    kv = jnp.asarray(rng.normal(size=(B, S, DIM)), jnp.float32)
+    lengths = np.asarray([S // 2 + 3, S])
+    layout = layout_for(B, S, block_size=page)
+    pool, bp = dense_to_paged(kv, lengths, layout)
+    table, lens = bp.device_views()
+    scale = DIM ** -0.5
+
+    def timed(fn):
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) * 1e6
+
+    rows = []
+    rows.append(("kernel/etap_mla_dense", timed(
+        lambda: etap_ops.etap_decode_mla(
+            q, kv, DV, jnp.asarray(lengths), scale=scale, block=page)),
+        f"S={S}"))
+    rows.append(("kernel/etap_mla_paged", timed(
+        lambda: etap_ops.etap_decode_mla_paged(
+            q, pool, DV, table, lens, scale=scale)),
+        f"page={page};blocks={layout.num_blocks - 1}"))
+    rows.append(("kernel/etap_mla_paged_splitkv", timed(
+        lambda: etap_ops.etap_decode_mla_paged_splitkv(
+            q, pool, DV, table, lens, scale=scale, n_splits=4)),
+        "n_splits=4"))
+    t0 = time.perf_counter()
+    alloc = BlockPool(layout, B)
+    for _ in range(100):
+        s0 = alloc.admit(S // 2, S)
+        alloc.release(s0)
+    rows.append(("paged/alloc_release_roundtrip",
+                 (time.perf_counter() - t0) / 100 * 1e6,
+                 f"{layout.num_blocks - 1}blocks"))
+    import json
+    with open("BENCH_paged.json", "w") as f:
+        json.dump({"geometry": {"batch": B, "heads": H, "dim": DIM,
+                                "dv": DV, "seq": S, "page": page},
+                   "rows": [{"name": n, "us": us, "derived": d}
+                            for n, us, d in rows]}, f, indent=2)
+    rows.append(("paged/json", 0.0, "BENCH_paged.json"))
+    return rows
+
+
 def bench_splitkv(full: bool = False):
     """Split-KV ETAP decode sweep → CSV rows + BENCH_splitkv.json."""
     from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
@@ -105,17 +161,48 @@ def bench_splitkv(full: bool = False):
     return out
 
 
+def bench_smoke():
+    """CI smoke subset: kernel interpret paths, the paged cache, and a tiny
+    split-KV sweep.  Writes BENCH_smoke.json (this aggregate) plus the
+    BENCH_paged.json / BENCH_smoke_splitkv.json the sub-benches
+    emit (the committed full-sweep BENCH_splitkv.json is only written by
+    --kv-splits)."""
+    rows = []
+    rows += bench_kernels_interpret()
+    rows += bench_paged()
+    from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
+    sk = run_splitkv(full=False, splits=(1, 4))
+    # own path: never clobber the committed full-sweep BENCH_splitkv.json
+    write_splitkv_json(sk, path="BENCH_smoke_splitkv.json")
+    for r in sk:
+        rows.append((f"splitkv/bs{r['batch']}/s{r['seq']}/n{r['n_splits']}",
+                     r["us"], f"{r['gflops']:.2f}GF/s"))
+    import json
+    with open("BENCH_smoke.json", "w") as f:
+        json.dump({"rows": [{"name": n, "us": us, "derived": str(d)}
+                            for n, us, d in rows]}, f, indent=2)
+    rows.append(("smoke/json", 0.0, "BENCH_smoke.json"))
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--kv-splits", action="store_true",
                     help="run the split-KV decode sweep and write "
                          "BENCH_splitkv.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset; writes BENCH_smoke.json, "
+                         "BENCH_paged.json and BENCH_smoke_splitkv.json")
     ap.add_argument("--full", action="store_true",
                     help="wider sweep geometry")
     args = ap.parse_args(argv)
-    benches = [lambda: bench_splitkv(full=args.full)] if args.kv_splits else \
-        [bench_table1_rmse, bench_kernels_interpret,
-         bench_serving_e2e, bench_fig1_throughput]
+    if args.smoke:
+        benches = [bench_smoke]
+    elif args.kv_splits:
+        benches = [lambda: bench_splitkv(full=args.full)]
+    else:
+        benches = [bench_table1_rmse, bench_kernels_interpret,
+                   bench_serving_e2e, bench_fig1_throughput]
     print("name,us_per_call,derived")
     for b in benches:
         for name, us, derived in b():

@@ -58,10 +58,10 @@ def main():
         fp16_etap = [r for n, m, _, _, r in rows if n == "float16" and m == "etap"]
         fp16_std = [r for n, m, _, _, r in rows if n == "float16" and m == "standard"]
         print(f"\nfp16 ETAP mean RMSE    : {np.mean(fp16_etap):.3e} "
-              f"(paper reports 1.25e-5)")
+              "(paper reports 1.25e-5)")
         print(f"fp16 standard mean RMSE: {np.mean(fp16_std):.3e}")
         print(f"ETAP/standard ratio    : {np.mean(fp16_etap)/np.mean(fp16_std):.2f} "
-              f"(<=1 means the transposition does not hurt numerics)")
+              "(<=1 means the transposition does not hurt numerics)")
         return rows
     finally:
         jax.config.update("jax_enable_x64", False)

@@ -7,7 +7,6 @@ shows the Pallas TPU kernel (interpret mode on CPU) doing the same.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -19,7 +19,7 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,6 @@ returns O: [BG, H, Dv]
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -298,6 +296,76 @@ def decode_attention(q, k, v, length=None, *, scale: float, mode: str = "etap",
                                            n_splits=int(n_splits))
     fn = etap_decode_xla if mode == "etap" else standard_decode_xla
     return fn(q, k, v, length, scale=scale, block=block)
+
+
+# ------------------------------------------------------------------- paged
+def _gather_kv(k_pool, v_pool, table, dv: int):
+    """Materialize the dense (k, v) view of a paged cache: the fallback
+    route for paths without a native paged kernel.  v_pool None → MLA-fused
+    (V = first `dv` gathered columns)."""
+    from repro.runtime.paged_cache import gather_blocks
+    k = gather_blocks(k_pool, table)
+    v = gather_blocks(v_pool, table) if v_pool is not None else k[..., :dv]
+    return k, v
+
+
+def etap_decode_paged_xla(q, k_pool, v_pool, table, lengths, *,
+                          scale: float, dv: int = 0):
+    """Paged ETAP decode in pure XLA: gather the pool rows through the
+    block table into the dense layout, then run the blockwise loop with
+    block == page — so at block-aligned lengths it is bit-identical to the
+    paged Pallas kernel AND to the dense path at equal block size.  XLA
+    materializes the gather (one cache-sized copy); the Pallas paged
+    kernels avoid it by dereferencing the table inside the grid.
+    With v_pool None, V = gathered k_pool[..., :dv] (MLA-fused)."""
+    k, v = _gather_kv(k_pool, v_pool, table, dv)
+    return etap_decode_xla(q, k, v, lengths, scale=scale,
+                           block=k_pool.shape[1])
+
+
+def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
+                           scale: float, mode: str = "etap",
+                           use_kernels: bool = False, interpret: bool = True,
+                           n_splits=None, dv: int = 0):
+    """Paged decode attention entry point (the `cache_layout="paged"`
+    analogue of :func:`decode_attention`).
+
+    q: [B,H,Dk]; pools: [N,page,D*]; table: [B,max_blocks]; lengths: [B].
+    v_pool None → MLA-fused (V = first `dv` pool columns, one HBM stream).
+    n_splits: None = auto via the block-granular paged scheduler; the
+    "standard" baseline runs on the gathered dense layout (it exists for
+    comparison, not serving)."""
+    if use_kernels and mode == "etap":
+        from repro.kernels.etap import ops as etap_ops
+        if v_pool is None:
+            return etap_ops.etap_decode_mla_paged_splitkv(
+                q, k_pool, dv, table, lengths, scale=scale,
+                n_splits=int(n_splits or 0), interpret=interpret)
+        return etap_ops.etap_decode_paged_splitkv(
+            q, k_pool, v_pool, table, lengths, scale=scale,
+            n_splits=int(n_splits or 0), interpret=interpret)
+    if mode == "etap":
+        page = k_pool.shape[1]
+        if n_splits is None:
+            from repro.kernels.etap.schedule import plan_splits_paged
+            n_splits = plan_splits_paged(
+                q.shape[0], table.shape[1], page, q.shape[1],
+                v_pool.shape[2] if v_pool is not None else dv).n_splits
+        if n_splits > 1:
+            k, v = _gather_kv(k_pool, v_pool, table, dv)
+            return etap_decode_splitkv_xla(q, k, v, lengths, scale=scale,
+                                           block=page,
+                                           n_splits=int(n_splits))
+        return etap_decode_paged_xla(q, k_pool, v_pool, table, lengths,
+                                     scale=scale, dv=dv)
+    k, v = _gather_kv(k_pool, v_pool, table, dv)
+    if use_kernels:
+        from repro.kernels.flash_decode import ops as fd_ops
+        return fd_ops.flash_decode_splitkv(
+            q, k, v, lengths, scale=scale, block=k_pool.shape[1],
+            n_splits=int(n_splits or 0), interpret=interpret)
+    return standard_decode_xla(q, k, v, lengths, scale=scale,
+                               block=k_pool.shape[1])
 
 
 def gqa_partial_xla(q, k, v, length, *, scale: float, block: int = 512,

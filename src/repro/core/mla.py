@@ -13,9 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.core.etap import decode_attention, seq_sharded_decode
+from repro.core.etap import (decode_attention, decode_attention_paged,
+                             seq_sharded_decode)
 from repro.models import layers
 from repro.models.attention import causal_attention
+from repro.runtime import paged_cache
 
 
 def init_mla(key, cfg, dtype):
@@ -74,26 +76,42 @@ def mla_train(params, cfg, x, positions, *, return_cache: bool = False):
     return out
 
 
-def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
-               n_splits=None):
-    """Absorbed-form decode. x: [B,D]; cache: {"c": [B,Smax,latent]}.
-    n_splits: split-KV count for the decode kernel (None = auto-scheduled).
-
-    q_c[b,h] = q_nope[b,h] · W_uk[:,h]  (512-d), q = [q_c ; q_rope] (576-d)
-    scores   = q · cᵀ  — via ETAP as  c · qᵀ  with the context on M.
-    o_latent = P · c[..., :512]; o[b,h] = o_latent[b,h] · W_uvᵀ.
-    """
+def _absorbed_query(params, cfg, x, positions):
+    """Absorbed-form decode query:
+    q_c[b,h] = q_nope[b,h] · W_uk[:,h]  (512-d), q = [q_c ; q_rope] (576-d).
+    x: [B,D]; positions: [B,1]. Returns q: [B,H,latent]."""
     m, H = cfg.mla, cfg.num_heads
-    B, D = x.shape
-    positions = jnp.full((B, 1), pos, jnp.int32)
     q_nope, q_rope = _queries(params, cfg, x[:, None, :], positions)
     q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]               # [B,H,*]
     # absorb W_uk into the query: [B,H,nope] x [kv,H,nope] -> [B,H,kv]
     w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
     q_c = jnp.einsum("bhd,chd->bhc", q_nope.astype(jnp.float32),
                      w_uk.astype(jnp.float32)).astype(x.dtype)
-    q = jnp.concatenate([q_c, q_rope], axis=-1)               # [B,H,latent]
+    return jnp.concatenate([q_c, q_rope], axis=-1)            # [B,H,latent]
 
+
+def _absorbed_out(params, cfg, o_lat, dtype):
+    """Fold W_uv into the latent attention output and project:
+    o[b,h] = o_latent[b,h] · W_uvᵀ → W_o. o_lat: [B,H,kv]. Returns [B,D]."""
+    m, H = cfg.mla, cfg.num_heads
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bhc,chd->bhd", o_lat.astype(jnp.float32),
+                   w_uv.astype(jnp.float32)).astype(dtype)
+    return layers.dense(o.reshape(o.shape[0], -1), params["w_o"])
+
+
+def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
+               n_splits=None):
+    """Absorbed-form decode. x: [B,D]; cache: {"c": [B,Smax,latent]}.
+    n_splits: split-KV count for the decode kernel (None = auto-scheduled).
+
+    scores   = q · cᵀ  — via ETAP as  c · qᵀ  with the context on M.
+    o_latent = P · c[..., :512]; see :func:`_absorbed_query`/`_absorbed_out`.
+    """
+    m = cfg.mla
+    B, D = x.shape
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = _absorbed_query(params, cfg, x, positions)
     c_t = _latent(params, cfg, x[:, None, :], positions)[:, 0]  # [B,latent]
     scale = m.qk_head_dim ** -0.5
     from repro.sharding.rules import seq_shardable
@@ -113,14 +131,43 @@ def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
                                  length, scale=scale, mode=mode,
                                  use_kernels=cfg.use_kernels,
                                  n_splits=n_splits)            # [B,H,512]
-    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
-    o = jnp.einsum("bhc,chd->bhd", o_lat.astype(jnp.float32),
-                   w_uv.astype(jnp.float32)).astype(x.dtype)
-    return layers.dense(o.reshape(B, -1), params["w_o"]), {"c": cache_c}
+    return _absorbed_out(params, cfg, o_lat, x.dtype), {"c": cache_c}
+
+
+def mla_decode_paged(params, cfg, x, cache, table, lengths, *,
+                     mode: str = "etap", n_splits=None):
+    """Absorbed-form decode against a PAGED latent cache.
+
+    x: [B,D]; cache: {"c": pool [num_blocks, page, latent]}; table:
+    [B,max_blocks]; lengths: [B] — each sequence's new token is written at
+    its own position `lengths[b]` (continuous batching serves ragged
+    lengths, so there is no shared scalar `pos`).  The single 576-wide
+    latent pool is streamed once through the block table; V is its first
+    kv_lora_rank columns (same one-stream argument as the dense MLA path).
+    Returns (out [B,D], {"c": updated pool})."""
+    m = cfg.mla
+    B, D = x.shape
+    positions = lengths[:, None].astype(jnp.int32)            # [B,1]
+    q = _absorbed_query(params, cfg, x, positions)
+    c_t = _latent(params, cfg, x[:, None, :], positions)[:, 0]  # [B,latent]
+    pool = paged_cache.append_rows(cache["c"], table, lengths, c_t)
+    scale = m.qk_head_dim ** -0.5
+    o_lat = decode_attention_paged(
+        q, pool, None, table, lengths + 1, scale=scale, mode=mode,
+        use_kernels=cfg.use_kernels, n_splits=n_splits,
+        dv=m.kv_lora_rank)                                    # [B,H,512]
+    return _absorbed_out(params, cfg, o_lat, x.dtype), {"c": pool}
 
 
 def init_mla_cache(cfg, batch: int, max_len: int, dtype):
     return {"c": jnp.zeros((batch, max_len, cfg.mla.latent_dim), dtype)}
+
+
+def init_mla_cache_paged(cfg, layout, dtype):
+    """Paged latent pool (block 0 = reserved null block, see
+    runtime/paged_cache.py)."""
+    return {"c": jnp.zeros((layout.num_blocks, layout.block_size,
+                            cfg.mla.latent_dim), dtype)}
 
 
 def mla_prefill_cache(params, cfg, x, positions):

@@ -73,6 +73,20 @@ def _body_fused(length_ref, q_ref, k_ref, o_ref, acc, m, l, **kw):
     _etap_body(length_ref, q_ref, k_ref, None, o_ref, acc, m, l, **kw)
 
 
+# The paged bodies are the SAME math: the block table only changes *which*
+# pool block the BlockSpec index map DMAs in per grid step (scalar-prefetch
+# gather — see _paged_call); logical positions / masking are untouched, so
+# paged output is bit-identical to the dense kernel at equal block size.
+def _paged_body(length_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                acc, m, l, **kw):
+    _etap_body(length_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l, **kw)
+
+
+def _paged_body_fused(length_ref, table_ref, q_ref, k_ref, o_ref,
+                      acc, m, l, **kw):
+    _etap_body(length_ref, q_ref, k_ref, None, o_ref, acc, m, l, **kw)
+
+
 def _call(q, k, v, length, *, scale, block, interpret, fused_dv):
     BG, H, Dk = q.shape
     S = k.shape[1]
@@ -126,6 +140,71 @@ def etap_decode_mla_pallas(q, kv, dv: int, length, *, scale: float,
     """MLA-fused ETAP: single latent stream, V = kv[..., :dv]."""
     return _call(q, kv, None, length, scale=scale, block=block,
                  interpret=interpret, fused_dv=dv)
+
+
+# ----------------------------------------------------------- paged variants
+def _paged_call(q, pool, v_pool, table, lengths, *, scale, interpret,
+                fused_dv):
+    """Paged single-pass ETAP: KV lives in a block pool [N, page, D]; the
+    block table [B, max_blocks] rides in as a scalar-prefetch operand and
+    the K/V BlockSpec index maps dereference it, so each grid step DMAs
+    pool block ``table[b, j]`` — the gather happens inside the grid, never
+    as a materialized dense copy."""
+    B, H, Dk = q.shape
+    page = pool.shape[1]
+    nb = table.shape[1]
+    Dv = fused_dv or v_pool.shape[2]
+
+    in_specs = [
+        pl.BlockSpec((1, H, Dk), lambda b, j, *_: (b, 0, 0)),            # q
+        pl.BlockSpec((1, page, Dk),
+                     lambda b, j, lens, tab: (tab[b, j], 0, 0)),         # pool
+    ]
+    operands = [q, pool]
+    if not fused_dv:
+        in_specs.append(pl.BlockSpec(
+            (1, page, Dv), lambda b, j, lens, tab: (tab[b, j], 0, 0)))
+        operands.append(v_pool)
+
+    kw = dict(scale=scale, block=page, nb=nb, fused_dv=fused_dv)
+    body = functools.partial(
+        _paged_body_fused if fused_dv else _paged_body, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, H, Dv), lambda b, j, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Dv, H), jnp.float32),                  # Accᵀ
+            pltpu.VMEM((1, H), jnp.float32),                   # m
+            pltpu.VMEM((1, H), jnp.float32),                   # ℓ
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (B, H, Dv), (v_pool if v_pool is not None else pool).dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), table.astype(jnp.int32), *operands)
+
+
+def etap_decode_paged_pallas(q, k_pool, v_pool, table, lengths, *,
+                             scale: float, interpret: bool = True):
+    """Paged (separate-V) ETAP decode kernel. q: [B,H,Dk]; pools
+    [N,page,D*]; table: [B,max_blocks]; lengths: [B]. Returns [B,H,Dv]."""
+    return _paged_call(q, k_pool, v_pool, table, lengths, scale=scale,
+                       interpret=interpret, fused_dv=0)
+
+
+def etap_decode_mla_paged_pallas(q, kv_pool, dv: int, table, lengths, *,
+                                 scale: float, interpret: bool = True):
+    """Paged MLA-fused ETAP: single latent pool, V = pool[..., :dv]."""
+    return _paged_call(q, kv_pool, None, table, lengths, scale=scale,
+                       interpret=interpret, fused_dv=dv)
 
 
 # ------------------------------------------------------- split-KV (phase 1)
@@ -242,3 +321,77 @@ def etap_partial_pallas(q, k, v, length, *, scale: float, block: int,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(length.astype(jnp.int32), *operands)
+
+
+def _paged_partial_body(length_ref, table_ref, q_ref, k_ref, v_ref,
+                        m_out, l_out, acc_out, acc, m, l, **kw):
+    _etap_partial_body(length_ref, q_ref, k_ref, v_ref, m_out, l_out,
+                       acc_out, acc, m, l, **kw)
+
+
+def _paged_partial_body_fused(length_ref, table_ref, q_ref, k_ref,
+                              m_out, l_out, acc_out, acc, m, l, **kw):
+    _etap_partial_body(length_ref, q_ref, k_ref, None, m_out, l_out,
+                       acc_out, acc, m, l, **kw)
+
+
+def etap_paged_partial_pallas(q, k_pool, v_pool, table, lengths, *,
+                              scale: float, n_splits: int,
+                              interpret: bool = True, fused_dv: int = 0):
+    """Phase-1 split-KV over a PAGED cache: same (b, split, block-walk) grid
+    as :func:`etap_partial_pallas`, but each grid step's KV block is pool
+    block ``table[b, s*npb + j]`` (scalar-prefetch gather).  Splits are cut
+    at page granularity — callers pad the table to an ``n_splits * npb``
+    width with null blocks (masked via `lengths`), so ``n_splits`` composes
+    with paging with no repacking.  Returns fp32 (m, l, accT) stats."""
+    B, H, Dk = q.shape
+    page = k_pool.shape[1]
+    nb = table.shape[1]
+    Dv = fused_dv or v_pool.shape[2]
+    assert nb % n_splits == 0, (nb, n_splits)
+    npb = nb // n_splits
+
+    in_specs = [
+        pl.BlockSpec((1, H, Dk), lambda b, s, j, *_: (b, 0, 0)),         # q
+        pl.BlockSpec((1, page, Dk),
+                     lambda b, s, j, lens, tab, npb=npb:
+                     (tab[b, s * npb + j], 0, 0)),                       # pool
+    ]
+    operands = [q, k_pool]
+    if not fused_dv:
+        in_specs.append(pl.BlockSpec(
+            (1, page, Dv),
+            lambda b, s, j, lens, tab, npb=npb: (tab[b, s * npb + j], 0, 0)))
+        operands.append(v_pool)
+
+    kw = dict(scale=scale, block=page, npb=npb, fused_dv=fused_dv)
+    body = functools.partial(
+        _paged_partial_body_fused if fused_dv else _paged_partial_body, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_splits, npb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, H), lambda b, s, j, *_: (b, s, 0)),      # m
+            pl.BlockSpec((1, 1, H), lambda b, s, j, *_: (b, s, 0)),      # ℓ
+            pl.BlockSpec((1, 1, Dv, H), lambda b, s, j, *_: (b, s, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Dv, H), jnp.float32),                  # Accᵀ
+            pltpu.VMEM((1, H), jnp.float32),                   # m
+            pltpu.VMEM((1, H), jnp.float32),                   # ℓ
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_splits, Dv, H), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), table.astype(jnp.int32), *operands)

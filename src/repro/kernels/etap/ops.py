@@ -9,9 +9,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.etap.combine import combine_splits
-from repro.kernels.etap.etap import (etap_decode_mla_pallas,
-                                     etap_decode_pallas, etap_partial_pallas)
-from repro.kernels.etap.schedule import plan_splits, split_geometry
+from repro.kernels.etap.etap import (etap_decode_mla_paged_pallas,
+                                     etap_decode_mla_pallas,
+                                     etap_decode_paged_pallas,
+                                     etap_decode_pallas,
+                                     etap_paged_partial_pallas,
+                                     etap_partial_pallas)
+from repro.kernels.etap.schedule import (paged_split_geometry, plan_splits,
+                                         plan_splits_paged, split_geometry)
 
 
 def _pad_seq(x, multiple: int):
@@ -112,6 +117,92 @@ def etap_decode_splitkv(q, k, v, length=None, *, scale: float,
                           n_splits=n_splits, interpret=interpret, fused_dv=0)
     return combine_splits(m, l, accT, transposed=True, out_dtype=v.dtype,
                           combine=combine, interpret=interpret)
+
+
+# ------------------------------------------------------------------- paged
+def _pad_table(table, multiple: int):
+    """Pad the block table to a column multiple with null blocks (id 0);
+    padded entries are masked via `lengths` exactly like the dense padded
+    tail, so split geometry never repacks the pool."""
+    nb = table.shape[1]
+    pad = (-nb) % multiple
+    if pad:
+        table = jnp.pad(table, ((0, 0), (0, pad)))
+    return table
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def etap_decode_paged(q, k_pool, v_pool, table, lengths, *, scale: float,
+                      interpret: bool = True):
+    """Paged ETAP decode. q: [B,H,Dk]; pools: [N,page,D*]; table:
+    [B,max_blocks] int32; lengths: [B]. Returns [B,H,Dv].  Bit-identical
+    to :func:`etap_decode` at block == page on the same logical rows."""
+    return etap_decode_paged_pallas(q, k_pool, v_pool, table, lengths,
+                                    scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("dv", "scale", "interpret"))
+def etap_decode_mla_paged(q, kv_pool, dv: int, table, lengths, *,
+                          scale: float, interpret: bool = True):
+    """Paged MLA-fused ETAP: one latent pool, V = pool[..., :dv]."""
+    return etap_decode_mla_paged_pallas(q, kv_pool, dv, table, lengths,
+                                        scale=scale, interpret=interpret)
+
+
+def _paged_partial(q, k_pool, v_pool, table, lengths, *, scale, n_splits,
+                   interpret, fused_dv):
+    npb, padded_nb = paged_split_geometry(table.shape[1], n_splits)
+    table = _pad_table(table, padded_nb)
+    return etap_paged_partial_pallas(q, k_pool, v_pool, table, lengths,
+                                     scale=scale, n_splits=n_splits,
+                                     interpret=interpret, fused_dv=fused_dv)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "n_splits", "combine",
+                                             "interpret"))
+def etap_decode_paged_splitkv(q, k_pool, v_pool, table, lengths, *,
+                              scale: float, n_splits: int = 0,
+                              combine: str = "pallas",
+                              interpret: bool = True):
+    """Two-phase split-KV ETAP decode over a paged cache. n_splits = 0 →
+    auto via the block-granular scheduler; 1 routes to the single-pass
+    paged kernel (bit-identical, same argument as the dense path)."""
+    B, H, _ = q.shape
+    page = k_pool.shape[1]
+    if not n_splits:
+        n_splits = plan_splits_paged(B, table.shape[1], page, H,
+                                     v_pool.shape[2]).n_splits
+    if n_splits <= 1:
+        return etap_decode_paged(q, k_pool, v_pool, table, lengths,
+                                 scale=scale, interpret=interpret)
+    m, l, accT = _paged_partial(q, k_pool, v_pool, table, lengths,
+                                scale=scale, n_splits=n_splits,
+                                interpret=interpret, fused_dv=0)
+    return combine_splits(m, l, accT, transposed=True,
+                          out_dtype=v_pool.dtype, combine=combine,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("dv", "scale", "n_splits",
+                                             "combine", "interpret"))
+def etap_decode_mla_paged_splitkv(q, kv_pool, dv: int, table, lengths, *,
+                                  scale: float, n_splits: int = 0,
+                                  combine: str = "pallas",
+                                  interpret: bool = True):
+    """Two-phase split-KV over a paged MLA latent pool (V = pool[..., :dv])."""
+    B, H, _ = q.shape
+    page = kv_pool.shape[1]
+    if not n_splits:
+        n_splits = plan_splits_paged(B, table.shape[1], page, H, dv).n_splits
+    if n_splits <= 1:
+        return etap_decode_mla_paged(q, kv_pool, dv, table, lengths,
+                                     scale=scale, interpret=interpret)
+    m, l, accT = _paged_partial(q, kv_pool, None, table, lengths,
+                                scale=scale, n_splits=n_splits,
+                                interpret=interpret, fused_dv=dv)
+    return combine_splits(m, l, accT, transposed=True,
+                          out_dtype=kv_pool.dtype, combine=combine,
+                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("dv", "scale", "block",

@@ -58,6 +58,30 @@ def split_geometry(S: int, block: int, n_splits: int):
     return block, npb, n_splits * npb * block
 
 
+def paged_split_geometry(nb: int, n_splits: int):
+    """Split geometry over a PAGED cache: the atomic unit is one KV page
+    (block-table entry), so splits always land on page boundaries.
+    Returns (nb_per_split, padded_nb); callers pad the block table to
+    `padded_nb` columns with null blocks (masked via lengths)."""
+    nb = max(int(nb), 1)
+    npb = max(1, -(-nb // n_splits))
+    return npb, n_splits * npb
+
+
+def plan_splits_paged(B: int, nb: int, page: int, H: int, Dv: int, *,
+                      num_cores: int = DEFAULT_CORES,
+                      kv_itemsize: int = 2) -> SplitPlan:
+    """Block-granular split plan for a paged decode: same occupancy /
+    granularity / stat-traffic caps as :func:`plan_splits` with the KV
+    block pinned to the page size (the paged kernels can only cut the
+    context where the block table cuts it), so the chosen ``n_splits``
+    composes with paging without repacking the pool."""
+    plan = plan_splits(B, max(int(nb), 1) * page, H, Dv, block=page,
+                       num_cores=num_cores, kv_itemsize=kv_itemsize)
+    npb, _ = paged_split_geometry(nb, plan.n_splits)
+    return SplitPlan(n_splits=plan.n_splits, block=page, nb_per_split=npb)
+
+
 def plan_splits(BG: int, S: int, H: int, Dv: int, *, block: int = 512,
                 num_cores: int = DEFAULT_CORES,
                 kv_itemsize: int = 2) -> SplitPlan:

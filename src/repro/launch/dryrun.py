@@ -20,7 +20,6 @@ from repro.launch import hlo_analysis, roofline
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import TrainConfig, make_serve_step, make_train_step
 from repro.models import model
-from repro.models.frontend import FRONTEND_DIMS
 from repro.optim import optimizers as opt
 from repro.sharding import rules
 

@@ -4,17 +4,13 @@ the server. Gradient accumulation runs as a lax.scan over microbatches
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import model
 from repro.optim import optimizers as opt
-from repro.sharding.rules import constrain
-from jax.sharding import PartitionSpec as P
 
 
 @dataclass(frozen=True)

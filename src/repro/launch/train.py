@@ -7,7 +7,6 @@ production mesh is exercised by dryrun.py. Features under test here:
  - --restart resumes from the latest committed checkpoint
  - failure-injection drill (--fail-at N) for the fault-tolerance test
  - straggler detector fed with per-step wall times
- - optional int8 error-feedback gradient compression (--compress)
 
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch smollm_360m \
@@ -16,12 +15,10 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import ARCH_IDS, get_config, reduced
@@ -29,7 +26,6 @@ from repro.data.pipeline import DataConfig, make_batch
 from repro.launch.steps import TrainConfig, make_train_step
 from repro.models import model
 from repro.optim import optimizers as opt
-from repro.optim.compress import init_residual, pod_reduce_with_feedback
 from repro.runtime.fault_tolerance import (FailureInjector, HeartbeatRegistry,
                                            StragglerDetector)
 
@@ -63,7 +59,6 @@ def run(args) -> dict:
     injector = FailureInjector(fail_at_steps=(args.fail_at,) if args.fail_at else ())
     heart = HeartbeatRegistry(timeout_s=60)
     strag = StragglerDetector()
-    residual = init_residual(params) if args.compress else None
 
     losses = []
     pending_save = None
@@ -109,7 +104,6 @@ def parse_args(argv=None):
     ap.add_argument("--restart", action="store_true")
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a worker failure at this step (drill)")
-    ap.add_argument("--compress", action="store_true")
     ap.add_argument("--log-every", type=int, default=5)
     return ap.parse_args(argv)
 

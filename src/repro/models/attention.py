@@ -17,6 +17,7 @@ from repro import compat
 from repro.core.etap import (decode_attention, gqa_decode_xla, gqa_to_grouped,
                              seq_sharded_gqa_decode)
 from repro.models import layers
+from repro.runtime import paged_cache
 from repro.sharding.rules import BATCH, constrain, seq_shardable
 
 NEG_INF = -1e30
@@ -229,8 +230,44 @@ def attention_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
     return out, {"k": kc, "v": vc}
 
 
+def attention_decode_paged(params, cfg, x, cache, table, lengths, *,
+                           mode: str = "etap", n_splits=None):
+    """One-token GQA decode against a PAGED cache: {"k","v"} pools of shape
+    [num_blocks, page, K, hd], a shared block table and per-sequence
+    lengths (ragged — each new token lands at its own `lengths[b]`).
+
+    The new KV row is appended through the table; attention then gathers
+    the pool into the native dense [B,S,K,hd] layout and reuses the
+    existing GQA paths — correctness-first: the GQA pool carries a kv-head
+    axis the grouped paged kernels don't stride over (yet), so only MLA
+    (the paper's serving path) streams its pool in place.  Local-window
+    attention keeps its dense ring buffer (a window never pages)."""
+    assert cfg.attention_kind == "full", \
+        "paged cache supports full attention (local windows stay dense)"
+    B, D = x.shape
+    positions = lengths[:, None].astype(jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x[:, None, :], positions)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                       # [B,H,hd],[B,K,hd]
+    kc = paged_cache.append_rows(cache["k"], table, lengths, k)
+    vc = paged_cache.append_rows(cache["v"], table, lengths, v)
+    kd = paged_cache.gather_blocks(kc, table)                 # [B,S,K,hd]
+    vd = paged_cache.gather_blocks(vc, table)
+    o = gqa_decode(q, kd, vd, lengths + 1,
+                   scale=cfg.resolved_head_dim ** -0.5, mode=mode,
+                   use_kernels=cfg.use_kernels,
+                   block=cache["k"].shape[1], n_splits=n_splits)
+    out = layers.dense(o.reshape(B, -1), params["w_o"])
+    return out, {"k": kc, "v": vc}
+
+
 def init_attention_cache(cfg, batch: int, max_len: int, dtype):
     Kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     n = min(max_len, cfg.window_size) if cfg.attention_kind == "local" else max_len
     return {"k": jnp.zeros((batch, n, Kv, hd), dtype),
             "v": jnp.zeros((batch, n, Kv, hd), dtype)}
+
+
+def init_attention_cache_paged(cfg, layout, dtype):
+    Kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (layout.num_blocks, layout.block_size, Kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

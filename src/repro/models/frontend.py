@@ -5,9 +5,6 @@ in token space (EnCodec codes / text tokens) via the normal embedding table.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.models import layers
 
 FRONTEND_DIMS = {"audio": 128, "vision": 1024}

@@ -11,9 +11,6 @@ The KV/state cache pytree mirrors the grouping, so decode scans layers with
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -21,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import mla as mla_mod
 from repro.models import attention, frontend, layers, mamba, moe, rglru
+from repro.runtime import paged_cache as paged_cache_mod
 from repro.sharding.rules import BATCH, constrain
 
 AUX_KEYS = ("load_balance", "router_z")
@@ -117,12 +115,20 @@ def _block_seq(params, cfg, sig, x, positions, collect_cache: bool):
     return x + f, aux, cache
 
 
-def _block_decode(params, cfg, sig, x, cache, pos, mode, kv_splits=None):
-    """One block, one token. x: [B,D]. Returns (x, new_cache)."""
+def _block_decode(params, cfg, sig, x, cache, pos, mode, kv_splits=None,
+                  cache_layout="dense", block_table=None, lengths=None):
+    """One block, one token. x: [B,D]. Returns (x, new_cache).
+    cache_layout "paged": the attention cache is a block pool; `pos` is
+    replaced by per-sequence `lengths` + the shared `block_table`."""
     kind, is_moe = sig
     h = layers.rms_norm(x, params["norm1"], cfg.norm_eps)
     if kind == "attn":
-        if cfg.attention_kind == "mla":
+        if cache_layout == "paged":
+            fn = (mla_mod.mla_decode_paged if cfg.attention_kind == "mla"
+                  else attention.attention_decode_paged)
+            mixed, cache = fn(params["mix"], cfg, h, cache, block_table,
+                              lengths, mode=mode, n_splits=kv_splits)
+        elif cfg.attention_kind == "mla":
             mixed, cache = mla_mod.mla_decode(params["mix"], cfg, h, cache, pos,
                                               mode=mode, n_splits=kv_splits)
         else:
@@ -260,6 +266,56 @@ def init_cache(cfg, batch: int, max_len: int):
     ]
 
 
+def init_paged_cache(cfg, layout):
+    """Paged serving cache: one KV block pool per layer (stacked per layer
+    group, like :func:`init_cache`), all layers sharing ONE block table
+    owned by the scheduler (runtime/paged_cache.BlockPool) — every layer
+    sees the same sequence structure, so block ids are reused across
+    layers and only the pools differ.  Attention-only stacks: recurrent /
+    SSM state is per-sequence, not per-token — nothing to page."""
+    dtype = cfg.jax_dtype
+    for kind in cfg.layer_kinds():
+        if kind != "attn":
+            raise ValueError(
+                f"paged cache requires an attention-only stack (got {kind})")
+    groups = layer_groups(cfg)
+
+    def one(sig):
+        if cfg.attention_kind == "mla":
+            return mla_mod.init_mla_cache_paged(cfg, layout, dtype)
+        return attention.init_attention_cache_paged(cfg, layout, dtype)
+
+    def stack(leaf_fn, n):
+        one_c = leaf_fn()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                            one_c)
+
+    return [
+        {f"b{j}": stack(lambda s=s: one(s), g["n"])
+         for j, s in enumerate(g["sigs"])}
+        for g in groups
+    ]
+
+
+def write_prefill_paged(cfg, paged, prefill_cache, block_ids):
+    """Scatter ONE admitted request's prefill cache rows into its allocated
+    pool blocks.  `prefill_cache` is the pytree from :func:`prefill` run at
+    batch=1, max_len=prompt_len; `paged` the pytree from
+    :func:`init_paged_cache`; `block_ids` [nb] the ids the scheduler
+    granted the request (logical order).  The scatter itself runs eagerly
+    (cheap per-op dispatch); what compiles per shape is the PREFILL that
+    produces `prefill_cache` — the serve loop quantizes prompt lengths
+    into buckets to bound those re-traces."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+
+    def leaf(pool, rows):
+        rows = rows[:, 0]                       # [n_layers, S, *F]: drop B=1
+        return jax.vmap(
+            lambda p, r: paged_cache_mod.scatter_blocks(p, r, ids))(pool, rows)
+
+    return jax.tree.map(leaf, paged, prefill_cache)
+
+
 def _pad_cache_rows(cfg, sig, cache_rows, max_len, batch_s):
     """Pad per-layer prefill cache rows out to the serving cache layout."""
     kind, _ = sig
@@ -295,13 +351,22 @@ def prefill(params, cfg, batch, max_len: int):
 
 
 def decode_step(params, cfg, cache, tokens, pos, *, mode: str = "etap",
-                kv_splits=None):
+                kv_splits=None, cache_layout: str = "dense",
+                block_table=None, lengths=None):
     """One serving step. tokens: [B] int32; pos: scalar index of the new token.
     Returns (logits [B,V], new_cache). kv_splits: split-KV count for decode
     attention (None = auto-scheduled per layer geometry — serving picks up
     split-KV with zero caller changes; exception: the native-layout GQA XLA
     path only splits on an explicit count, since splitting there costs a
-    cache reshuffle copy — see models/attention.gqa_decode)."""
+    cache reshuffle copy — see models/attention.gqa_decode).
+
+    cache_layout "paged" (the serving default in launch/serve.py): `cache`
+    is the pool pytree from :func:`init_paged_cache`, and `block_table`
+    [B, max_blocks] + per-sequence `lengths` [B] replace the shared scalar
+    `pos` — ragged sequences decode in one batch (continuous batching)."""
+    assert cache_layout in ("dense", "paged"), cache_layout
+    if cache_layout == "paged":
+        assert block_table is not None and lengths is not None
     x = constrain(layers.embed(params["embed"], tokens), P(BATCH, None))
     groups = layer_groups(cfg)
     new_caches = []
@@ -311,7 +376,10 @@ def decode_step(params, cfg, cache, tokens, pos, *, mode: str = "etap",
             ncs = {}
             for j, sig in enumerate(g["sigs"]):
                 x, nc = _block_decode(lp[f"b{j}"], cfg, sig, x, lc[f"b{j}"],
-                                      pos, mode, kv_splits)
+                                      pos, mode, kv_splits,
+                                      cache_layout=cache_layout,
+                                      block_table=block_table,
+                                      lengths=lengths)
                 ncs[f"b{j}"] = nc
             return x, ncs
         x, gc_new = jax.lax.scan(body, x, (gparams, gcache))

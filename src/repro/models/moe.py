@@ -89,7 +89,6 @@ def moe_ffn(params, cfg, x, *, dropless: bool = False):
         C = min(S, max(k, 4 * -(-k * S // E)))
     else:
         C = min(_capacity(S, cfg), max(4, S))
-    T = S * k
 
     logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), params["router"])
     gates = jax.nn.softmax(logits, axis=-1)

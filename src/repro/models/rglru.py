@@ -74,7 +74,6 @@ def rglru_decode(params, cfg, x, state):
     """x: [B,D]; state {"h": [B,W] f32, "conv": [B,k-1,W]} -> (out, state)."""
     gate = jax.nn.gelu(layers.dense(x, params["w_gate"]))
     xt = layers.dense(x, params["w_x"])                        # [B,W]
-    k = params["conv_w"].shape[0]
     window = jnp.concatenate([state["conv"], xt[:, None, :]], axis=1)  # [B,k,W]
     xw = jnp.einsum("bkw,kw->bw", window, params["conv_w"]) + params["conv_b"]
     a, bx = _gates(params, xw)

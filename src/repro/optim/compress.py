@@ -12,7 +12,6 @@ Two integration points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

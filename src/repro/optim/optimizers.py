@@ -6,9 +6,7 @@ param PartitionSpec; adafactor row/col stats inherit the reduced specs).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,222 @@
+"""Paged KV-cache subsystem: block-pool allocator + block-table array ops.
+
+The serving cache is a *pool* of fixed-size KV blocks (pages) shared by all
+sequences, FlashMLA/vLLM-style, instead of a dense ``[B, max_len]`` slab:
+
+    pool        [num_blocks, block_size, *feat]   (per layer; jnp, on device)
+    block_table [B, max_blocks]  int32            (shared across layers)
+    lengths     [B]              int32            (tokens written per slot)
+
+Sequence ``b``'s token at logical position ``t`` lives at
+``pool[block_table[b, t // block_size], t % block_size]``.  Block ids are
+granted by a host-side free-list (:class:`BlockPool`); the block *table* is
+what the paged Pallas kernels prefetch to gather KV through (see
+``kernels/etap/etap.py``).
+
+Allocator invariants (DESIGN.md §8):
+  · Block 0 is the reserved NULL block: never allocated, every padded /
+    released table entry points at it.  Inactive batch slots therefore
+    write their (ignored) decode rows into block 0 and read back finite
+    garbage that is masked by ``length`` — no branches anywhere on device.
+  · Admission reserves blocks for the request's full budget
+    (prompt + max new tokens) up front, so a decode step can never fail
+    mid-flight; running out of blocks is an *admission refusal*, which the
+    continuous-batching scheduler (launch/serve.py) handles by queueing.
+  · ``release`` returns blocks to the free list and zeroes the table row,
+    so ids are recycled across requests (tests/test_paged.py proves
+    reuse-after-release and the refusal path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static geometry of a paged cache."""
+    block_size: int            # tokens per KV block (page)
+    num_blocks: int            # pool size, INCLUDING the reserved null block
+    max_blocks: int            # block-table width (max logical blocks/seq)
+
+    def __post_init__(self):
+        assert self.block_size >= 1 and self.max_blocks >= 1
+        assert self.num_blocks >= 2, "need at least null block + one real block"
+
+    @property
+    def max_len(self) -> int:
+        return self.max_blocks * self.block_size
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(1, -(-int(n_tokens) // self.block_size))
+
+
+def layout_for(batch_slots: int, max_len: int, block_size: int = 64,
+               spare_blocks: int = 0) -> PagedLayout:
+    """A layout that can hold `batch_slots` full-length sequences (+spares)."""
+    max_blocks = max(1, -(-int(max_len) // block_size))
+    return PagedLayout(block_size=block_size,
+                       num_blocks=1 + batch_slots * max_blocks + spare_blocks,
+                       max_blocks=max_blocks)
+
+
+class BlockPool:
+    """Host-side free-list allocator over `layout.num_blocks` KV blocks,
+    owning the block table and per-slot lengths for `batch_slots` slots."""
+
+    def __init__(self, layout: PagedLayout, batch_slots: int):
+        self.layout = layout
+        self.batch_slots = batch_slots
+        # pop order low→high keeps tables human-readable in tests/logs
+        self._free = deque(range(1, layout.num_blocks))      # 0 = null block
+        self.table = np.zeros((batch_slots, layout.max_blocks), np.int32)
+        self.lengths = np.zeros((batch_slots,), np.int32)
+        self.active = np.zeros((batch_slots,), bool)
+        self._owned: list[list[int]] = [[] for _ in range(batch_slots)]
+        self._budget = np.zeros((batch_slots,), np.int32)    # reserved tokens
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def free_slots(self) -> list[int]:
+        return [b for b in range(self.batch_slots) if not self.active[b]]
+
+    def can_admit(self, max_total_len: int) -> bool:
+        """Admission predicate: a free batch slot AND enough free blocks to
+        reserve the request's whole token budget."""
+        if max_total_len > self.layout.max_len:
+            return False
+        need = self.layout.blocks_for(max_total_len)
+        return bool(self.free_slots()) and need <= self.num_free
+
+    def admit(self, prompt_len: int, max_total_len: int) -> Optional[int]:
+        """Reserve a slot + blocks for `max_total_len` tokens; returns the
+        slot id, or None (admission refusal — the caller keeps the request
+        queued).  `prompt_len` rows are accounted as already written (the
+        caller scatters them via :func:`scatter_blocks`)."""
+        assert 0 < prompt_len <= max_total_len
+        if not self.can_admit(max_total_len):
+            return None
+        slot = self.free_slots()[0]
+        need = self.layout.blocks_for(max_total_len)
+        ids = [self._free.popleft() for _ in range(need)]
+        self._owned[slot] = ids
+        self.table[slot] = NULL_BLOCK
+        self.table[slot, :need] = ids
+        self.lengths[slot] = prompt_len
+        self._budget[slot] = max_total_len
+        self.active[slot] = True
+        return slot
+
+    def block_ids(self, slot: int) -> np.ndarray:
+        """Physical block ids owned by `slot` (allocation order = logical)."""
+        return np.asarray(self._owned[slot], np.int32)
+
+    def append(self, slot: int) -> None:
+        """Account one generated token for `slot` (the device-side write is
+        :func:`append_rows`).  Never allocates: admission already reserved
+        the full budget."""
+        assert self.active[slot]
+        assert self.lengths[slot] < self._budget[slot], \
+            f"slot {slot} exceeded its reserved budget"
+        self.lengths[slot] += 1
+
+    def release(self, slot: int) -> None:
+        """Return `slot`'s blocks to the free list and null its table row."""
+        assert self.active[slot]
+        self._free.extend(self._owned[slot])
+        self._owned[slot] = []
+        self.table[slot] = NULL_BLOCK
+        self.lengths[slot] = 0
+        self._budget[slot] = 0
+        self.active[slot] = False
+
+    def device_views(self):
+        """(block_table [B, max_blocks], lengths [B]) as device arrays.
+
+        COPIES, not views: jnp.array, never jnp.asarray.  On CPU jaxlib
+        zero-copies aligned numpy buffers into device arrays, and JAX
+        dispatch is async — an in-flight decode step would read the
+        allocator's live table/lengths AFTER a subsequent host-side
+        append()/release() mutated them (shifting the token write slot),
+        a race that corrupts cache rows nondeterministically."""
+        return jnp.array(self.table), jnp.array(self.lengths)
+
+
+# --------------------------------------------------------- device-side ops
+def append_rows(pool, table, lengths, rows):
+    """Write one new token row per sequence at its current length.
+
+    pool: [N, bs, *F]; table: [B, max_blocks] int32; lengths: [B] int32
+    (write position = lengths[b]); rows: [B, *F].  Inactive slots (all-null
+    table, length 0) land in the null block — harmless, masked on read."""
+    bs = pool.shape[1]
+    blk = lengths // bs
+    slot = lengths % bs
+    pid = jnp.take_along_axis(table, blk[:, None], axis=1)[:, 0]   # [B]
+    return pool.at[pid, slot].set(rows)
+
+
+def scatter_blocks(pool, rows, block_ids):
+    """Scatter a prompt's rows into the listed physical blocks.
+
+    pool: [N, bs, *F]; rows: [S, *F]; block_ids: [nb] int32 with
+    nb * bs >= S.  The tail of the last block is zero-filled; decode
+    appends overwrite it slot by slot."""
+    bs = pool.shape[1]
+    nb = block_ids.shape[0]
+    pad = nb * bs - rows.shape[0]
+    rows = jnp.pad(rows, ((0, pad),) + ((0, 0),) * (rows.ndim - 1))
+    return pool.at[block_ids].set(
+        rows.reshape(nb, bs, *rows.shape[1:]).astype(pool.dtype))
+
+
+def gather_blocks(pool, table):
+    """Dense [B, max_blocks * bs, *F] view of the paged rows (the XLA
+    fallback / oracle path — the Pallas kernels never materialize this;
+    they index the pool through the table inside the grid)."""
+    B, nb = table.shape
+    bs = pool.shape[1]
+    g = pool[table]                                   # [B, nb, bs, *F]
+    return g.reshape(B, nb * bs, *pool.shape[2:])
+
+
+def dense_to_paged(dense, lengths, layout: PagedLayout):
+    """Pack a dense [B, S, *F] cache into (pool, BlockPool) — test/bench
+    helper and the dense→paged migration path.  Allocation order follows
+    slot order, so tables are NOT identity maps of logical order across
+    sequences (which is exactly what the kernels must be robust to)."""
+    B, S = dense.shape[:2]
+    pool_host = np.zeros((layout.num_blocks, layout.block_size)
+                         + dense.shape[2:], np.asarray(dense).dtype)
+    bp = BlockPool(layout, B)
+    dense_np = np.asarray(dense)
+    for b in range(B):
+        n = int(lengths[b])
+        slot = bp.admit(n, n)
+        assert slot == b, "fresh pool admits in slot order"
+        ids = bp.block_ids(b)
+        nb = len(ids)
+        padded = np.zeros((nb * layout.block_size,) + dense.shape[2:],
+                          dense_np.dtype)
+        padded[:n] = dense_np[b, :n]
+        pool_host[ids] = padded.reshape(nb, layout.block_size,
+                                        *dense.shape[2:])
+    return jnp.asarray(pool_host), bp
+
+
+def tree_append_rows(cache, table, lengths, rows):
+    """:func:`append_rows` over matching (pool, rows) pytrees whose leaves
+    carry a leading stacked-layer axis [n, ...] (the model's grouped cache)."""
+    return jax.tree.map(
+        lambda p, r: jax.vmap(
+            lambda pp, rr: append_rows(pp, table, lengths, rr))(p, r),
+        cache, rows)

@@ -122,5 +122,6 @@ def test_constant_memory_decode_state_for_ssm_and_hybrid():
         cfg = reduced(get_config(arch))
         small = model.init_cache(cfg, batch=1, max_len=64)
         big = model.init_cache(cfg, batch=1, max_len=4096)
-        sz = lambda c: sum(x.size for x in jax.tree.leaves(c))
+        def sz(c):
+            return sum(x.size for x in jax.tree.leaves(c))
         assert sz(big) == sz(small)   # window=32 in reduced cfg, both clamp

@@ -2,7 +2,6 @@
 with hand-computable workloads — it is the source of the roofline terms."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze, parse_module

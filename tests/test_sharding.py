@@ -8,9 +8,7 @@ import textwrap
 import jax
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
-
-from repro.configs import get_config, reduced
+from repro.configs import get_config
 from repro.models import model
 from repro.sharding import rules
 

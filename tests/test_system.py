@@ -1,10 +1,7 @@
 """End-to-end system behaviour: training convergence, microbatch-accumulation
 equivalence, optimizers, ETAP core equivalences inside the full model, data
 pipeline determinism, and a miniature sharded end-to-end run."""
-import functools
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
