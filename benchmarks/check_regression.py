@@ -1,0 +1,144 @@
+"""Benchmark-regression gate: diff a fresh BENCH_*.json against a committed
+baseline and fail red when throughput regressed past the tolerance.
+
+CI (the smoke job) stashes the committed baselines before running
+``benchmarks/run.py --smoke``, then gates the fresh artifacts:
+
+    python benchmarks/check_regression.py \
+        --baseline .bench-baseline/BENCH_smoke.json --fresh BENCH_smoke.json
+
+Runs locally the same way.
+
+Gate criterion: the GEOMETRIC MEAN of per-row fresh/baseline time ratios
+must stay under 1 + tolerance (default +20%).  Per-row ratios are printed
+and flagged, but a single row does not trip the gate: shared CI runners
+have heavy-tailed scheduler noise that can double one row of an unchanged
+binary, while a real regression (the injected-30% self-test, a de-optimized
+kernel on the hot path) moves the whole distribution.  ``--per-row`` opts
+into the strict mode for quiet machines.  Rows faster than ``--min-us`` on
+either side are excluded — microsecond rows are pure timer noise.
+
+Exit codes: 0 green; 1 regression (geomean past tolerance, or a baseline
+row missing from the fresh run); 2 refusal — schema_version / config
+mismatch means the artifacts are incompatible and are never silently
+diffed (regenerate with ``benchmarks/run.py --smoke`` and commit).
+``--inject-slowdown 1.3`` scales the fresh timings to prove the gate
+trips (the CI self-test and the PR-description demo)."""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+REQUIRED_META = ("schema_version", "config")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _rows(doc: dict) -> dict:
+    # us == 0 rows are artifact markers ("smoke/json"), not measurements
+    return {r["name"]: float(r["us"]) for r in doc.get("rows", [])
+            if float(r["us"]) > 0.0}
+
+
+def compare(base: dict, fresh: dict, *, tolerance: float,
+            inject_slowdown: float = 1.0, min_us: float = 1000.0,
+            per_row: bool = False) -> int:
+    bm, fm = base.get("meta", {}), fresh.get("meta", {})
+    for key in REQUIRED_META:
+        if bm.get(key) != fm.get(key):
+            print(f"REFUSED: baseline {key}={bm.get(key)!r} vs fresh "
+                  f"{key}={fm.get(key)!r} — incompatible artifacts; "
+                  f"regenerate + commit the baseline instead of diffing.")
+            return 2
+    if bm.get("jax_version") != fm.get("jax_version"):
+        print(f"note: jax {bm.get('jax_version')} (baseline) vs "
+              f"{fm.get('jax_version')} (fresh) — comparing anyway")
+    print(f"baseline sha={bm.get('git_sha')}  fresh sha={fm.get('git_sha')}"
+          f"  tolerance=+{tolerance:.0%}"
+          + (f"  INJECTED x{inject_slowdown}" if inject_slowdown != 1.0
+             else ""))
+
+    rb, rf = _rows(base), _rows(fresh)
+    missing = sorted(set(rb) - set(rf))
+    for name in missing:
+        print(f"MISSING  {name}: in baseline but not in fresh run "
+              f"(renames must regenerate the baseline)")
+    print(f"{'row':44s} {'base_us':>10s} {'fresh_us':>10s} {'ratio':>7s}")
+    ratios, slow = [], []
+    for name in sorted(rb.keys() & rf.keys()):
+        us = rf[name] * inject_slowdown
+        if rb[name] < min_us or rf[name] < min_us:
+            print(f"{name:44s} {rb[name]:10.1f} {us:10.1f}    —   "
+                  f"(< {min_us:.0f}us noise floor, ungated)")
+            continue
+        ratio = us / rb[name]
+        ratios.append(ratio)
+        flag = ("SLOW   " if ratio > 1 + tolerance else
+                "faster " if ratio < 1 - tolerance else "ok     ")
+        print(f"{name:44s} {rb[name]:10.1f} {us:10.1f} {ratio:6.2f}x {flag}")
+        if ratio > 1 + tolerance:
+            slow.append(name)
+    for name in sorted(set(rf) - set(rb)):
+        print(f"new      {name}: {rf[name]:.1f}us (no baseline; add one by "
+              f"committing the fresh artifact)")
+
+    geomean = math.exp(sum(map(math.log, ratios)) / len(ratios)) \
+        if ratios else 1.0
+    print(f"\ngeomean ratio over {len(ratios)} gated rows: {geomean:.3f}x "
+          f"(gate: <= {1 + tolerance:.2f}x)"
+          + (f"; {len(slow)} row(s) individually past tolerance: "
+             f"{', '.join(slow)}" if slow else ""))
+    failed = bool(missing) or geomean > 1 + tolerance \
+        or (per_row and bool(slow))
+    if failed:
+        print(f"FAIL: throughput regressed past +{tolerance:.0%} vs the "
+              f"committed baseline.")
+        if len(ratios) > 1:
+            # near-uniform shift = every row slowed by ~the same factor —
+            # the signature of a slower MACHINE (baseline from different
+            # hardware), indistinguishable in principle from a uniform code
+            # regression. Surface it so a first run on new CI hardware is
+            # diagnosed in one read.
+            logs = [math.log(r) for r in ratios]
+            mean = sum(logs) / len(logs)
+            sd = math.sqrt(sum((x - mean) ** 2 for x in logs) / len(logs))
+            if sd < 0.15:
+                print("note: the slowdown is near-uniform across rows — "
+                      "this is what a slower machine looks like. If the "
+                      "baseline was generated on different hardware, "
+                      "commit the fresh artifact (uploaded by the smoke "
+                      "job) as the new baseline.")
+        return 1
+    print("OK: no regression past the tolerance.")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline BENCH_*.json")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional slowdown (default 0.2 = +20%%)")
+    ap.add_argument("--min-us", type=float, default=1000.0,
+                    help="rows faster than this on either side are ungated")
+    ap.add_argument("--per-row", action="store_true",
+                    help="also fail when any single row is past tolerance")
+    ap.add_argument("--inject-slowdown", type=float, default=1.0,
+                    help="scale fresh timings — self-test that the gate "
+                         "actually trips (e.g. 1.3 must exit 1)")
+    args = ap.parse_args(argv)
+    return compare(_load(args.baseline), _load(args.fresh),
+                   tolerance=args.tolerance,
+                   inject_slowdown=args.inject_slowdown,
+                   min_us=args.min_us, per_row=args.per_row)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,7 +43,10 @@ def bench(fn, q, k, v, block):
         out = fn(q, k, v, None, scale=DIM ** -0.5, block=block)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.mean(ts))
+    # min, not mean: scheduler noise on shared CPU runners only ever ADDS
+    # time, and the ±20% regression gate (check_regression.py) diffs these
+    # rows — the mean let one slow outlier fake a regression.
+    return float(np.min(ts))
 
 
 def run(full: bool = False, block: int = 512):
@@ -115,8 +118,11 @@ def run_splitkv(full: bool = False, block: int = 512,
 
 def write_splitkv_json(rows, path: str = "BENCH_splitkv.json"):
     import json
+
+    from benchmarks.run import bench_meta
     with open(path, "w") as f:
-        json.dump({"geometry": {"heads": HEADS, "dim": DIM, "dv": DV},
+        json.dump({"meta": bench_meta(path.rsplit(".", 1)[0]),
+                   "geometry": {"heads": HEADS, "dim": DIM, "dv": DV},
                    "rows": rows}, f, indent=2)
     return path
 

@@ -15,9 +15,13 @@ The paged layout stores the latent cache as a pool of fixed-size KV blocks
 block table, so ragged-length requests are admitted into free batch slots
 whenever the allocator can reserve their token budget and leave the batch
 the moment they finish — continuous batching, with true-tokens-served
-throughput accounting.  `--cache-layout dense` keeps the legacy fixed-batch
-scan.  Below: the paged cache is a *layout* change, not a model change —
-per-step logits match the dense path to float noise.
+throughput accounting.  Prompts run as CHUNKED paged prefill
+(`--prefill-chunk` tokens at a time, written straight into the pool blocks)
+interleaved with the decode batch under a per-step `--token-budget`, so
+admitting a long prompt never stalls in-flight decodes.  `--cache-layout
+dense` keeps the legacy fixed-batch scan.  Below: the paged cache is a
+*layout* change, not a model change — per-step logits match the dense path
+to float noise, with the paged cache built by chunked prefill alone.
 """
 import jax
 import jax.numpy as jnp
@@ -64,13 +68,21 @@ _, dense_c, _ = model.prefill(params_p, cfg_p, {"tokens": tokens},
 layout = pc.layout_for(B, PROMPT + GEN, block_size=16)
 bp = pc.BlockPool(layout, B)
 paged = model.init_paged_cache(cfg_p, layout)
-_, pcache, _ = model.prefill(params_p, cfg_p, {"tokens": tokens},
-                             max_len=PROMPT)
 for b in range(B):
-    slot = bp.admit(PROMPT, PROMPT + GEN)
+    slot = bp.admit(0, PROMPT + GEN)         # cold admission: blocks only
     assert slot == b
-    one = jax.tree.map(lambda a, b=b: a[:, b:b + 1], pcache)
-    paged = model.write_prefill_paged(cfg_p, paged, one, bp.block_ids(b))
+# chunked prefill straight into the pool blocks — one chunk straddles a
+# page boundary (16-token pages, 13-token chunk), none stage a dense cache
+CHUNK = 13
+for lo in range(0, PROMPT, CHUNK):
+    hi = min(lo + CHUNK, PROMPT)
+    table, lengths = bp.device_views()
+    _, paged = model.prefill_chunk(params_p, cfg_p, paged,
+                                   tokens[:, lo:hi], table, lengths)
+    for b in range(B):
+        bp.extend(b, hi - lo)
+print(f"chunked paged prefill: {PROMPT} tokens in {-(-PROMPT // CHUNK)} "
+      f"chunks of <= {CHUNK} across {layout.block_size}-token pages")
 
 # teacher-force the ETAP token stream through the paged cache and compare
 # per-step logits (greedy re-decoding would amplify near-tie argmax flips)

@@ -368,6 +368,79 @@ def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
                                block=k_pool.shape[1])
 
 
+def etap_prefill_xla(q, k, v, start, *, scale: float, block: int = 512):
+    """Chunked ETAP prefill, online softmax over KV blocks (the XLA twin of
+    the paged Pallas prefill kernel — DESIGN.md §9).
+
+    q: [B, Cq, H, Dk] chunk queries at absolute positions start[b] + c;
+    k: [B, S, Dk]; v: [B, S, Dv] (the chunk's own rows already written into
+    k/v by the caller); start: [B].  The Cq*H query tile rides the N side of
+    every GEMM while KV blocks stay on M, with a causal mask per column:
+    key position p is live for chunk row c iff p <= start + c.
+    Returns [B, Cq, H, Dv]."""
+    B, Cq, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[2]
+    CH = Cq * H
+    block = min(block, S)
+    nb = _blocks(S, block)
+
+    qT = jnp.swapaxes(q.reshape(B, CH, Dk), 1, 2).astype(jnp.float32)
+    # column c of the transposed score tile is query row c // H
+    qpos = start[:, None] + jnp.arange(CH, dtype=jnp.int32)[None, :] // H
+
+    def step(j, carry):
+        m, l, accT = carry                        # [B,CH] [B,CH] [B,Dv,CH]
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
+        sT = jnp.einsum("bkd,bdh->bkh", kj, qT.astype(k.dtype),
+                        preferred_element_type=jnp.float32) * scale
+        kpos = j * block + jnp.arange(block, dtype=jnp.int32)  # [block]
+        valid = kpos[None, :, None] <= qpos[:, None, :]        # [B,block,CH]
+        sT = jnp.where(valid, sT, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sT, axis=1))
+        pT = jnp.exp(sT - m_new[:, None, :])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pT, axis=1)
+        accT = accT * corr[:, None, :] + jnp.einsum(
+            "bkv,bkh->bvh", vj, pT.astype(v.dtype),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, accT)
+
+    init = (jnp.full((B, CH), NEG_INF, jnp.float32),
+            jnp.zeros((B, CH), jnp.float32),
+            jnp.zeros((B, Dv, CH), jnp.float32))
+    m, l, accT = jax.lax.fori_loop(0, nb, step, init)
+    oT = accT / l[:, None, :]                                  # [B,Dv,CH]
+    return jnp.swapaxes(oT, 1, 2).reshape(B, Cq, H, Dv).astype(v.dtype)
+
+
+def prefill_attention_paged(q, k_pool, v_pool, table, start, *, scale: float,
+                            mode: str = "etap", use_kernels: bool = False,
+                            interpret: bool = True, dv: int = 0):
+    """Chunked paged prefill attention entry point (the prefill analogue of
+    :func:`decode_attention_paged`).
+
+    q: [B,Cq,H,Dk]; pools: [N,page,D*]; table: [B,max_blocks]; start: [B]
+    tokens in the pool before the chunk — the chunk's latent/KV rows must
+    already be appended (runtime.paged_cache.append_chunk), so the kernels
+    stream ONE pool source for both the past context and the live chunk.
+    v_pool None → MLA-fused (V = first `dv` pool columns).  `mode` is
+    accepted for signature parity with decode; both modes share the
+    transposed loop here — prefill tiles are never thin on M."""
+    del mode
+    if use_kernels:
+        from repro.kernels.etap import ops as etap_ops
+        if v_pool is None:
+            return etap_ops.etap_prefill_mla_paged(
+                q, k_pool, dv, table, start, scale=scale, interpret=interpret)
+        return etap_ops.etap_prefill_paged(
+            q, k_pool, v_pool, table, start, scale=scale, interpret=interpret)
+    k, v = _gather_kv(k_pool, v_pool, table, dv)
+    return etap_prefill_xla(q, k, v, start, scale=scale,
+                            block=k_pool.shape[1])
+
+
 def gqa_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
                     vary_axis=None):
     """ETAP partial stats for GQA in the native [B,S,K,hd] cache layout.

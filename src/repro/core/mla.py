@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core.etap import (decode_attention, decode_attention_paged,
-                             seq_sharded_decode)
+                             prefill_attention_paged, seq_sharded_decode)
 from repro.models import layers
 from repro.models.attention import causal_attention
 from repro.runtime import paged_cache
@@ -157,6 +157,43 @@ def mla_decode_paged(params, cfg, x, cache, table, lengths, *,
         use_kernels=cfg.use_kernels, n_splits=n_splits,
         dv=m.kv_lora_rank)                                    # [B,H,512]
     return _absorbed_out(params, cfg, o_lat, x.dtype), {"c": pool}
+
+
+def mla_prefill_chunk(params, cfg, x, cache, table, lengths, *,
+                      mode: str = "etap"):
+    """Absorbed-form CHUNKED prefill against a paged latent cache
+    (DESIGN.md §9).
+
+    x: [B,C,D] — C prompt tokens per sequence at absolute positions
+    lengths[b] + c; cache: {"c": pool}; table: [B,max_blocks]; lengths: [B]
+    tokens already written (the chunk start).  The chunk's latent rows are
+    appended into the pool FIRST, then attention runs over pool positions
+    <= each query's own position — causal inside the chunk, full over the
+    previously-written context.  Mathematically this is the single-shot
+    naive prefill: q·k = [q_nope·W_uk ; q_rope]·[c_kv ; k_rope] and
+    o = P·(W_uv c_kv) = (P·c_kv)·W_uv, so scores and outputs agree with
+    mla_train to float noise while streaming the 576-wide latent once.
+    Returns (out [B,C,D], {"c": updated pool})."""
+    m, H = cfg.mla, cfg.num_heads
+    B, C, D = x.shape
+    positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    q_nope, q_rope = _queries(params, cfg, x, positions)      # [B,C,H,*]
+    # absorb W_uk into the chunk queries: [B,C,H,nope] x [kv,H,nope]
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bchd,khd->bchk", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.concatenate([q_c, q_rope], axis=-1)               # [B,C,H,latent]
+    c_rows = _latent(params, cfg, x, positions)               # [B,C,latent]
+    pool = paged_cache.append_chunk(cache["c"], table, lengths, c_rows)
+    o_lat = prefill_attention_paged(
+        q, pool, None, table, lengths, scale=m.qk_head_dim ** -0.5,
+        mode=mode, use_kernels=cfg.use_kernels,
+        dv=m.kv_lora_rank)                                    # [B,C,H,kv]
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bchk,khd->bchd", o_lat.astype(jnp.float32),
+                   w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = layers.dense(o.reshape(B, C, H * m.v_head_dim), params["w_o"])
+    return out, {"c": pool}
 
 
 def init_mla_cache(cfg, batch: int, max_len: int, dtype):

@@ -207,6 +207,127 @@ def etap_decode_mla_paged_pallas(q, kv_pool, dv: int, table, lengths, *,
                        interpret=interpret, fused_dv=dv)
 
 
+# ---------------------------------------------------------- chunked prefill
+def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                       acc_ref, m_ref, l_ref, *, scale: float, page: int,
+                       nb: int, heads: int, fused_dv: int):
+    """Chunked paged ETAP prefill (DESIGN.md §9): the decode body with the
+    single query row widened to a [Cq, H] tile, flattened to CH = Cq*H
+    online-softmax columns.  The KV walk streams the sequence's pool blocks
+    (chunk rows included — the caller appends the chunk before attending),
+    and the mask is CAUSAL per column: key position j*page+r is live for
+    column c iff  r_pos <= start + c // H  (query c//H is the chunk-local
+    row, start the tokens already in the pool).  Blocks past the chunk end
+    are fully masked and drop out with weight exp(-inf - m) = 0; block 0 of
+    the walk always holds position 0, so no column is ever all-masked."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_blk = k_ref[0]                                   # [page, Dk]
+    q = q_ref[0]                                       # [CH, Dk]
+    # Sᵀ = K·Qᵀ — pool block rows on M, the Cq*H query tile on N.
+    sT = jax.lax.dot_general(
+        k_blk, q, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # [page, CH]
+
+    start = start_ref[pl.program_id(0)]
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, sT.shape, 0)
+    qpos = start + jax.lax.broadcasted_iota(jnp.int32, sT.shape, 1) // heads
+    sT = jnp.where(kpos <= qpos, sT, NEG_INF)          # causal chunk-vs-pool
+
+    m_old = m_ref[...]                                 # [1, CH]
+    m_new = jnp.maximum(m_old, jnp.max(sT, axis=0, keepdims=True))
+    p = jnp.exp(sT - m_new)                            # [page, CH]
+    corr = jnp.exp(m_old - m_new)                      # [1, CH]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
+    m_ref[...] = m_new
+
+    v_blk = k_blk[:, :fused_dv] if fused_dv else v_ref[0]
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        v_blk, p, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [Dv, CH]
+
+    @pl.when(j == nb - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).T.astype(o_ref.dtype)
+
+
+def _prefill_body_fused(start_ref, table_ref, q_ref, k_ref, o_ref,
+                        acc, m, l, **kw):
+    _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, None, o_ref,
+                       acc, m, l, **kw)
+
+
+def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
+                  fused_dv):
+    B, CH, Dk = q.shape
+    page = pool.shape[1]
+    nb = table.shape[1]
+    Dv = fused_dv or v_pool.shape[2]
+
+    in_specs = [
+        pl.BlockSpec((1, CH, Dk), lambda b, j, *_: (b, 0, 0)),           # q
+        pl.BlockSpec((1, page, Dk),
+                     lambda b, j, starts, tab: (tab[b, j], 0, 0)),       # pool
+    ]
+    operands = [q, pool]
+    if not fused_dv:
+        in_specs.append(pl.BlockSpec(
+            (1, page, Dv), lambda b, j, starts, tab: (tab[b, j], 0, 0)))
+        operands.append(v_pool)
+
+    kw = dict(scale=scale, page=page, nb=nb, heads=heads, fused_dv=fused_dv)
+    body = functools.partial(
+        _prefill_body_fused if fused_dv else _etap_prefill_body, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, CH, Dv), lambda b, j, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Dv, CH), jnp.float32),                 # Accᵀ
+            pltpu.VMEM((1, CH), jnp.float32),                  # m
+            pltpu.VMEM((1, CH), jnp.float32),                  # ℓ
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (B, CH, Dv), (v_pool if v_pool is not None else pool).dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(start.astype(jnp.int32), table.astype(jnp.int32), *operands)
+
+
+def etap_prefill_paged_pallas(q, k_pool, v_pool, table, start, *,
+                              scale: float, interpret: bool = True):
+    """Paged (separate-V) chunked ETAP prefill. q: [B,Cq,H,Dk]; pools
+    [N,page,D*]; table [B,max_blocks]; start [B] = tokens already in the
+    pool BEFORE this chunk (the chunk's own rows must already be appended).
+    Returns [B,Cq,H,Dv]."""
+    B, Cq, H, Dk = q.shape
+    o = _prefill_call(q.reshape(B, Cq * H, Dk), k_pool, v_pool, table, start,
+                      heads=H, scale=scale, interpret=interpret, fused_dv=0)
+    return o.reshape(B, Cq, H, o.shape[-1])
+
+
+def etap_prefill_mla_paged_pallas(q, kv_pool, dv: int, table, start, *,
+                                  scale: float, interpret: bool = True):
+    """Paged MLA-fused chunked prefill: single latent pool, V = pool[..., :dv]."""
+    B, Cq, H, Dk = q.shape
+    o = _prefill_call(q.reshape(B, Cq * H, Dk), kv_pool, None, table, start,
+                      heads=H, scale=scale, interpret=interpret, fused_dv=dv)
+    return o.reshape(B, Cq, H, dv)
+
+
 # ------------------------------------------------------- split-KV (phase 1)
 def _etap_partial_body(length_ref, q_ref, k_ref, v_ref,
                        m_out_ref, l_out_ref, acc_out_ref,

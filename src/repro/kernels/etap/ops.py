@@ -14,7 +14,9 @@ from repro.kernels.etap.etap import (etap_decode_mla_paged_pallas,
                                      etap_decode_paged_pallas,
                                      etap_decode_pallas,
                                      etap_paged_partial_pallas,
-                                     etap_partial_pallas)
+                                     etap_partial_pallas,
+                                     etap_prefill_mla_paged_pallas,
+                                     etap_prefill_paged_pallas)
 from repro.kernels.etap.schedule import (paged_split_geometry, plan_splits,
                                          plan_splits_paged, split_geometry)
 
@@ -147,6 +149,25 @@ def etap_decode_mla_paged(q, kv_pool, dv: int, table, lengths, *,
     """Paged MLA-fused ETAP: one latent pool, V = pool[..., :dv]."""
     return etap_decode_mla_paged_pallas(q, kv_pool, dv, table, lengths,
                                         scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def etap_prefill_paged(q, k_pool, v_pool, table, start, *, scale: float,
+                       interpret: bool = True):
+    """Chunked paged ETAP prefill (separate-V). q: [B,Cq,H,Dk]; pools:
+    [N,page,D*]; table: [B,max_blocks] int32; start: [B] tokens already in
+    the pool before the chunk (whose rows must already be appended).
+    Returns [B,Cq,H,Dv] — causal within the chunk, full over the pool."""
+    return etap_prefill_paged_pallas(q, k_pool, v_pool, table, start,
+                                     scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("dv", "scale", "interpret"))
+def etap_prefill_mla_paged(q, kv_pool, dv: int, table, start, *,
+                           scale: float, interpret: bool = True):
+    """Chunked paged MLA-fused ETAP prefill: one latent pool, V = pool[..., :dv]."""
+    return etap_prefill_mla_paged_pallas(q, kv_pool, dv, table, start,
+                                         scale=scale, interpret=interpret)
 
 
 def _paged_partial(q, k_pool, v_pool, table, lengths, *, scale, n_splits,

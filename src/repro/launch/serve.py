@@ -7,10 +7,13 @@ Two cache layouts:
   paged (default) — continuous batching against the block-pool KV cache
       (runtime/paged_cache.py): ragged-length requests are admitted into
       free batch slots whenever the allocator can reserve their full token
-      budget, decode steps run the whole ragged batch through the paged
-      ETAP kernels, and finished sequences release their blocks so queued
-      requests join mid-stream.  Throughput is length-aware: only tokens
-      actually generated count.
+      budget, their prompts run as CHUNKED paged prefill interleaved with
+      the decode batch under a per-step token budget (--prefill-chunk /
+      --token-budget — admission never stalls in-flight decodes), decode
+      steps run the whole ragged batch through the paged ETAP kernels, and
+      finished sequences release their blocks so queued requests join
+      mid-stream.  Throughput is length-aware: only tokens actually
+      generated count.
 
   dense — the legacy fixed-batch path: one jitted lax.scan over steps, every
       sequence runs every step (useful as the single-request-shape baseline
@@ -104,15 +107,32 @@ def _make_requests(args, vocab: int):
 
 
 def run_paged(args, cfg) -> dict:
-    """Continuous-batching serve loop over the paged KV cache.
+    """Continuous-batching serve loop: CHUNKED paged prefill interleaved
+    with decode under a per-step token budget (DESIGN.md §9).
 
-    Per step: (1) admit queued requests into free slots while the block
-    pool can reserve their full budget (admission refusal = stay queued —
-    never a mid-flight OOM), (2) one jitted paged decode step over the
-    whole ragged batch, (3) retire finished sequences and release their
-    blocks.  FCFS admission (head-of-line blocking is the simple policy;
-    slot/pool pressure shows up as `refusals` — the number of distinct
-    requests that were refused at least once before admission)."""
+    Per step:
+      (1) admit queued requests COLD into free slots while the block pool
+          can reserve their full budget (admission refusal = stay queued —
+          never a mid-flight OOM).  Admission reserves blocks only; no
+          prompt tokens run yet.
+      (2) spend the step's token budget (``--token-budget``): the decode
+          batch (one token per decoding slot) is committed first, then
+          prefill chunks of ``--prefill-chunk`` tokens from admitted-but-
+          cold requests are appended FCFS while they fit the remainder —
+          so a long prompt never head-of-line-blocks in-flight decodes
+          (chunked-prefill continuous batching, vLLM/Sarathi-style).  Each
+          chunk runs ``model.prefill_chunk`` straight into the request's
+          pool blocks: no dense staging cache, no post-hoc scatter, peak
+          extra memory = one chunk.  When nothing is decoding, one chunk
+          always runs even if it exceeds the budget (progress guarantee).
+      (3) one jitted paged decode step over the decoding slots (cold
+          slots' table rows are masked to the null block, so the decode
+          write can't touch a half-prefilled prompt), then retire finished
+          sequences and release their blocks.
+
+    Re-tracing is bounded: prefill_chunk compiles once per distinct chunk
+    size, and chunk sizes are min(--prefill-chunk, remaining prompt) over
+    the quantized prompt buckets of :func:`_make_requests`."""
     params = model.init(jax.random.PRNGKey(args.seed), cfg)
     B = args.batch
     max_total = args.prompt + args.gen
@@ -122,35 +142,56 @@ def run_paged(args, cfg) -> dict:
     cache = model.init_paged_cache(cfg, layout)
     waiting = deque(_make_requests(args, cfg.vocab_size))
     n_requests = len(waiting)
+    chunk = max(1, args.prefill_chunk)
+    # auto budget: the whole decode batch plus one prefill chunk per step
+    budget = args.token_budget if args.token_budget > 0 else B + chunk
 
+    # the cache pytree is DONATED through both jitted entries (as the dense
+    # path donates through its scan carry): the pool is updated in place
+    # instead of copied per call, keeping admission's peak extra memory at
+    # one chunk, not a second pool.
     step_fn = jax.jit(lambda p, c, t, table, lengths: model.decode_step(
         p, cfg, c, t, None, mode=args.mode, kv_splits=args.kv_splits,
-        cache_layout="paged", block_table=table, lengths=lengths))
+        cache_layout="paged", block_table=table, lengths=lengths),
+        donate_argnums=(1,))
     # warm the decode step OUTSIDE the timed region (the dense path also
     # compiles before its timer): all slots inactive → the dummy rows land
-    # in the null block, the real pool state is untouched, and the cache
-    # that call returns is discarded.
+    # in the reserved null block, so rebinding the returned cache (the
+    # donated input is gone) leaves every real pool row untouched.
     table0, lengths0 = bp.device_views()
-    jax.block_until_ready(step_fn(
-        params, cache, jnp.zeros((B,), jnp.int32), table0, lengths0)[0])
+    logits0, cache = step_fn(params, cache, jnp.zeros((B,), jnp.int32),
+                             table0, lengths0)
+    jax.block_until_ready(logits0)
+
+    # one jitted entry — jax.jit caches per chunk-size shape on its own
+    prefill_fn = jax.jit(lambda p, cch, t, table, lens: model.prefill_chunk(
+        p, cfg, cch, t, table, lens, mode=args.mode), donate_argnums=(1,))
 
     cur = np.zeros((B,), np.int64)            # next token per slot
     remaining = np.zeros((B,), np.int64)      # gen budget left per slot
+    decoding = np.zeros((B,), bool)           # prompt fully prefilled
+    pf_pos = np.zeros((B,), np.int64)         # prompt tokens prefilled
+    prompt_of = [None] * B
+    gen_of = np.zeros((B,), np.int64)
+    admit_seq = np.zeros((B,), np.int64)      # FCFS order among cold slots
     req_of = [None] * B
     outputs = {}                              # id -> [generated tokens]
     tokens_served = 0
     refused_ids = set()                       # requests refused >= once
-    steps = 0
+    steps = 0                                 # decode steps
+    prefill_chunks = 0
+    interleaved_steps = 0                     # decode step + >=1 chunk
+    n_admitted = 0
     t_prefill = 0.0
 
     t0 = time.perf_counter()
     while waiting or bp.active.any():
-        # ---- admit: FCFS while a slot + the full block budget fit
+        # ---- (1) admit COLD: FCFS while a slot + the full block budget fit
         while waiting:
             req = waiting[0]
             plen = int(req["prompt"].shape[0])
             total = plen + req["gen"]
-            slot = bp.admit(plen, total)
+            slot = bp.admit(0, total)
             if slot is None:
                 if bp.active.any():
                     refused_ids.add(req["id"])
@@ -159,53 +200,95 @@ def run_paged(args, cfg) -> dict:
                     f"request {req['id']} ({total} tokens) can never fit "
                     f"the pool ({layout.num_blocks - 1} blocks)")
             waiting.popleft()
-            tp = time.perf_counter()
-            logits, pcache, _ = model.prefill(
-                params, cfg, {"tokens": req["prompt"][None, :]}, max_len=plen)
-            need = layout.blocks_for(plen + req["gen"])
-            cache = model.write_prefill_paged(
-                cfg, cache, pcache, bp.block_ids(slot)[:need])
-            t_prefill += time.perf_counter() - tp
-            cur[slot] = int(jnp.argmax(logits[0], -1))
-            remaining[slot] = req["gen"]
             req_of[slot] = req["id"]
+            prompt_of[slot] = req["prompt"]
+            gen_of[slot] = req["gen"]
+            pf_pos[slot] = 0
+            decoding[slot] = False
+            admit_seq[slot] = n_admitted
+            n_admitted += 1
             outputs[req["id"]] = []
 
-        # ---- one ragged decode step over every active slot
-        table, lengths = bp.device_views()
-        logits, cache = step_fn(params, cache,
-                                jnp.array(cur, jnp.int32), table, lengths)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        steps += 1
+        dec_mask = bp.active & decoding       # fixed for the whole step: a
+        # slot finishing its prompt below starts decoding NEXT step
+        decode_slots = [b for b in range(B) if dec_mask[b]]
+        spent = len(decode_slots)             # decode tokens this step
 
-        # ---- retire / bookkeep (host side — the scheduler's job)
-        for b in range(B):
-            if not bp.active[b]:
-                continue
-            outputs[req_of[b]].append(int(cur[b]))
-            tokens_served += 1
-            bp.append(b)
-            remaining[b] -= 1
-            cur[b] = nxt[b]
-            if remaining[b] == 0:
-                bp.release(b)
-                req_of[b] = None
+        # ---- (2) prefill chunks from cold slots under the budget
+        pf_tokens = 0
+        cold = sorted((b for b in range(B)
+                       if bp.active[b] and not decoding[b]),
+                      key=lambda b: admit_seq[b])
+        for b in cold:
+            plen = int(prompt_of[b].shape[0])
+            c = min(chunk, plen - int(pf_pos[b]))
+            if spent + c > budget and spent > 0:
+                break                         # budget spent — defer chunk
+            tp = time.perf_counter()
+            toks_c = prompt_of[b][None, int(pf_pos[b]):int(pf_pos[b]) + c]
+            trow = jnp.array(bp.table[b:b + 1])
+            lrow = jnp.array(bp.lengths[b:b + 1])
+            logits, cache = prefill_fn(params, cache, toks_c, trow, lrow)
+            jax.block_until_ready(logits)
+            t_prefill += time.perf_counter() - tp
+            bp.extend(b, c)
+            pf_pos[b] += c
+            spent += c
+            pf_tokens += c
+            prefill_chunks += 1
+            if int(pf_pos[b]) == plen:        # prompt done -> start decoding
+                cur[b] = int(jnp.argmax(logits[0, -1]))
+                remaining[b] = gen_of[b]
+                decoding[b] = True
+
+        # ---- (3) one ragged decode step over the decoding slots
+        if decode_slots:
+            # mask cold slots to the null block: the decode write for them
+            # must not land inside a half-prefilled prompt
+            table_m = bp.table.copy()
+            lens_m = bp.lengths.copy()
+            for b in range(B):
+                if not dec_mask[b]:
+                    table_m[b] = 0
+                    lens_m[b] = 0
+            logits, cache = step_fn(params, cache, jnp.array(cur, jnp.int32),
+                                    jnp.array(table_m), jnp.array(lens_m))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            steps += 1
+            if pf_tokens:
+                interleaved_steps += 1
+
+            # ---- retire / bookkeep (host side — the scheduler's job)
+            for b in decode_slots:
+                outputs[req_of[b]].append(int(cur[b]))
+                tokens_served += 1
+                bp.append(b)
+                remaining[b] -= 1
+                cur[b] = nxt[b]
+                if remaining[b] == 0:
+                    bp.release(b)
+                    req_of[b] = None
+                    decoding[b] = False
     t_total = time.perf_counter() - t0
     t_decode = t_total - t_prefill
 
     # true tokens served (NOT batch * gen: sequences join/leave mid-stream)
     print(f"[serve] arch={args.arch} layout=paged mode={args.mode} B={B} "
           f"requests={n_requests} page={layout.block_size} "
-          f"blocks={layout.num_blocks - 1}")
-    print(f"[serve] {tokens_served} tokens in {steps} steps "
+          f"blocks={layout.num_blocks - 1} chunk={chunk} budget={budget}")
+    print(f"[serve] {tokens_served} tokens in {steps} decode steps "
           f"({tokens_served / max(steps, 1):.2f} tokens/step occupancy); "
-          f"prefill {t_prefill*1e3:.1f}ms; decode {t_decode*1e3:.1f}ms "
+          f"{prefill_chunks} prefill chunks, {interleaved_steps} steps "
+          f"interleaved prefill+decode; prefill {t_prefill*1e3:.1f}ms; "
+          f"decode {t_decode*1e3:.1f}ms "
           f"({tokens_served/max(t_decode, 1e-9):.1f} tok/s); "
           f"requests refused at least once: {len(refused_ids)}")
     first = outputs[0][:16] if outputs.get(0) else []
     print(f"[serve] sample generation (request 0): {first}")
     return {"outputs": outputs, "tokens_served": tokens_served,
             "steps": steps, "refusals": len(refused_ids),
+            "prefill_chunks": prefill_chunks,
+            "interleaved_steps": interleaved_steps,
             "t_prefill": t_prefill, "t_decode": t_decode}
 
 
@@ -236,6 +319,12 @@ def parse_args(argv=None):
                     help="ragged request count for the paged serve loop")
     ap.add_argument("--page-size", type=int, default=64,
                     help="tokens per KV block (FlashMLA uses 64)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens per paged prefill chunk "
+                         "(chunked-prefill continuous batching)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-step token budget shared by the decode batch "
+                         "and prefill chunks (0 = batch + prefill-chunk)")
     ap.add_argument("--spare-blocks", type=int, default=0,
                     help="extra pool blocks beyond batch*max_blocks")
     ap.add_argument("--kv-splits", type=int, default=None,

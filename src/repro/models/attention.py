@@ -260,6 +260,44 @@ def attention_decode_paged(params, cfg, x, cache, table, lengths, *,
     return out, {"k": kc, "v": vc}
 
 
+def attention_prefill_chunk(params, cfg, x, cache, table, lengths, *,
+                            mode: str = "etap"):
+    """CHUNKED prefill of C prompt tokens against a PAGED GQA cache.
+
+    x: [B,C,D]; cache: {"k","v"} pools [num_blocks, page, K, hd]; table:
+    [B,max_blocks]; lengths: [B] tokens already written (the chunk start).
+    The chunk's K/V rows are appended through the table first; attention
+    then gathers the pool into the native dense [B,S,K,hd] layout and runs
+    a causally-masked chunk-vs-context product — same correctness-first
+    gather route as :func:`attention_decode_paged` (the GQA pool carries a
+    kv-head axis the paged kernels don't stride over; MLA, the paper's
+    serving path, streams its pool in place via core.etap)."""
+    assert cfg.attention_kind == "full", \
+        "paged cache supports full attention (local windows stay dense)"
+    del mode
+    B, C, D = x.shape
+    positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions)  # [B,C,H,hd],[B,C,K,hd]
+    kc = paged_cache.append_chunk(cache["k"], table, lengths, k)
+    vc = paged_cache.append_chunk(cache["v"], table, lengths, v)
+    kd = paged_cache.gather_blocks(kc, table)                 # [B,S,K,hd]
+    vd = paged_cache.gather_blocks(vc, table)
+    H = cfg.num_heads
+    S = kd.shape[1]
+    kh = _expand_kv(kd, H)
+    vh = _expand_kv(vd, H)
+    s = jnp.einsum("bchd,bshd->bhcs", q, kh,
+                   preferred_element_type=jnp.float32) * cfg.resolved_head_dim ** -0.5
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    valid = kpos[None, None, :] <= positions[:, :, None]      # [B,C,S]
+    s = jnp.where(valid[:, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhcs,bshv->bchv", p, vh,
+                   preferred_element_type=jnp.float32).astype(v.dtype)
+    out = layers.dense(o.reshape(B, C, -1), params["w_o"])
+    return out, {"k": kc, "v": vc}
+
+
 def init_attention_cache(cfg, batch: int, max_len: int, dtype):
     Kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     n = min(max_len, cfg.window_size) if cfg.attention_kind == "local" else max_len

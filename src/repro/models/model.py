@@ -18,7 +18,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import mla as mla_mod
 from repro.models import attention, frontend, layers, mamba, moe, rglru
-from repro.runtime import paged_cache as paged_cache_mod
 from repro.sharding.rules import BATCH, constrain
 
 AUX_KEYS = ("load_balance", "router_z")
@@ -297,23 +296,66 @@ def init_paged_cache(cfg, layout):
     ]
 
 
-def write_prefill_paged(cfg, paged, prefill_cache, block_ids):
-    """Scatter ONE admitted request's prefill cache rows into its allocated
-    pool blocks.  `prefill_cache` is the pytree from :func:`prefill` run at
-    batch=1, max_len=prompt_len; `paged` the pytree from
-    :func:`init_paged_cache`; `block_ids` [nb] the ids the scheduler
-    granted the request (logical order).  The scatter itself runs eagerly
-    (cheap per-op dispatch); what compiles per shape is the PREFILL that
-    produces `prefill_cache` — the serve loop quantizes prompt lengths
-    into buckets to bound those re-traces."""
-    ids = jnp.asarray(block_ids, jnp.int32)
+def _block_prefill_chunk(params, cfg, sig, x, cache, table, lengths, mode):
+    """One block over a C-token prompt chunk against the paged cache.
+    x: [B,C,D].  Paged caches are attention-only (init_paged_cache), so
+    the recurrent/SSM kinds never reach here."""
+    kind, is_moe = sig
+    assert kind == "attn", kind
+    h = layers.rms_norm(x, params["norm1"], cfg.norm_eps)
+    fn = (mla_mod.mla_prefill_chunk if cfg.attention_kind == "mla"
+          else attention.attention_prefill_chunk)
+    mixed, cache = fn(params["mix"], cfg, h, cache, table, lengths, mode=mode)
+    x = x + mixed
+    h2 = layers.rms_norm(x, params["norm2"], cfg.norm_eps)
+    if is_moe:
+        # serving semantics: DROPLESS routing, same as decode_step — a
+        # prompt token is never dropped at inference. This deliberately
+        # diverges from the capacity-dropped routing of the training-path
+        # :func:`forward` that single-shot prefill reuses, so the chunked ==
+        # single-shot equivalence oracle holds exactly only for non-MoE
+        # stacks (or capacities that never drop, e.g. reduced configs);
+        # tests/test_prefill_chunk.py checks MoE via chunked-vs-one-chunk
+        # self-consistency instead.
+        f, _ = moe.moe_ffn(params["ffn"], cfg, h2, dropless=True)
+    else:
+        f = layers.mlp(params["ffn"], h2)
+    return x + f, cache
 
-    def leaf(pool, rows):
-        rows = rows[:, 0]                       # [n_layers, S, *F]: drop B=1
-        return jax.vmap(
-            lambda p, r: paged_cache_mod.scatter_blocks(p, r, ids))(pool, rows)
 
-    return jax.tree.map(leaf, paged, prefill_cache)
+def prefill_chunk(params, cfg, cache, tokens, block_table, lengths, *,
+                  mode: str = "etap"):
+    """CHUNKED paged prefill: run C prompt tokens per sequence directly
+    against the block-pool serving cache (DESIGN.md §9).
+
+    tokens: [B,C] the chunk (token c sits at absolute position
+    lengths[b] + c); cache: the pytree from :func:`init_paged_cache`;
+    block_table: [B,max_blocks]; lengths: [B] tokens already written — the
+    caller (launch/serve.py) advances it by C between chunks
+    (BlockPool.extend).  Each attention layer appends its chunk rows into
+    its pool and attends causally over chunk + previously-written context,
+    so there is NO dense staging cache and no post-hoc scatter — admission
+    prefill becomes a sequence of per-chunk appends whose peak memory is
+    one chunk, not one prompt.  Returns (logits [B,C,V], new cache); the
+    final chunk's last-position logits seed the first decode token."""
+    x = constrain(layers.embed(params["embed"], tokens), P(BATCH, None, None))
+    groups = layer_groups(cfg)
+    new_caches = []
+    for g, gparams, gcache in zip(groups, params["groups"], cache):
+        def body(x, xs):
+            lp, lc = xs
+            ncs = {}
+            for j, sig in enumerate(g["sigs"]):
+                x, nc = _block_prefill_chunk(lp[f"b{j}"], cfg, sig, x,
+                                             lc[f"b{j}"], block_table,
+                                             lengths, mode)
+                ncs[f"b{j}"] = nc
+            return x, ncs
+        x, gc_new = jax.lax.scan(body, x, (gparams, gcache))
+        new_caches.append(gc_new)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x)
+    return logits, new_caches
 
 
 def _pad_cache_rows(cfg, sig, cache_rows, max_len, batch_s):

@@ -101,8 +101,12 @@ class BlockPool:
         """Reserve a slot + blocks for `max_total_len` tokens; returns the
         slot id, or None (admission refusal — the caller keeps the request
         queued).  `prompt_len` rows are accounted as already written (the
-        caller scatters them via :func:`scatter_blocks`)."""
-        assert 0 < prompt_len <= max_total_len
+        test/bench path that packs a prefilled dense cache via
+        :func:`dense_to_paged`).  prompt_len 0 is a COLD admission: blocks
+        are reserved but nothing is written yet — the chunked-prefill
+        scheduler grows the length via :func:`extend` as it appends prompt
+        chunks (launch/serve.py, DESIGN.md §9)."""
+        assert 0 <= prompt_len <= max_total_len and max_total_len >= 1
         if not self.can_admit(max_total_len):
             return None
         slot = self.free_slots()[0]
@@ -128,6 +132,16 @@ class BlockPool:
         assert self.lengths[slot] < self._budget[slot], \
             f"slot {slot} exceeded its reserved budget"
         self.lengths[slot] += 1
+
+    def extend(self, slot: int, n: int) -> None:
+        """Account `n` prompt tokens appended to `slot` in one prefill chunk
+        (the device-side write is :func:`append_chunk`).  Never allocates:
+        admission already reserved the full budget, so a chunk can never run
+        out of blocks mid-prompt."""
+        assert self.active[slot] and n >= 0
+        assert self.lengths[slot] + n <= self._budget[slot], \
+            f"slot {slot} chunk of {n} exceeds its reserved budget"
+        self.lengths[slot] += n
 
     def release(self, slot: int) -> None:
         """Return `slot`'s blocks to the free list and null its table row."""
@@ -165,18 +179,22 @@ def append_rows(pool, table, lengths, rows):
     return pool.at[pid, slot].set(rows)
 
 
-def scatter_blocks(pool, rows, block_ids):
-    """Scatter a prompt's rows into the listed physical blocks.
+def append_chunk(pool, table, lengths, rows):
+    """Write a C-token chunk per sequence starting at its current length.
 
-    pool: [N, bs, *F]; rows: [S, *F]; block_ids: [nb] int32 with
-    nb * bs >= S.  The tail of the last block is zero-filled; decode
-    appends overwrite it slot by slot."""
+    pool: [N, bs, *F]; table: [B, max_blocks] int32; lengths: [B] int32
+    (chunk token c of sequence b lands at logical position lengths[b] + c);
+    rows: [B, C, *F].  The chunked-prefill analogue of :func:`append_rows`:
+    one scatter covers the whole chunk even when it straddles block
+    boundaries.  Rows of a sequence whose table is all-null (inactive slot)
+    land in the null block — harmless, masked on read."""
     bs = pool.shape[1]
-    nb = block_ids.shape[0]
-    pad = nb * bs - rows.shape[0]
-    rows = jnp.pad(rows, ((0, pad),) + ((0, 0),) * (rows.ndim - 1))
-    return pool.at[block_ids].set(
-        rows.reshape(nb, bs, *rows.shape[1:]).astype(pool.dtype))
+    C = rows.shape[1]
+    pos = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # [B,C]
+    blk = pos // bs
+    slot = pos % bs
+    pid = jnp.take_along_axis(table, blk, axis=1)                     # [B,C]
+    return pool.at[pid, slot].set(rows.astype(pool.dtype))
 
 
 def gather_blocks(pool, table):

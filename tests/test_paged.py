@@ -246,12 +246,15 @@ def test_decode_step_paged_matches_dense():
     layout = pc.layout_for(B, S + GEN, block_size=16)
     bp = pc.BlockPool(layout, B)
     paged = model.init_paged_cache(cfg, layout)
-    _, pcache, _ = model.prefill(params, cfg, {"tokens": toks}, max_len=S)
     for b in range(B):
-        slot = bp.admit(S, S + GEN)
+        slot = bp.admit(0, S + GEN)          # cold: chunked prefill fills it
         assert slot == b
-        one = jax.tree.map(lambda a, b=b: a[:, b:b + 1], pcache)
-        paged = model.write_prefill_paged(cfg, paged, one, bp.block_ids(b))
+    for lo, hi in ((0, 16), (16, S)):        # aligned + unaligned chunks
+        table, lengths = bp.device_views()
+        _, paged = model.prefill_chunk(params, cfg, paged, toks[:, lo:hi],
+                                       table, lengths)
+        for b in range(B):
+            bp.extend(b, hi - lo)
     for i in range(GEN):
         table, lengths = bp.device_views()
         lg, paged = model.decode_step(params, cfg, paged, forced[i], None,
