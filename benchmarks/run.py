@@ -2,9 +2,10 @@
 Prints ``name,us_per_call,derived`` CSV rows (derived = the artifact's
 headline metric).  ``--kv-splits`` runs the split-KV decode sweep instead
 and records per-split-count results to BENCH_splitkv.json.  ``--smoke``
-runs the fast CI subset (kernel interpret paths + paged cache + a tiny
-split-KV sweep) and records BENCH_smoke.json + BENCH_smoke_splitkv.json — the
-per-PR perf-trajectory artifacts the CI smoke job uploads."""
+runs the fast CI subset (kernel interpret paths + paged cache + prefix
+cache + a tiny split-KV sweep) and records BENCH_smoke.json +
+BENCH_prefix.json + BENCH_smoke_splitkv.json — the per-PR perf-trajectory
+artifacts the CI smoke job uploads."""
 from __future__ import annotations
 
 import argparse
@@ -183,6 +184,110 @@ def bench_paged():
     return rows
 
 
+def bench_prefix():
+    """Prefix-cache subsystem (DESIGN.md §10) → BENCH_prefix.json rows.
+
+    Two kinds of rows: host-side radix-tree / shared-admission roundtrips
+    are the GATED timings (stable on shared CI runners — they are pure
+    Python dict/refcount work, no device dispatch); the shared-system-
+    prompt serve SWEEP rows are informational (us=0, excluded from the
+    ±20% gate by the noise-floor rule) — their value is the derived
+    hit-rate / prefill-tokens-saved trajectory, which is asserted
+    self-consistent before the artifact is written."""
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.launch import serve
+    from repro.runtime.paged_cache import BlockPool, PagedLayout
+    from repro.runtime.prefix_cache import PrefixCache
+
+    rows = []
+    # --- gated: trie insert/match/evict roundtrip at serving scale
+    bs, n_seq, nb = 16, 128, 8
+    layout = PagedLayout(block_size=bs, num_blocks=1 + n_seq * nb,
+                         max_blocks=nb)
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, 50000, size=(4 * bs,))       # shared sys prompt
+    prompts = [np.concatenate([system,
+                               rng.integers(0, 50000, size=(4 * bs,))])
+               for _ in range(n_seq)]
+
+    def trie_roundtrip():
+        bp = BlockPool(layout, n_seq)
+        trie = PrefixCache(bs)
+        slots = []
+        for toks in prompts:
+            s = bp.admit(0, len(toks))
+            bp.extend(s, len(toks))
+            trie.insert(toks, bp.block_ids(s), bp)
+            slots.append(s)
+        for toks in prompts:
+            trie.match(toks)
+        for s in slots:
+            bp.release(s)
+        while trie.evict_lru(bp) is not None:
+            pass
+
+    rows.append(("prefix/trie_roundtrip", _best_of(trie_roundtrip),
+                 f"{n_seq}seqs x {nb}blocks;page={bs}"))
+
+    # --- gated: cache-aware admission roundtrip (match + refcount bump)
+    small = PagedLayout(block_size=bs, num_blocks=1 + 3 * nb, max_blocks=nb)
+
+    def admit_shared_roundtrip():
+        bp = BlockPool(small, 2)
+        trie = PrefixCache(bs)
+        s0 = bp.admit(0, 8 * bs)
+        bp.extend(s0, 8 * bs)
+        trie.insert(prompts[0], bp.block_ids(s0), bp)
+        bp.release(s0)
+        for _ in range(200):
+            chain, matched = trie.match(prompts[0])
+            s, cow = bp.admit_shared(matched, 8 * bs, chain)
+            assert not cow
+            bp.release(s)
+
+    rows.append(("prefix/admit_shared_x200", _best_of(admit_shared_roundtrip),
+                 f"{nb - 1}shared blocks/admit"))
+
+    # --- informational: shared-system-prompt workload sweep through the
+    # real serve loop (reduced MLA arch, MoE dropped: bitwise on==off)
+    cfg = dataclasses.replace(reduced(get_config("deepseek_r1_671b")),
+                              moe=None)
+    sweep = {}
+    for shared, on in ((0, True), (8, True), (12, True), (8, False)):
+        argv = ["--reduced", "--batch", "1", "--prompt", "16", "--gen", "2",
+                "--requests", "3", "--page-size", "4", "--prefill-chunk",
+                "4", "--cache-layout", "paged",
+                "--shared-prefix", str(shared)]
+        if not on:
+            argv.append("--no-prefix-cache")
+        res = serve.run_paged(serve.parse_args(argv), cfg)
+        sweep[(shared, on)] = res
+        hit = res["prefix"]["hit_rate"] if res["prefix"] else 0.0
+        rows.append((f"prefix/serve/shared{shared}/{'on' if on else 'off'}",
+                     0.0,
+                     f"hit={hit:.2f};pf_tokens={res['prefill_tokens']};"
+                     f"saved={res['prefill_tokens_saved']};"
+                     f"decode={res['decode_tokens']}"))
+    # the artifact must be self-consistent before it becomes a baseline:
+    # caching only moves prompt tokens from "run" to "skipped", bitwise
+    on8, off8 = sweep[(8, True)], sweep[(8, False)]
+    assert on8["outputs"] == off8["outputs"]
+    assert on8["prefill_tokens"] + on8["prefill_tokens_saved"] \
+        == off8["prefill_tokens"]
+    assert on8["prefill_tokens_saved"] > 0
+
+    with open("BENCH_prefix.json", "w") as f:
+        json.dump({"meta": bench_meta("prefix"),
+                   "geometry": {"page": bs, "seqs": n_seq,
+                                "blocks_per_seq": nb},
+                   "rows": [{"name": n, "us": us, "derived": str(d)}
+                            for n, us, d in rows]}, f, indent=2)
+    rows.append(("prefix/json", 0.0, "BENCH_prefix.json"))
+    return rows
+
+
 def bench_splitkv(full: bool = False):
     """Split-KV ETAP decode sweep → CSV rows + BENCH_splitkv.json."""
     from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
@@ -199,14 +304,15 @@ def bench_splitkv(full: bool = False):
 
 
 def bench_smoke():
-    """CI smoke subset: kernel interpret paths, the paged cache, and a tiny
-    split-KV sweep.  Writes BENCH_smoke.json (this aggregate) plus the
-    BENCH_paged.json / BENCH_smoke_splitkv.json the sub-benches
-    emit (the committed full-sweep BENCH_splitkv.json is only written by
-    --kv-splits)."""
+    """CI smoke subset: kernel interpret paths, the paged cache, the
+    prefix cache, and a tiny split-KV sweep.  Writes BENCH_smoke.json
+    (this aggregate) plus the BENCH_paged.json / BENCH_prefix.json /
+    BENCH_smoke_splitkv.json the sub-benches emit (the committed
+    full-sweep BENCH_splitkv.json is only written by --kv-splits)."""
     rows = []
     rows += bench_kernels_interpret()
     rows += bench_paged()
+    rows += bench_prefix()
     from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
     sk = run_splitkv(full=False, splits=(1, 4))
     # own path: never clobber the committed full-sweep BENCH_splitkv.json
@@ -229,7 +335,8 @@ def main(argv=None) -> None:
                          "BENCH_splitkv.json")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset; writes BENCH_smoke.json, "
-                         "BENCH_paged.json and BENCH_smoke_splitkv.json")
+                         "BENCH_paged.json, BENCH_prefix.json and "
+                         "BENCH_smoke_splitkv.json")
     ap.add_argument("--full", action="store_true",
                     help="wider sweep geometry")
     args = ap.parse_args(argv)

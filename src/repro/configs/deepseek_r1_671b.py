@@ -1,7 +1,7 @@
 """deepseek-r1-671b — the paper's own architecture: MLA + MoE 256e top-8.
 16 heads/device on a 8-way model split is the exact padding scenario
 FlashMLA-ETAP targets. [arXiv:2412.19437]"""
-from repro.configs.base import ModelConfig, MLAConfig, MoEConfig
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
 
 CONFIG = ModelConfig(
     name="deepseek_r1_671b", family="mla",

@@ -425,9 +425,14 @@ def prefill_attention_paged(q, k_pool, v_pool, table, start, *, scale: float,
     tokens in the pool before the chunk — the chunk's latent/KV rows must
     already be appended (runtime.paged_cache.append_chunk), so the kernels
     stream ONE pool source for both the past context and the live chunk.
-    v_pool None → MLA-fused (V = first `dv` pool columns).  `mode` is
-    accepted for signature parity with decode; both modes share the
-    transposed loop here — prefill tiles are never thin on M."""
+    `start` is indifferent to HOW the preceding rows got into the pool:
+    written by this request's earlier chunks, or mapped wholesale from a
+    prefix-cache hit (DESIGN.md §10) — a prefill that resumes at a nonzero
+    offset over donor-computed blocks is the same computation as one that
+    resumes over its own, which is why prefix skipping needs no kernel
+    changes.  v_pool None → MLA-fused (V = first `dv` pool columns).
+    `mode` is accepted for signature parity with decode; both modes share
+    the transposed loop here — prefill tiles are never thin on M."""
     del mode
     if use_kernels:
         from repro.kernels.etap import ops as etap_ops

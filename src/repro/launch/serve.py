@@ -36,6 +36,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import model
 from repro.runtime.paged_cache import BlockPool, layout_for
+from repro.runtime.prefix_cache import PrefixCache
 
 
 def run_dense(args, cfg) -> dict:
@@ -89,18 +90,35 @@ def run_dense(args, cfg) -> dict:
 
 def _make_requests(args, vocab: int):
     """Ragged request stream: prompt/gen lengths drawn from a few quantized
-    buckets (bounds prefill re-tracing) around --prompt/--gen."""
+    buckets (bounds prefill re-tracing) around --prompt/--gen.
+
+    ``--shared-prefix N`` makes every prompt start with the SAME N tokens
+    (a shared system prompt) followed by a per-request random tail — the
+    prefix-cache workload.  The stream is identical for a given seed
+    whether or not the prefix cache is enabled (the flag only changes how
+    it is served), which is what makes the on/off bitwise-equivalence
+    check meaningful."""
     rng = np.random.default_rng(args.seed + 1)
     # buckets never exceed --prompt: the pool layout is sized for
     # prompt + gen, so every request must fit it by construction
     p_buckets = sorted({max(1, args.prompt // 2), max(1, 3 * args.prompt // 4),
                         args.prompt})
     g_buckets = sorted({max(1, args.gen // 2), args.gen})
+    shared = None
+    if args.shared_prefix:
+        assert args.shared_prefix < args.prompt, \
+            "--shared-prefix must leave room for a per-request tail"
+        shared = rng.integers(0, vocab, size=(args.shared_prefix,))
     reqs = []
     for i in range(args.requests):
         plen = int(rng.choice(p_buckets))
         glen = int(rng.choice(g_buckets))
-        toks = rng.integers(0, vocab, size=(plen,))
+        if shared is None:
+            toks = rng.integers(0, vocab, size=(plen,))
+        else:
+            plen = max(plen, args.shared_prefix + 1)
+            tail = rng.integers(0, vocab, size=(plen - args.shared_prefix,))
+            toks = np.concatenate([shared, tail])
         reqs.append({"id": i, "prompt": jnp.asarray(toks, jnp.int32),
                      "gen": glen})
     return reqs
@@ -113,7 +131,13 @@ def run_paged(args, cfg) -> dict:
     Per step:
       (1) admit queued requests COLD into free slots while the block pool
           can reserve their full budget (admission refusal = stay queued —
-          never a mid-flight OOM).  Admission reserves blocks only; no
+          never a mid-flight OOM).  Admission is CACHE-AWARE when the
+          prefix cache is on (--prefix-cache, DESIGN.md §10): the radix
+          tree is walked with the request's prompt, the matched
+          block-aligned prefix is mapped into the slot's block table with
+          a refcount bump per block (zero prefill tokens spent on it), and
+          under pool pressure LRU trie-only leaves are evicted to the free
+          list before refusing.  Admission reserves blocks only; no
           prompt tokens run yet.
       (2) spend the step's token budget (``--token-budget``): the decode
           batch (one token per decoding slot) is committed first, then
@@ -125,6 +149,15 @@ def run_paged(args, cfg) -> dict:
           pool blocks: no dense staging cache, no post-hoc scatter, peak
           extra memory = one chunk.  When nothing is decoding, one chunk
           always runs even if it exceeds the budget (progress guarantee).
+          A prefix-cache hit resumes prefill at the match offset; the
+          first tail chunk is trimmed onto the GLOBAL chunk grid
+          (positions k*chunk), so for chunk-aligned matches every tail
+          chunk has exactly the shape it would have had uncached — that is
+          what makes cached decode output BITWISE identical to uncached,
+          not merely close (DESIGN.md §10).  A request that finishes its
+          prompt INSERTS its full prompt blocks into the trie right away
+          (not at release), so queued requests share them while the donor
+          is still decoding; only tail tokens were charged to the budget.
       (3) one jitted paged decode step over the decoding slots (cold
           slots' table rows are masked to the null block, so the decode
           write can't touch a half-prefilled prompt), then retire finished
@@ -139,6 +172,7 @@ def run_paged(args, cfg) -> dict:
     layout = layout_for(B, max_total, block_size=args.page_size,
                         spare_blocks=args.spare_blocks)
     bp = BlockPool(layout, B)
+    prefix = PrefixCache(layout.block_size) if args.prefix_cache else None
     cache = model.init_paged_cache(cfg, layout)
     waiting = deque(_make_requests(args, cfg.vocab_size))
     n_requests = len(waiting)
@@ -182,16 +216,53 @@ def run_paged(args, cfg) -> dict:
     prefill_chunks = 0
     interleaved_steps = 0                     # decode step + >=1 chunk
     n_admitted = 0
+    prefill_tokens = 0                        # prompt tokens actually run
+    prefill_tokens_saved = 0                  # prompt tokens skipped (hits)
     t_prefill = 0.0
 
     t0 = time.perf_counter()
     while waiting or bp.active.any():
-        # ---- (1) admit COLD: FCFS while a slot + the full block budget fit
+        # ---- (1) admit: FCFS, cache-aware while the prefix cache is on
         while waiting:
             req = waiting[0]
-            plen = int(req["prompt"].shape[0])
+            prompt_np = np.asarray(req["prompt"])
+            plen = int(prompt_np.shape[0])
             total = plen + req["gen"]
-            slot = bp.admit(0, total)
+            chain, matched = ([], 0)
+            if prefix is not None and bp.free_slots():
+                # record=False: a refused request is re-matched every step
+                # (its match can GROW while it waits), so stats are counted
+                # once, on successful admission, not per retry
+                chain, matched = prefix.match(prompt_np, record=False)
+                # pressure: reclaim LRU trie-only leaves until the fresh
+                # need fits (the matched chain itself is protected — its
+                # blocks are trie-exclusive until admit_shared bumps them).
+                # Evict ONLY when eviction can actually make the admission
+                # fit: block shortage is the one evictable-away refusal —
+                # a full batch, an over-max_len request, or an evictable
+                # supply short of the need must refuse WITHOUT trading
+                # away cache state other requests would have hit.
+                protect = frozenset(chain)
+                need = layout.blocks_for(total) - len(chain)
+                if (total <= layout.max_len and need > bp.num_free
+                        and bp.num_free + prefix.reclaimable(
+                            bp, protect) >= need):
+                    while not bp.can_admit(total, n_shared=len(chain)):
+                        if prefix.evict_lru(bp, protect=protect) is None:
+                            break
+            if chain:
+                got = bp.admit_shared(matched, total, chain)
+                slot = None
+                if got is not None:
+                    slot, cow = got
+                    # trie matches are block-aligned so cow is empty today;
+                    # a mid-block match (divergence inside a block) copies
+                    # the partial donor block into the slot's private block
+                    # before any token is written
+                    for src, dst in cow:
+                        cache = model.copy_paged_block(cache, src, dst)
+            else:
+                slot = bp.admit(0, total)
             if slot is None:
                 if bp.active.any():
                     refused_ids.add(req["id"])
@@ -203,7 +274,10 @@ def run_paged(args, cfg) -> dict:
             req_of[slot] = req["id"]
             prompt_of[slot] = req["prompt"]
             gen_of[slot] = req["gen"]
-            pf_pos[slot] = 0
+            pf_pos[slot] = matched             # prefill resumes at the match
+            prefill_tokens_saved += matched
+            if prefix is not None:
+                prefix.record(matched)         # one lookup per admission
             decoding[slot] = False
             admit_seq[slot] = n_admitted
             n_admitted += 1
@@ -221,7 +295,13 @@ def run_paged(args, cfg) -> dict:
                       key=lambda b: admit_seq[b])
         for b in cold:
             plen = int(prompt_of[b].shape[0])
-            c = min(chunk, plen - int(pf_pos[b]))
+            # trim the first tail chunk onto the global chunk grid: after a
+            # prefix-cache hit at a non-chunk-multiple offset, the next
+            # chunk ends at the grid point, so every later chunk has the
+            # exact shape the uncached run would have used (bitwise-equal
+            # decode, DESIGN.md §10).  Uncached (pf_pos % chunk == 0) this
+            # is the plain min(chunk, remaining).
+            c = min(chunk - int(pf_pos[b]) % chunk, plen - int(pf_pos[b]))
             if spent + c > budget and spent > 0:
                 break                         # budget spent — defer chunk
             tp = time.perf_counter()
@@ -235,11 +315,17 @@ def run_paged(args, cfg) -> dict:
             pf_pos[b] += c
             spent += c
             pf_tokens += c
+            prefill_tokens += c
             prefill_chunks += 1
             if int(pf_pos[b]) == plen:        # prompt done -> start decoding
                 cur[b] = int(jnp.argmax(logits[0, -1]))
                 remaining[b] = gen_of[b]
                 decoding[b] = True
+                if prefix is not None:
+                    # cache the prompt's full blocks NOW (not at release):
+                    # queued requests share them while this one decodes
+                    prefix.insert(np.asarray(prompt_of[b]),
+                                  bp.block_ids(b), bp)
 
         # ---- (3) one ragged decode step over the decoding slots
         if decode_slots:
@@ -272,10 +358,12 @@ def run_paged(args, cfg) -> dict:
     t_total = time.perf_counter() - t0
     t_decode = t_total - t_prefill
 
+    pstats = prefix.stats() if prefix is not None else None
     # true tokens served (NOT batch * gen: sequences join/leave mid-stream)
     print(f"[serve] arch={args.arch} layout=paged mode={args.mode} B={B} "
           f"requests={n_requests} page={layout.block_size} "
-          f"blocks={layout.num_blocks - 1} chunk={chunk} budget={budget}")
+          f"blocks={layout.num_blocks - 1} chunk={chunk} budget={budget} "
+          f"prefix_cache={'on' if prefix is not None else 'off'}")
     print(f"[serve] {tokens_served} tokens in {steps} decode steps "
           f"({tokens_served / max(steps, 1):.2f} tokens/step occupancy); "
           f"{prefill_chunks} prefill chunks, {interleaved_steps} steps "
@@ -283,12 +371,21 @@ def run_paged(args, cfg) -> dict:
           f"decode {t_decode*1e3:.1f}ms "
           f"({tokens_served/max(t_decode, 1e-9):.1f} tok/s); "
           f"requests refused at least once: {len(refused_ids)}")
+    print(f"[serve] token split: {prefill_tokens} prefill + {tokens_served} "
+          f"decode run, {prefill_tokens_saved} prefill skipped"
+          + (f"; prefix cache: {pstats['hits']}/{pstats['lookups']} hits "
+             f"({pstats['hit_rate']:.0%}), {pstats['cached_blocks']} blocks "
+             f"cached, {pstats['evictions']} evicted" if pstats else ""))
     first = outputs[0][:16] if outputs.get(0) else []
     print(f"[serve] sample generation (request 0): {first}")
     return {"outputs": outputs, "tokens_served": tokens_served,
             "steps": steps, "refusals": len(refused_ids),
             "prefill_chunks": prefill_chunks,
             "interleaved_steps": interleaved_steps,
+            "prefill_tokens": prefill_tokens,
+            "decode_tokens": tokens_served,
+            "prefill_tokens_saved": prefill_tokens_saved,
+            "prefix": pstats,
             "t_prefill": t_prefill, "t_decode": t_decode}
 
 
@@ -327,6 +424,15 @@ def parse_args(argv=None):
                          "and prefill chunks (0 = batch + prefill-chunk)")
     ap.add_argument("--spare-blocks", type=int, default=0,
                     help="extra pool blocks beyond batch*max_blocks")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="radix-tree prefix cache: share KV blocks of "
+                         "common prompt prefixes across requests and skip "
+                         "their prefill (--no-prefix-cache disables)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of a common prompt prefix shared by every "
+                         "generated request (the prefix-cache workload; "
+                         "0 = fully independent prompts)")
     ap.add_argument("--kv-splits", type=int, default=None,
                     help="split-KV count for decode attention "
                          "(default: auto-scheduled)")

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-
 from jax.sharding import PartitionSpec as P
 
 from repro.core import mla as mla_mod
@@ -296,6 +295,17 @@ def init_paged_cache(cfg, layout):
     ]
 
 
+def copy_paged_block(cache, src: int, dst: int):
+    """Copy-on-write device copy over the whole paged cache pytree:
+    duplicate physical block `src` into `dst` in every layer's pool (leaves
+    carry a leading stacked-layer axis, [n_layers, num_blocks, bs, *F]).
+    The serve scheduler calls this on the COW pair returned by
+    BlockPool.admit_shared when a cached prefix ends mid-block, BEFORE any
+    chunk is appended to the new slot (DESIGN.md §10) — all layers share
+    one block table, so one (src, dst) pair covers the whole stack."""
+    return jax.tree.map(lambda p: p.at[:, dst].set(p[:, src]), cache)
+
+
 def _block_prefill_chunk(params, cfg, sig, x, cache, table, lengths, mode):
     """One block over a C-token prompt chunk against the paged cache.
     x: [B,C,D].  Paged caches are attention-only (init_paged_cache), so
@@ -336,8 +346,13 @@ def prefill_chunk(params, cfg, cache, tokens, block_table, lengths, *,
     its pool and attends causally over chunk + previously-written context,
     so there is NO dense staging cache and no post-hoc scatter — admission
     prefill becomes a sequence of per-chunk appends whose peak memory is
-    one chunk, not one prompt.  Returns (logits [B,C,V], new cache); the
-    final chunk's last-position logits seed the first decode token."""
+    one chunk, not one prompt.  Because `lengths` is the chunk's absolute
+    start offset (positions, causal masking and the pool write all derive
+    from it), a prefill may START at any nonzero offset: prefix-cache hits
+    (DESIGN.md §10) map the matched blocks into the table, set lengths to
+    the match length, and only the unmatched prompt TAIL ever runs through
+    here.  Returns (logits [B,C,V], new cache); the final chunk's
+    last-position logits seed the first decode token."""
     x = constrain(layers.embed(params["embed"], tokens), P(BATCH, None, None))
     groups = layer_groups(cfg)
     new_caches = []

@@ -25,6 +25,21 @@ Allocator invariants (DESIGN.md §8):
   · ``release`` returns blocks to the free list and zeroes the table row,
     so ids are recycled across requests (tests/test_paged.py proves
     reuse-after-release and the refusal path).
+
+Prefix sharing (DESIGN.md §10): every non-null block carries a REFCOUNT —
+one reference per batch slot mapping it plus one for the prefix-cache trie
+(runtime/prefix_cache.py) when the block is cached.  :meth:`BlockPool.admit_shared`
+maps an already-computed prefix chain into a new slot's table with a
+refcount bump instead of a free-list draw (its prefill is SKIPPED), and
+copy-on-write is eager-at-admission: a cached prefix ending mid-block gets
+its partial tail block copied into a fresh private block before any token
+is written, so in-flight writes never need to allocate (the no-mid-flight-
+OOM invariant survives sharing).  ``release`` drops one reference per
+chain block; only blocks hitting refcount zero return to the free list —
+trie-cached prompt blocks live on as the LRU-evictable cached set.
+Conservation (checked by :meth:`BlockPool.check_conservation`): a non-null
+block is on the free list iff its refcount is zero, and writes may only
+touch refcount-1 (exclusively owned) blocks.
 """
 from __future__ import annotations
 
@@ -79,7 +94,13 @@ class BlockPool:
         self.table = np.zeros((batch_slots, layout.max_blocks), np.int32)
         self.lengths = np.zeros((batch_slots,), np.int32)
         self.active = np.zeros((batch_slots,), bool)
-        self._owned: list[list[int]] = [[] for _ in range(batch_slots)]
+        # per-block reference count: one per slot mapping the block + one
+        # when the prefix-cache trie holds it.  free ⟺ ref == 0.
+        self.ref = np.zeros((layout.num_blocks,), np.int32)
+        # logical block chain per slot: shared prefix blocks first (mapped
+        # by admit_shared, refcount-bumped), then freshly allocated blocks
+        self._chain: list[list[int]] = [[] for _ in range(batch_slots)]
+        self._nshared = np.zeros((batch_slots,), np.int32)
         self._budget = np.zeros((batch_slots,), np.int32)    # reserved tokens
 
     @property
@@ -89,12 +110,14 @@ class BlockPool:
     def free_slots(self) -> list[int]:
         return [b for b in range(self.batch_slots) if not self.active[b]]
 
-    def can_admit(self, max_total_len: int) -> bool:
+    def can_admit(self, max_total_len: int, n_shared: int = 0) -> bool:
         """Admission predicate: a free batch slot AND enough free blocks to
-        reserve the request's whole token budget."""
+        reserve the request's whole token budget.  ``n_shared`` FULL prefix
+        blocks come from the prefix cache (refcount bump, no free-list
+        draw), so only the tail + generation budget needs fresh blocks."""
         if max_total_len > self.layout.max_len:
             return False
-        need = self.layout.blocks_for(max_total_len)
+        need = self.layout.blocks_for(max_total_len) - int(n_shared)
         return bool(self.free_slots()) and need <= self.num_free
 
     def admit(self, prompt_len: int, max_total_len: int) -> Optional[int]:
@@ -106,23 +129,94 @@ class BlockPool:
         are reserved but nothing is written yet — the chunked-prefill
         scheduler grows the length via :func:`extend` as it appends prompt
         chunks (launch/serve.py, DESIGN.md §9)."""
+        got = self.admit_shared(prompt_len, max_total_len, ())
+        return None if got is None else got[0]
+
+    def admit_shared(self, prompt_len: int, max_total_len: int,
+                     shared_ids) -> Optional[tuple]:
+        """Admission with a cached prefix: map `shared_ids` — the physical
+        chain holding the request's first `prompt_len` tokens, found by the
+        prefix-cache trie — into the new slot's table with a refcount bump
+        per block, and allocate fresh blocks only for the remaining budget.
+        The mapped prefix is never prefilled again (its tokens are
+        accounted as written); chunked prefill resumes at offset
+        `prompt_len`.
+
+        Copy-on-write on divergence: when `prompt_len` ends MID-block, the
+        chain's partial tail block is still the donor's (its later rows
+        belong to the donor's continuation), so it is NOT mapped — the
+        first fresh block takes its logical position and the pair is
+        returned for the caller to device-copy (models.model.copy_paged_block)
+        BEFORE any chunk is appended.  The copy happens at admission, not at
+        write time, so admission still reserves the whole budget up front
+        and in-flight steps never allocate.  The donor block must be kept
+        referenced by the caller (trie or donor slot) until the copy runs.
+
+        Returns (slot, cow) with cow = [] or [(src_block, dst_block)], or
+        None (refusal)."""
         assert 0 <= prompt_len <= max_total_len and max_total_len >= 1
-        if not self.can_admit(max_total_len):
+        shared_ids = [int(b) for b in shared_ids]
+        n_full = prompt_len // self.layout.block_size
+        if shared_ids:
+            assert prompt_len >= 1
+            assert len(shared_ids) == self.layout.blocks_for(prompt_len), \
+                "shared chain must cover exactly the prompt_len prefix"
+        else:
+            n_full = 0                       # nothing to map without a chain
+        if not self.can_admit(max_total_len, n_shared=n_full):
             return None
         slot = self.free_slots()[0]
         need = self.layout.blocks_for(max_total_len)
-        ids = [self._free.popleft() for _ in range(need)]
-        self._owned[slot] = ids
+        reused = shared_ids[:n_full]
+        fresh = [self._free.popleft() for _ in range(need - n_full)]
+        cow = []
+        if len(shared_ids) > n_full:         # prefix ends mid-block: COW
+            cow.append((shared_ids[n_full], fresh[0]))
+        for bid in reused:
+            assert self.ref[bid] > 0, "shared block must be live (trie/slot)"
+            self.ref[bid] += 1
+        for bid in fresh:
+            assert self.ref[bid] == 0
+            self.ref[bid] = 1
+        chain = reused + fresh
+        self._chain[slot] = chain
+        self._nshared[slot] = len(reused)
         self.table[slot] = NULL_BLOCK
-        self.table[slot, :need] = ids
+        self.table[slot, :len(chain)] = chain
         self.lengths[slot] = prompt_len
         self._budget[slot] = max_total_len
         self.active[slot] = True
-        return slot
+        return slot, cow
 
     def block_ids(self, slot: int) -> np.ndarray:
-        """Physical block ids owned by `slot` (allocation order = logical)."""
-        return np.asarray(self._owned[slot], np.int32)
+        """Physical block chain of `slot` in logical order: shared prefix
+        blocks (if any) first, then the freshly allocated blocks."""
+        return np.asarray(self._chain[slot], np.int32)
+
+    def ref_block(self, bid: int) -> None:
+        """Take an external (prefix-trie) reference on a live block."""
+        assert bid != NULL_BLOCK and self.ref[bid] > 0
+        self.ref[bid] += 1
+
+    def unref_block(self, bid: int) -> bool:
+        """Drop one reference; the block returns to the free list when the
+        count hits zero.  Returns True iff the block was freed."""
+        assert bid != NULL_BLOCK and self.ref[bid] > 0
+        self.ref[bid] -= 1
+        if self.ref[bid] == 0:
+            self._free.append(bid)
+            return True
+        return False
+
+    def _assert_writable(self, slot: int, lo_tok: int, hi_tok: int) -> None:
+        """Writes may only touch exclusively-owned blocks (refcount 1): a
+        shared or trie-cached block is read-only for every mapper — the COW
+        copy at admission guarantees the write region is always private."""
+        bs = self.layout.block_size
+        for bid in self._chain[slot][lo_tok // bs:hi_tok // bs + 1]:
+            assert self.ref[bid] == 1, \
+                f"COW violation: write into shared block {bid} " \
+                f"(refcount {int(self.ref[bid])})"
 
     def append(self, slot: int) -> None:
         """Account one generated token for `slot` (the device-side write is
@@ -131,6 +225,8 @@ class BlockPool:
         assert self.active[slot]
         assert self.lengths[slot] < self._budget[slot], \
             f"slot {slot} exceeded its reserved budget"
+        self._assert_writable(slot, int(self.lengths[slot]),
+                              int(self.lengths[slot]))
         self.lengths[slot] += 1
 
     def extend(self, slot: int, n: int) -> None:
@@ -141,17 +237,59 @@ class BlockPool:
         assert self.active[slot] and n >= 0
         assert self.lengths[slot] + n <= self._budget[slot], \
             f"slot {slot} chunk of {n} exceeds its reserved budget"
+        if n:
+            self._assert_writable(slot, int(self.lengths[slot]),
+                                  int(self.lengths[slot]) + n - 1)
         self.lengths[slot] += n
 
     def release(self, slot: int) -> None:
-        """Return `slot`'s blocks to the free list and null its table row."""
+        """Drop one reference per chain block and null the slot's table row.
+        Blocks hitting refcount zero return to the free list; blocks the
+        prefix-cache trie (or another slot) still references stay allocated
+        — that is what turns a finished request's prompt blocks into the
+        LRU-evictable cached set instead of freeing them."""
         assert self.active[slot]
-        self._free.extend(self._owned[slot])
-        self._owned[slot] = []
+        # audit (falsifiable): columns BEYOND the chain must already be
+        # null — admission nulls the row before writing the chain and no
+        # write path touches columns past it, so a stale physical id there
+        # means some mutation scribbled the table out of band.  The
+        # full-row assignment below then guarantees a released row can
+        # never surface a stale mapping through device_views()
+        # (tests/test_paged.py).
+        assert (self.table[slot, len(self._chain[slot]):]
+                == NULL_BLOCK).all(), "stale ids beyond the slot's chain"
+        for bid in self._chain[slot]:
+            self.unref_block(bid)
+        self._chain[slot] = []
+        self._nshared[slot] = 0
         self.table[slot] = NULL_BLOCK
         self.lengths[slot] = 0
         self._budget[slot] = 0
         self.active[slot] = False
+
+    def check_conservation(self) -> None:
+        """Refcount conservation (DESIGN.md §10): refcounts never negative,
+        the null block is never referenced or freed, a non-null block is on
+        the free list iff its refcount is zero, free + referenced blocks
+        partition the pool, and every active slot's chain is fully live.
+        Raises AssertionError on any violation (the hypothesis property
+        test drives random op interleavings through this)."""
+        assert (self.ref >= 0).all()
+        assert int(self.ref[NULL_BLOCK]) == 0
+        free = list(self._free)
+        assert len(set(free)) == len(free), "duplicate ids on the free list"
+        assert NULL_BLOCK not in free
+        for bid in free:
+            assert self.ref[bid] == 0, f"freed block {bid} still referenced"
+        n_live = int((self.ref[1:] > 0).sum())
+        assert len(free) + n_live == self.layout.num_blocks - 1
+        for b in range(self.batch_slots):
+            if self.active[b]:
+                assert all(self.ref[bid] >= 1 for bid in self._chain[b])
+                assert self._nshared[b] <= len(self._chain[b])
+            else:
+                assert not self._chain[b]
+                assert (self.table[b] == NULL_BLOCK).all()
 
     def device_views(self):
         """(block_table [B, max_blocks], lengths [B]) as device arrays.
@@ -195,6 +333,15 @@ def append_chunk(pool, table, lengths, rows):
     slot = pos % bs
     pid = jnp.take_along_axis(table, blk, axis=1)                     # [B,C]
     return pool.at[pid, slot].set(rows.astype(pool.dtype))
+
+
+def copy_block(pool, src: int, dst: int):
+    """Copy-on-write device copy: duplicate physical block `src` into `dst`
+    in one pool [N, bs, *F].  The scheduler calls this (via
+    models.model.copy_paged_block over the whole cache pytree) on the pair
+    returned by :meth:`BlockPool.admit_shared` when a cached prefix ends
+    mid-block, before any chunk is appended to the new slot."""
+    return pool.at[dst].set(pool[src])
 
 
 def gather_blocks(pool, table):

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
+from _hypothesis_compat import given, settings, st
 from repro.core.etap import etap_decode_xla, standard_decode_xla
 from repro.kernels.etap import ops as etap_ops
 from repro.kernels.etap.ref import etap_decode_ref

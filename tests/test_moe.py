@@ -6,8 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
+from _hypothesis_compat import given, settings, st
 from repro.configs import get_config, reduced
 from repro.models import moe
 

@@ -196,6 +196,27 @@ def test_append_rows_across_block_boundary():
                                   np.zeros((len(untouched), 4, 2)))
 
 
+def test_release_nulls_whole_row_and_is_unreachable_from_device_views():
+    """Release audit: a released slot's table row is fully nulled at ROW
+    granularity — no stale physical id at any column — so no stale mapping
+    can reach a kernel through device_views(); and device views taken
+    BEFORE the release are copies, immune to the mutation."""
+    layout = pc.PagedLayout(block_size=4, num_blocks=8, max_blocks=4)
+    bp = pc.BlockPool(layout, 2)
+    s = bp.admit(10, 12)                     # 3 of 4 table columns used
+    table_before, _ = bp.device_views()
+    assert (np.asarray(table_before[s][:3]) != pc.NULL_BLOCK).all()
+    bp.release(s)
+    assert (bp.table[s] == pc.NULL_BLOCK).all()
+    table, lengths = bp.device_views()
+    assert (np.asarray(table[s]) == pc.NULL_BLOCK).all()
+    assert int(lengths[s]) == 0
+    # a view taken pre-release is an owned copy: still the old ids (the
+    # async-dispatch contract), while the live table shows only nulls
+    assert (np.asarray(table_before[s][:3]) != pc.NULL_BLOCK).all()
+    bp.check_conservation()
+
+
 # ---------------------------------------------------------------- scheduler
 def test_paged_split_geometry_page_granular():
     for nb in (1, 3, 7, 16):

@@ -8,6 +8,7 @@ import textwrap
 import jax
 import numpy as np
 import pytest
+
 from repro.configs import get_config
 from repro.models import model
 from repro.sharding import rules
