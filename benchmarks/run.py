@@ -288,6 +288,87 @@ def bench_prefix():
     return rows
 
 
+def bench_quant():
+    """Quantized KV layouts (DESIGN.md §11) → BENCH_quant.json rows.
+
+    Two kinds of rows: the timed quantized-kernel paths (gated by the
+    ±20% regression gate like every other kernel row) and the RMSE-vs-
+    fp32 accuracy rows (us=0, informational in the timing gate) — but the
+    accuracy numbers are HARD-asserted here against the acceptance
+    budgets (int8 <= 5e-3, fp8 <= 2e-2) before the artifact is written:
+    a quantization-accuracy regression fails the bench run itself, not a
+    downstream diff."""
+    from repro.kernels.etap import ops as etap_ops
+    from repro.kernels.etap.ref import etap_decode_ref
+    from repro.runtime import paged_cache as pcache
+
+    B, H, DIM, DV, S, page = 2, 16, 576, 512, 1024, 64
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, H, DIM)), jnp.float32)
+    kv = jnp.asarray(rng.normal(size=(B, S, DIM)), jnp.float32)
+    lengths = np.asarray([S // 2 + 3, S])
+    layout = pcache.layout_for(B, S, block_size=page)
+    pool, bp = pcache.dense_to_paged(kv, lengths, layout)
+    table, lens = bp.device_views()
+    scale = DIM ** -0.5
+    ref = etap_decode_ref(q, kv, kv[..., :DV], jnp.asarray(lengths),
+                          scale=scale)
+    budgets = {"int8": 5e-3, "fp8": 2e-2}
+
+    rows = []
+    rmse_by_layout = {}
+    layouts = ["int8"] + (["fp8"] if pcache.HAS_FP8 else [])
+    for kvd in layouts:
+        codes, sz = pcache.quantize_pool(pool, kvd)
+        rows.append((f"quant/{kvd}/etap_mla_paged", _best_of(
+            lambda: etap_ops.etap_decode_mla_paged(
+                q, codes, DV, table, lens, scale=scale, kv_sz=sz)),
+            f"page={page}"))
+        rows.append((f"quant/{kvd}/etap_mla_paged_splitkv", _best_of(
+            lambda: etap_ops.etap_decode_mla_paged_splitkv(
+                q, codes, DV, table, lens, scale=scale, n_splits=4,
+                kv_sz=sz)), "n_splits=4"))
+        CQ = 16
+        qc = jnp.asarray(rng.normal(size=(B, CQ, H, DIM)), jnp.float32)
+        starts = jnp.asarray(lengths - CQ, jnp.int32)
+        rows.append((f"quant/{kvd}/etap_prefill_mla_paged", _best_of(
+            lambda: etap_ops.etap_prefill_mla_paged(
+                qc, codes, DV, table, starts, scale=scale, kv_sz=sz)),
+            f"chunk={CQ}"))
+        out = etap_ops.etap_decode_mla_paged(q, codes, DV, table, lens,
+                                             scale=scale, kv_sz=sz)
+        err = np.asarray(out, np.float64) - np.asarray(ref, np.float64)
+        rmse = float(np.sqrt(np.mean(err ** 2)))
+        rmse_by_layout[kvd] = rmse
+        assert rmse <= budgets[kvd], \
+            f"{kvd} decode RMSE {rmse:.2e} past the {budgets[kvd]:.0e} budget"
+        rows.append((f"quant/{kvd}/rmse_vs_fp32", 0.0,
+                     f"rmse={rmse:.3e};budget={budgets[kvd]:.0e}"))
+
+    # capacity: the serve loop's admission lever, asserted not just logged
+    from repro.configs import get_config, reduced
+    from repro.models import model as model_mod
+    cfg = reduced(get_config("deepseek_r1_671b"))
+    fp_row = model_mod.paged_row_bytes(cfg, "fp")
+    budget = (layout.num_blocks - 1) * page * fp_row
+    _, fp_slots = pcache.layout_for_bytes(budget, fp_row, S, block_size=page)
+    _, q_slots = pcache.layout_for_bytes(
+        budget, model_mod.paged_row_bytes(cfg, "int8"), S, block_size=page)
+    assert q_slots >= 1.8 * fp_slots, (q_slots, fp_slots)
+    rows.append(("quant/int8/capacity_ratio", 0.0,
+                 f"slots={q_slots}vs{fp_slots};x{q_slots / fp_slots:.2f}"))
+
+    with open("BENCH_quant.json", "w") as f:
+        json.dump({"meta": bench_meta("quant"),
+                   "geometry": {"batch": B, "heads": H, "dim": DIM,
+                                "dv": DV, "seq": S, "page": page},
+                   "rmse": rmse_by_layout,
+                   "rows": [{"name": n, "us": us, "derived": str(d)}
+                            for n, us, d in rows]}, f, indent=2)
+    rows.append(("quant/json", 0.0, "BENCH_quant.json"))
+    return rows
+
+
 def bench_splitkv(full: bool = False):
     """Split-KV ETAP decode sweep → CSV rows + BENCH_splitkv.json."""
     from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
@@ -305,13 +386,16 @@ def bench_splitkv(full: bool = False):
 
 def bench_smoke():
     """CI smoke subset: kernel interpret paths, the paged cache, the
+    quantized KV layouts (timings + hard RMSE/capacity asserts), the
     prefix cache, and a tiny split-KV sweep.  Writes BENCH_smoke.json
-    (this aggregate) plus the BENCH_paged.json / BENCH_prefix.json /
-    BENCH_smoke_splitkv.json the sub-benches emit (the committed
-    full-sweep BENCH_splitkv.json is only written by --kv-splits)."""
+    (this aggregate) plus the BENCH_paged.json / BENCH_quant.json /
+    BENCH_prefix.json / BENCH_smoke_splitkv.json the sub-benches emit
+    (the committed full-sweep BENCH_splitkv.json is only written by
+    --kv-splits)."""
     rows = []
     rows += bench_kernels_interpret()
     rows += bench_paged()
+    rows += bench_quant()
     rows += bench_prefix()
     from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
     sk = run_splitkv(full=False, splits=(1, 4))
@@ -335,8 +419,8 @@ def main(argv=None) -> None:
                          "BENCH_splitkv.json")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset; writes BENCH_smoke.json, "
-                         "BENCH_paged.json, BENCH_prefix.json and "
-                         "BENCH_smoke_splitkv.json")
+                         "BENCH_paged.json, BENCH_quant.json, "
+                         "BENCH_prefix.json and BENCH_smoke_splitkv.json")
     ap.add_argument("--full", action="store_true",
                     help="wider sweep geometry")
     args = ap.parse_args(argv)

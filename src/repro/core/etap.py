@@ -161,7 +161,13 @@ def etap_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
 
 def combine_partials(m, l, accT):
     """Merge per-shard (m, l, accT) stats (leading shard axis) into O.
-    m,l: [n,BG,H]; accT: [n,BG,Dv,H] -> [BG,H,Dv]."""
+    m,l: [n,BG,H]; accT: [n,BG,Dv,H] -> [BG,H,Dv].  Stats are upcast so
+    the merge is fp32 end-to-end regardless of what a caller hands in —
+    half-precision exp/sum here would erase the split-invariance the
+    combine owes the single-pass path (DESIGN.md §6)."""
+    m = m.astype(jnp.float32)
+    l = l.astype(jnp.float32)
+    accT = accT.astype(jnp.float32)
     m_g = jnp.max(m, axis=0)                                  # [BG,H]
     w = jnp.exp(m - m_g[None])                                # [n,BG,H]
     l_g = jnp.sum(l * w, axis=0)
@@ -188,7 +194,10 @@ def etap_decode_splitkv_xla(q, k, v, length=None, *, scale: float,
     if n_splits <= 1:
         return etap_decode_xla(q, k, v, length, scale=scale, block=block)
     from repro.kernels.etap.schedule import split_geometry
-    block, npb, padded_s = split_geometry(S, block, n_splits)
+    # effective count: short contexts degrade to fewer non-empty splits
+    block, n_splits, npb, padded_s = split_geometry(S, block, n_splits)
+    if n_splits <= 1:
+        return etap_decode_xla(q, k, v, length, scale=scale, block=block)
     seg = npb * block
     pad = padded_s - S
     if pad:
@@ -299,26 +308,39 @@ def decode_attention(q, k, v, length=None, *, scale: float, mode: str = "etap",
 
 
 # ------------------------------------------------------------------- paged
-def _gather_kv(k_pool, v_pool, table, dv: int):
+def _gather_kv(k_pool, v_pool, table, dv: int, k_sz=None, v_sz=None):
     """Materialize the dense (k, v) view of a paged cache: the fallback
     route for paths without a native paged kernel.  v_pool None → MLA-fused
-    (V = first `dv` gathered columns)."""
-    from repro.runtime.paged_cache import gather_blocks
+    (V = first `dv` gathered columns).  k_sz/v_sz: per-row (scale, zp)
+    pools for quantized code pools (DESIGN.md §11) — the gathered codes
+    are dequantized densely here, the XLA twin of the kernels' in-register
+    expand (same affine: runtime.paged_cache.dequantize_rows)."""
+    from repro.runtime.paged_cache import dequantize_rows, gather_blocks
     k = gather_blocks(k_pool, table)
-    v = gather_blocks(v_pool, table) if v_pool is not None else k[..., :dv]
+    if k_sz is not None:
+        k = dequantize_rows(k, gather_blocks(k_sz, table))
+    if v_pool is not None:
+        v = gather_blocks(v_pool, table)
+        if v_sz is not None:
+            v = dequantize_rows(v, gather_blocks(v_sz, table))
+    else:
+        v = k[..., :dv]
     return k, v
 
 
 def etap_decode_paged_xla(q, k_pool, v_pool, table, lengths, *,
-                          scale: float, dv: int = 0):
+                          scale: float, dv: int = 0, k_sz=None, v_sz=None):
     """Paged ETAP decode in pure XLA: gather the pool rows through the
     block table into the dense layout, then run the blockwise loop with
     block == page — so at block-aligned lengths it is bit-identical to the
     paged Pallas kernel AND to the dense path at equal block size.  XLA
     materializes the gather (one cache-sized copy); the Pallas paged
     kernels avoid it by dereferencing the table inside the grid.
-    With v_pool None, V = gathered k_pool[..., :dv] (MLA-fused)."""
-    k, v = _gather_kv(k_pool, v_pool, table, dv)
+    With v_pool None, V = gathered k_pool[..., :dv] (MLA-fused).
+    k_sz/v_sz: (scale, zp) pools for quantized code pools."""
+    k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
+    if k_sz is not None:
+        q = q.astype(jnp.float32)          # match the dequantized fp32 rows
     return etap_decode_xla(q, k, v, lengths, scale=scale,
                            block=k_pool.shape[1])
 
@@ -326,12 +348,14 @@ def etap_decode_paged_xla(q, k_pool, v_pool, table, lengths, *,
 def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
                            scale: float, mode: str = "etap",
                            use_kernels: bool = False, interpret: bool = True,
-                           n_splits=None, dv: int = 0):
+                           n_splits=None, dv: int = 0, k_sz=None, v_sz=None):
     """Paged decode attention entry point (the `cache_layout="paged"`
     analogue of :func:`decode_attention`).
 
     q: [B,H,Dk]; pools: [N,page,D*]; table: [B,max_blocks]; lengths: [B].
     v_pool None → MLA-fused (V = first `dv` pool columns, one HBM stream).
+    k_sz/v_sz: (scale, zp) pools when the pools hold int8/fp8 codes — the
+    kernel path dequants in registers, the XLA path after the gather.
     n_splits: None = auto via the block-granular paged scheduler; the
     "standard" baseline runs on the gathered dense layout (it exists for
     comparison, not serving)."""
@@ -340,10 +364,12 @@ def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
         if v_pool is None:
             return etap_ops.etap_decode_mla_paged_splitkv(
                 q, k_pool, dv, table, lengths, scale=scale,
-                n_splits=int(n_splits or 0), interpret=interpret)
+                n_splits=int(n_splits or 0), interpret=interpret,
+                kv_sz=k_sz)
         return etap_ops.etap_decode_paged_splitkv(
             q, k_pool, v_pool, table, lengths, scale=scale,
-            n_splits=int(n_splits or 0), interpret=interpret)
+            n_splits=int(n_splits or 0), interpret=interpret,
+            k_sz=k_sz, v_sz=v_sz)
     if mode == "etap":
         page = k_pool.shape[1]
         if n_splits is None:
@@ -352,13 +378,14 @@ def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
                 q.shape[0], table.shape[1], page, q.shape[1],
                 v_pool.shape[2] if v_pool is not None else dv).n_splits
         if n_splits > 1:
-            k, v = _gather_kv(k_pool, v_pool, table, dv)
+            k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
             return etap_decode_splitkv_xla(q, k, v, lengths, scale=scale,
                                            block=page,
                                            n_splits=int(n_splits))
         return etap_decode_paged_xla(q, k_pool, v_pool, table, lengths,
-                                     scale=scale, dv=dv)
-    k, v = _gather_kv(k_pool, v_pool, table, dv)
+                                     scale=scale, dv=dv, k_sz=k_sz,
+                                     v_sz=v_sz)
+    k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
     if use_kernels:
         from repro.kernels.flash_decode import ops as fd_ops
         return fd_ops.flash_decode_splitkv(
@@ -417,7 +444,8 @@ def etap_prefill_xla(q, k, v, start, *, scale: float, block: int = 512):
 
 def prefill_attention_paged(q, k_pool, v_pool, table, start, *, scale: float,
                             mode: str = "etap", use_kernels: bool = False,
-                            interpret: bool = True, dv: int = 0):
+                            interpret: bool = True, dv: int = 0,
+                            k_sz=None, v_sz=None):
     """Chunked paged prefill attention entry point (the prefill analogue of
     :func:`decode_attention_paged`).
 
@@ -438,10 +466,14 @@ def prefill_attention_paged(q, k_pool, v_pool, table, start, *, scale: float,
         from repro.kernels.etap import ops as etap_ops
         if v_pool is None:
             return etap_ops.etap_prefill_mla_paged(
-                q, k_pool, dv, table, start, scale=scale, interpret=interpret)
+                q, k_pool, dv, table, start, scale=scale,
+                interpret=interpret, kv_sz=k_sz)
         return etap_ops.etap_prefill_paged(
-            q, k_pool, v_pool, table, start, scale=scale, interpret=interpret)
-    k, v = _gather_kv(k_pool, v_pool, table, dv)
+            q, k_pool, v_pool, table, start, scale=scale,
+            interpret=interpret, k_sz=k_sz, v_sz=v_sz)
+    k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
+    if k_sz is not None:
+        q = q.astype(jnp.float32)          # match the dequantized fp32 rows
     return etap_prefill_xla(q, k, v, start, scale=scale,
                             block=k_pool.shape[1])
 

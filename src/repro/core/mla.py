@@ -150,8 +150,17 @@ def mla_decode_paged(params, cfg, x, cache, table, lengths, *,
     positions = lengths[:, None].astype(jnp.int32)            # [B,1]
     q = _absorbed_query(params, cfg, x, positions)
     c_t = _latent(params, cfg, x[:, None, :], positions)[:, 0]  # [B,latent]
-    pool = paged_cache.append_rows(cache["c"], table, lengths, c_t)
     scale = m.qk_head_dim ** -0.5
+    if "c_sz" in cache:        # quantized layout: codes + (scale, zp) pools
+        pool, sz = paged_cache.append_rows_quant(
+            cache["c"], cache["c_sz"], table, lengths, c_t)
+        o_lat = decode_attention_paged(
+            q, pool, None, table, lengths + 1, scale=scale, mode=mode,
+            use_kernels=cfg.use_kernels, n_splits=n_splits,
+            dv=m.kv_lora_rank, k_sz=sz)
+        return (_absorbed_out(params, cfg, o_lat, x.dtype),
+                {"c": pool, "c_sz": sz})
+    pool = paged_cache.append_rows(cache["c"], table, lengths, c_t)
     o_lat = decode_attention_paged(
         q, pool, None, table, lengths + 1, scale=scale, mode=mode,
         use_kernels=cfg.use_kernels, n_splits=n_splits,
@@ -184,27 +193,46 @@ def mla_prefill_chunk(params, cfg, x, cache, table, lengths, *,
                      w_uk.astype(jnp.float32)).astype(x.dtype)
     q = jnp.concatenate([q_c, q_rope], axis=-1)               # [B,C,H,latent]
     c_rows = _latent(params, cfg, x, positions)               # [B,C,latent]
-    pool = paged_cache.append_chunk(cache["c"], table, lengths, c_rows)
-    o_lat = prefill_attention_paged(
-        q, pool, None, table, lengths, scale=m.qk_head_dim ** -0.5,
-        mode=mode, use_kernels=cfg.use_kernels,
-        dv=m.kv_lora_rank)                                    # [B,C,H,kv]
+    if "c_sz" in cache:        # quantized layout: codes + (scale, zp) pools
+        pool, sz = paged_cache.append_chunk_quant(
+            cache["c"], cache["c_sz"], table, lengths, c_rows)
+        o_lat = prefill_attention_paged(
+            q, pool, None, table, lengths, scale=m.qk_head_dim ** -0.5,
+            mode=mode, use_kernels=cfg.use_kernels,
+            dv=m.kv_lora_rank, k_sz=sz)
+        new_cache = {"c": pool, "c_sz": sz}
+    else:
+        pool = paged_cache.append_chunk(cache["c"], table, lengths, c_rows)
+        o_lat = prefill_attention_paged(
+            q, pool, None, table, lengths, scale=m.qk_head_dim ** -0.5,
+            mode=mode, use_kernels=cfg.use_kernels,
+            dv=m.kv_lora_rank)                                # [B,C,H,kv]
+        new_cache = {"c": pool}
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     o = jnp.einsum("bchk,khd->bchd", o_lat.astype(jnp.float32),
                    w_uv.astype(jnp.float32)).astype(x.dtype)
     out = layers.dense(o.reshape(B, C, H * m.v_head_dim), params["w_o"])
-    return out, {"c": pool}
+    return out, new_cache
 
 
 def init_mla_cache(cfg, batch: int, max_len: int, dtype):
     return {"c": jnp.zeros((batch, max_len, cfg.mla.latent_dim), dtype)}
 
 
-def init_mla_cache_paged(cfg, layout, dtype):
+def init_mla_cache_paged(cfg, layout, dtype, kv_dtype: str = "fp"):
     """Paged latent pool (block 0 = reserved null block, see
-    runtime/paged_cache.py)."""
-    return {"c": jnp.zeros((layout.num_blocks, layout.block_size,
-                            cfg.mla.latent_dim), dtype)}
+    runtime/paged_cache.py).  kv_dtype "int8"/"fp8": the pool stores codes
+    and a parallel per-row (scale, zp) pool rides under "c_sz"
+    (DESIGN.md §11); scale 1 / zp 0 makes the all-zero init round-trip
+    exactly."""
+    shape = (layout.num_blocks, layout.block_size, cfg.mla.latent_dim)
+    qdt = paged_cache.quant_dtype(kv_dtype)
+    if qdt is None:
+        return {"c": jnp.zeros(shape, dtype)}
+    sz0 = jnp.concatenate(
+        [jnp.ones(shape[:2] + (1,), jnp.float32),        # scale
+         jnp.zeros(shape[:2] + (1,), jnp.float32)], -1)  # zero-point
+    return {"c": jnp.zeros(shape, qdt), "c_sz": sz0}
 
 
 def mla_prefill_cache(params, cfg, x, positions):

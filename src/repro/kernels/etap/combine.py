@@ -30,9 +30,15 @@ from repro import compat
 
 
 def _combine_body(m_ref, l_ref, acc_ref, o_ref, *, transposed: bool):
-    m = m_ref[0]                                       # [n, H]
-    l = l_ref[0]                                       # [n, H]
-    acc = acc_ref[0]                                   # [n,Dv,H] | [n,H,Dv]
+    # fp32 END-TO-END until the final epilogue cast (DESIGN.md §6/§11):
+    # the merge weights are exponentials of stat DIFFERENCES — computing
+    # exp(m - m*) or the ℓ/Acc reductions in a half dtype (as a caller
+    # handing in downcast stats would make jnp's dtype-following ops do)
+    # collapses nearby splits' weights and loses the paper's RMSE edge.
+    # The upcast is the guard: only o_ref.dtype may be narrow.
+    m = m_ref[0].astype(jnp.float32)                   # [n, H]
+    l = l_ref[0].astype(jnp.float32)                   # [n, H]
+    acc = acc_ref[0].astype(jnp.float32)               # [n,Dv,H] | [n,H,Dv]
     m_g = jnp.max(m, axis=0, keepdims=True)            # [1, H]
     w = jnp.exp(m - m_g)                               # [n, H]
     l_g = jnp.sum(l * w, axis=0, keepdims=True)        # [1, H]
@@ -69,7 +75,12 @@ def combine_splits_pallas(m, l, acc, *, transposed: bool, out_dtype,
 
 def combine_splits_xla(m, l, acc, *, transposed: bool, out_dtype):
     """XLA fallback (identical math; used when the combine kernel is not
-    worth a launch, e.g. under vmap or on non-TPU backends)."""
+    worth a launch, e.g. under vmap or on non-TPU backends).  Same fp32
+    end-to-end contract as the Pallas body: stats are upcast on entry and
+    only the final O is cast to `out_dtype`."""
+    m = m.astype(jnp.float32)
+    l = l.astype(jnp.float32)
+    acc = acc.astype(jnp.float32)
     if transposed:
         from repro.core.etap import combine_partials
         o = combine_partials(jnp.moveaxis(m, 1, 0), jnp.moveaxis(l, 1, 0),

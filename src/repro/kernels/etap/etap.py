@@ -27,11 +27,27 @@ from repro import compat
 NEG_INF = -1e30
 
 
+def _dequant(blk, sz_ref):
+    """Expand a quantized KV block in registers: codes [block, D] +
+    per-row (scale, zp) [block, 2] -> fp32 rows.  Delegates to THE dequant
+    definition (runtime.paged_cache.dequantize_rows — the loaded blk/sz
+    are plain jnp values inside the Pallas body, so the runtime affine
+    traces directly): kernel, XLA gather twin, and oracle literally share
+    one function and cannot drift.  sz_ref None is the fp passthrough."""
+    if sz_ref is None:
+        return blk
+    from repro.runtime.paged_cache import dequantize_rows
+    return dequantize_rows(blk, sz_ref[0].astype(jnp.float32))
+
+
 def _etap_body(length_ref, q_ref, k_ref, v_ref, o_ref,
                acc_ref, m_ref, l_ref, *, scale: float, block: int,
-               nb: int, fused_dv: int):
+               nb: int, fused_dv: int, k_sz_ref=None, v_sz_ref=None):
     """Shared kernel body. With fused_dv > 0, v_ref is None and V is the
-    first fused_dv columns of the K (latent) block."""
+    first fused_dv columns of the K (latent) block.  With k_sz_ref /
+    v_sz_ref set, the K/V blocks arrive as int8/fp8 codes and are
+    dequantized in registers before the dot (DESIGN.md §11); the softmax
+    statistics and the accumulator are fp32 either way."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -40,8 +56,10 @@ def _etap_body(length_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    k_blk = k_ref[0]                                   # [block, Dk]
+    k_blk = _dequant(k_ref[0], k_sz_ref)               # [block, Dk]
     q = q_ref[0]                                       # [H, Dk]
+    if k_sz_ref is not None:
+        q = q.astype(jnp.float32)                      # match dequanted K
     # Sᵀ = K·Qᵀ — context block on M, heads on N (no M padding waste).
     sT = jax.lax.dot_general(
         k_blk, q, (((1,), (1,)), ((), ())),
@@ -58,7 +76,7 @@ def _etap_body(length_ref, q_ref, k_ref, v_ref, o_ref,
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
     m_ref[...] = m_new
 
-    v_blk = k_blk[:, :fused_dv] if fused_dv else v_ref[0]
+    v_blk = k_blk[:, :fused_dv] if fused_dv else _dequant(v_ref[0], v_sz_ref)
     # Accᵀ += Vᵀ·Pᵀ — contraction over the KV block.
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
         v_blk, p, (((0,), (0,)), ((), ())),
@@ -85,6 +103,20 @@ def _paged_body(length_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
 def _paged_body_fused(length_ref, table_ref, q_ref, k_ref, o_ref,
                       acc, m, l, **kw):
     _etap_body(length_ref, q_ref, k_ref, None, o_ref, acc, m, l, **kw)
+
+
+# Quantized paged bodies: the sz pool rides as one more gathered operand
+# (same table deref as its code pool), dequant happens in _etap_body.
+def _paged_body_quant(length_ref, table_ref, q_ref, k_ref, k_sz_ref,
+                      v_ref, v_sz_ref, o_ref, acc, m, l, **kw):
+    _etap_body(length_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l,
+               k_sz_ref=k_sz_ref, v_sz_ref=v_sz_ref, **kw)
+
+
+def _paged_body_quant_fused(length_ref, table_ref, q_ref, k_ref, k_sz_ref,
+                            o_ref, acc, m, l, **kw):
+    _etap_body(length_ref, q_ref, k_ref, None, o_ref, acc, m, l,
+               k_sz_ref=k_sz_ref, **kw)
 
 
 def _call(q, k, v, length, *, scale, block, interpret, fused_dv):
@@ -143,33 +175,51 @@ def etap_decode_mla_pallas(q, kv, dv: int, length, *, scale: float,
 
 
 # ----------------------------------------------------------- paged variants
+def _pool_spec(page, D):
+    """BlockSpec gathering pool block ``table[b, j]`` per grid step."""
+    return pl.BlockSpec((1, page, D), lambda b, j, lens, tab: (tab[b, j], 0, 0))
+
+
 def _paged_call(q, pool, v_pool, table, lengths, *, scale, interpret,
-                fused_dv):
+                fused_dv, k_sz=None, v_sz=None):
     """Paged single-pass ETAP: KV lives in a block pool [N, page, D]; the
     block table [B, max_blocks] rides in as a scalar-prefetch operand and
     the K/V BlockSpec index maps dereference it, so each grid step DMAs
     pool block ``table[b, j]`` — the gather happens inside the grid, never
-    as a materialized dense copy."""
+    as a materialized dense copy.  k_sz/v_sz: per-row (scale, zp) pools
+    [N, page, 2] for quantized code pools (DESIGN.md §11) — they gather
+    through the same table and are expanded in registers."""
     B, H, Dk = q.shape
     page = pool.shape[1]
     nb = table.shape[1]
     Dv = fused_dv or v_pool.shape[2]
+    quant = k_sz is not None
 
     in_specs = [
         pl.BlockSpec((1, H, Dk), lambda b, j, *_: (b, 0, 0)),            # q
-        pl.BlockSpec((1, page, Dk),
-                     lambda b, j, lens, tab: (tab[b, j], 0, 0)),         # pool
+        _pool_spec(page, Dk),                                            # pool
     ]
     operands = [q, pool]
+    if quant:
+        in_specs.append(_pool_spec(page, 2))
+        operands.append(k_sz)
     if not fused_dv:
-        in_specs.append(pl.BlockSpec(
-            (1, page, Dv), lambda b, j, lens, tab: (tab[b, j], 0, 0)))
+        in_specs.append(_pool_spec(page, Dv))
         operands.append(v_pool)
+        if quant:
+            in_specs.append(_pool_spec(page, 2))
+            operands.append(v_sz)
 
     kw = dict(scale=scale, block=page, nb=nb, fused_dv=fused_dv)
-    body = functools.partial(
-        _paged_body_fused if fused_dv else _paged_body, **kw)
+    if quant:
+        body = functools.partial(
+            _paged_body_quant_fused if fused_dv else _paged_body_quant, **kw)
+    else:
+        body = functools.partial(
+            _paged_body_fused if fused_dv else _paged_body, **kw)
 
+    out_dtype = (q.dtype if quant
+                 else (v_pool if v_pool is not None else pool).dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, nb),
@@ -184,8 +234,7 @@ def _paged_call(q, pool, v_pool, table, lengths, *, scale, interpret,
     return pl.pallas_call(
         body,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct(
-            (B, H, Dv), (v_pool if v_pool is not None else pool).dtype),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dv), out_dtype),
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
@@ -193,24 +242,30 @@ def _paged_call(q, pool, v_pool, table, lengths, *, scale, interpret,
 
 
 def etap_decode_paged_pallas(q, k_pool, v_pool, table, lengths, *,
-                             scale: float, interpret: bool = True):
+                             scale: float, interpret: bool = True,
+                             k_sz=None, v_sz=None):
     """Paged (separate-V) ETAP decode kernel. q: [B,H,Dk]; pools
-    [N,page,D*]; table: [B,max_blocks]; lengths: [B]. Returns [B,H,Dv]."""
+    [N,page,D*]; table: [B,max_blocks]; lengths: [B]. Returns [B,H,Dv].
+    k_sz/v_sz: (scale, zp) pools when k_pool/v_pool hold int8/fp8 codes."""
     return _paged_call(q, k_pool, v_pool, table, lengths, scale=scale,
-                       interpret=interpret, fused_dv=0)
+                       interpret=interpret, fused_dv=0, k_sz=k_sz, v_sz=v_sz)
 
 
 def etap_decode_mla_paged_pallas(q, kv_pool, dv: int, table, lengths, *,
-                                 scale: float, interpret: bool = True):
-    """Paged MLA-fused ETAP: single latent pool, V = pool[..., :dv]."""
+                                 scale: float, interpret: bool = True,
+                                 kv_sz=None):
+    """Paged MLA-fused ETAP: single latent pool, V = pool[..., :dv].
+    kv_sz: (scale, zp) pool when kv_pool holds int8/fp8 codes — V is
+    sliced AFTER the affine, so one sz pair serves both operands."""
     return _paged_call(q, kv_pool, None, table, lengths, scale=scale,
-                       interpret=interpret, fused_dv=dv)
+                       interpret=interpret, fused_dv=dv, k_sz=kv_sz)
 
 
 # ---------------------------------------------------------- chunked prefill
 def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
                        acc_ref, m_ref, l_ref, *, scale: float, page: int,
-                       nb: int, heads: int, fused_dv: int):
+                       nb: int, heads: int, fused_dv: int,
+                       k_sz_ref=None, v_sz_ref=None):
     """Chunked paged ETAP prefill (DESIGN.md §9): the decode body with the
     single query row widened to a [Cq, H] tile, flattened to CH = Cq*H
     online-softmax columns.  The KV walk streams the sequence's pool blocks
@@ -228,8 +283,10 @@ def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    k_blk = k_ref[0]                                   # [page, Dk]
+    k_blk = _dequant(k_ref[0], k_sz_ref)               # [page, Dk]
     q = q_ref[0]                                       # [CH, Dk]
+    if k_sz_ref is not None:
+        q = q.astype(jnp.float32)                      # match dequanted K
     # Sᵀ = K·Qᵀ — pool block rows on M, the Cq*H query tile on N.
     sT = jax.lax.dot_general(
         k_blk, q, (((1,), (1,)), ((), ())),
@@ -247,7 +304,7 @@ def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
     m_ref[...] = m_new
 
-    v_blk = k_blk[:, :fused_dv] if fused_dv else v_ref[0]
+    v_blk = k_blk[:, :fused_dv] if fused_dv else _dequant(v_ref[0], v_sz_ref)
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
         v_blk, p, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)            # [Dv, CH]
@@ -263,28 +320,52 @@ def _prefill_body_fused(start_ref, table_ref, q_ref, k_ref, o_ref,
                        acc, m, l, **kw)
 
 
+def _prefill_body_quant(start_ref, table_ref, q_ref, k_ref, k_sz_ref,
+                        v_ref, v_sz_ref, o_ref, acc, m, l, **kw):
+    _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                       acc, m, l, k_sz_ref=k_sz_ref, v_sz_ref=v_sz_ref, **kw)
+
+
+def _prefill_body_quant_fused(start_ref, table_ref, q_ref, k_ref, k_sz_ref,
+                              o_ref, acc, m, l, **kw):
+    _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, None, o_ref,
+                       acc, m, l, k_sz_ref=k_sz_ref, **kw)
+
+
 def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
-                  fused_dv):
+                  fused_dv, k_sz=None, v_sz=None):
     B, CH, Dk = q.shape
     page = pool.shape[1]
     nb = table.shape[1]
     Dv = fused_dv or v_pool.shape[2]
+    quant = k_sz is not None
 
     in_specs = [
         pl.BlockSpec((1, CH, Dk), lambda b, j, *_: (b, 0, 0)),           # q
-        pl.BlockSpec((1, page, Dk),
-                     lambda b, j, starts, tab: (tab[b, j], 0, 0)),       # pool
+        _pool_spec(page, Dk),                                            # pool
     ]
     operands = [q, pool]
+    if quant:
+        in_specs.append(_pool_spec(page, 2))
+        operands.append(k_sz)
     if not fused_dv:
-        in_specs.append(pl.BlockSpec(
-            (1, page, Dv), lambda b, j, starts, tab: (tab[b, j], 0, 0)))
+        in_specs.append(_pool_spec(page, Dv))
         operands.append(v_pool)
+        if quant:
+            in_specs.append(_pool_spec(page, 2))
+            operands.append(v_sz)
 
     kw = dict(scale=scale, page=page, nb=nb, heads=heads, fused_dv=fused_dv)
-    body = functools.partial(
-        _prefill_body_fused if fused_dv else _etap_prefill_body, **kw)
+    if quant:
+        body = functools.partial(
+            _prefill_body_quant_fused if fused_dv else _prefill_body_quant,
+            **kw)
+    else:
+        body = functools.partial(
+            _prefill_body_fused if fused_dv else _etap_prefill_body, **kw)
 
+    out_dtype = (q.dtype if quant
+                 else (v_pool if v_pool is not None else pool).dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, nb),
@@ -299,8 +380,7 @@ def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
     return pl.pallas_call(
         body,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct(
-            (B, CH, Dv), (v_pool if v_pool is not None else pool).dtype),
+        out_shape=jax.ShapeDtypeStruct((B, CH, Dv), out_dtype),
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
@@ -308,23 +388,28 @@ def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
 
 
 def etap_prefill_paged_pallas(q, k_pool, v_pool, table, start, *,
-                              scale: float, interpret: bool = True):
+                              scale: float, interpret: bool = True,
+                              k_sz=None, v_sz=None):
     """Paged (separate-V) chunked ETAP prefill. q: [B,Cq,H,Dk]; pools
     [N,page,D*]; table [B,max_blocks]; start [B] = tokens already in the
     pool BEFORE this chunk (the chunk's own rows must already be appended).
-    Returns [B,Cq,H,Dv]."""
+    Returns [B,Cq,H,Dv].  k_sz/v_sz: (scale, zp) pools for quantized
+    code pools."""
     B, Cq, H, Dk = q.shape
     o = _prefill_call(q.reshape(B, Cq * H, Dk), k_pool, v_pool, table, start,
-                      heads=H, scale=scale, interpret=interpret, fused_dv=0)
+                      heads=H, scale=scale, interpret=interpret, fused_dv=0,
+                      k_sz=k_sz, v_sz=v_sz)
     return o.reshape(B, Cq, H, o.shape[-1])
 
 
 def etap_prefill_mla_paged_pallas(q, kv_pool, dv: int, table, start, *,
-                                  scale: float, interpret: bool = True):
+                                  scale: float, interpret: bool = True,
+                                  kv_sz=None):
     """Paged MLA-fused chunked prefill: single latent pool, V = pool[..., :dv]."""
     B, Cq, H, Dk = q.shape
     o = _prefill_call(q.reshape(B, Cq * H, Dk), kv_pool, None, table, start,
-                      heads=H, scale=scale, interpret=interpret, fused_dv=dv)
+                      heads=H, scale=scale, interpret=interpret, fused_dv=dv,
+                      k_sz=kv_sz)
     return o.reshape(B, Cq, H, dv)
 
 
@@ -332,7 +417,8 @@ def etap_prefill_mla_paged_pallas(q, kv_pool, dv: int, table, start, *,
 def _etap_partial_body(length_ref, q_ref, k_ref, v_ref,
                        m_out_ref, l_out_ref, acc_out_ref,
                        acc_ref, m_ref, l_ref, *, scale: float, block: int,
-                       npb: int, fused_dv: int):
+                       npb: int, fused_dv: int,
+                       k_sz_ref=None, v_sz_ref=None):
     """Split-KV partial: same transposed update as :func:`_etap_body`, on a
     3-D ``(BG, n_splits, nb_per_split)`` grid.  Each (b, split) pair owns a
     contiguous KV segment and emits raw ``(m, ℓ, Accᵀ)`` stats instead of O —
@@ -347,8 +433,10 @@ def _etap_partial_body(length_ref, q_ref, k_ref, v_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    k_blk = k_ref[0]                                   # [block, Dk]
+    k_blk = _dequant(k_ref[0], k_sz_ref)               # [block, Dk]
     q = q_ref[0]                                       # [H, Dk]
+    if k_sz_ref is not None:
+        q = q.astype(jnp.float32)                      # match dequanted K
     sT = jax.lax.dot_general(
         k_blk, q, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale    # [block, H]
@@ -365,7 +453,7 @@ def _etap_partial_body(length_ref, q_ref, k_ref, v_ref,
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
     m_ref[...] = m_new
 
-    v_blk = k_blk[:, :fused_dv] if fused_dv else v_ref[0]
+    v_blk = k_blk[:, :fused_dv] if fused_dv else _dequant(v_ref[0], v_sz_ref)
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
         v_blk, p, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)            # [Dv, H]
@@ -456,38 +544,70 @@ def _paged_partial_body_fused(length_ref, table_ref, q_ref, k_ref,
                        acc_out, acc, m, l, **kw)
 
 
+def _paged_partial_body_quant(length_ref, table_ref, q_ref, k_ref, k_sz_ref,
+                              v_ref, v_sz_ref, m_out, l_out, acc_out,
+                              acc, m, l, **kw):
+    _etap_partial_body(length_ref, q_ref, k_ref, v_ref, m_out, l_out,
+                       acc_out, acc, m, l, k_sz_ref=k_sz_ref,
+                       v_sz_ref=v_sz_ref, **kw)
+
+
+def _paged_partial_body_quant_fused(length_ref, table_ref, q_ref, k_ref,
+                                    k_sz_ref, m_out, l_out, acc_out,
+                                    acc, m, l, **kw):
+    _etap_partial_body(length_ref, q_ref, k_ref, None, m_out, l_out,
+                       acc_out, acc, m, l, k_sz_ref=k_sz_ref, **kw)
+
+
 def etap_paged_partial_pallas(q, k_pool, v_pool, table, lengths, *,
                               scale: float, n_splits: int,
-                              interpret: bool = True, fused_dv: int = 0):
+                              interpret: bool = True, fused_dv: int = 0,
+                              k_sz=None, v_sz=None):
     """Phase-1 split-KV over a PAGED cache: same (b, split, block-walk) grid
     as :func:`etap_partial_pallas`, but each grid step's KV block is pool
     block ``table[b, s*npb + j]`` (scalar-prefetch gather).  Splits are cut
     at page granularity — callers pad the table to an ``n_splits * npb``
     width with null blocks (masked via `lengths`), so ``n_splits`` composes
-    with paging with no repacking.  Returns fp32 (m, l, accT) stats."""
+    with paging with no repacking.  Returns fp32 (m, l, accT) stats.
+    k_sz/v_sz: (scale, zp) pools for quantized code pools — the partial
+    stats stay fp32 regardless of the storage layout."""
     B, H, Dk = q.shape
     page = k_pool.shape[1]
     nb = table.shape[1]
     Dv = fused_dv or v_pool.shape[2]
     assert nb % n_splits == 0, (nb, n_splits)
     npb = nb // n_splits
+    quant = k_sz is not None
+
+    def split_pool_spec(D):
+        return pl.BlockSpec(
+            (1, page, D),
+            lambda b, s, j, lens, tab, npb=npb: (tab[b, s * npb + j], 0, 0))
 
     in_specs = [
         pl.BlockSpec((1, H, Dk), lambda b, s, j, *_: (b, 0, 0)),         # q
-        pl.BlockSpec((1, page, Dk),
-                     lambda b, s, j, lens, tab, npb=npb:
-                     (tab[b, s * npb + j], 0, 0)),                       # pool
+        split_pool_spec(Dk),                                             # pool
     ]
     operands = [q, k_pool]
+    if quant:
+        in_specs.append(split_pool_spec(2))
+        operands.append(k_sz)
     if not fused_dv:
-        in_specs.append(pl.BlockSpec(
-            (1, page, Dv),
-            lambda b, s, j, lens, tab, npb=npb: (tab[b, s * npb + j], 0, 0)))
+        in_specs.append(split_pool_spec(Dv))
         operands.append(v_pool)
+        if quant:
+            in_specs.append(split_pool_spec(2))
+            operands.append(v_sz)
 
     kw = dict(scale=scale, block=page, npb=npb, fused_dv=fused_dv)
-    body = functools.partial(
-        _paged_partial_body_fused if fused_dv else _paged_partial_body, **kw)
+    if quant:
+        body = functools.partial(
+            _paged_partial_body_quant_fused if fused_dv
+            else _paged_partial_body_quant, **kw)
+    else:
+        body = functools.partial(
+            _paged_partial_body_fused if fused_dv else _paged_partial_body,
+            **kw)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

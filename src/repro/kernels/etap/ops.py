@@ -61,8 +61,11 @@ def etap_decode_mla(q, kv, dv: int, length=None, *, scale: float,
 
 # ------------------------------------------------------ split-KV two-phase
 def _partial(q, kv, v, length, *, scale, block, n_splits, interpret, fused_dv):
-    """Pad S to a (n_splits · block) multiple and run the phase-1 kernel."""
-    block, _, target = split_geometry(kv.shape[1], block, n_splits)
+    """Pad S to a (n_splits · block) multiple and run the phase-1 kernel.
+    n_splits is re-derived through the shared geometry, so a request for
+    more splits than there are KV blocks degrades to fewer non-empty
+    splits instead of launching zero-length grid rows."""
+    block, n_splits, _, target = split_geometry(kv.shape[1], block, n_splits)
     kv = _pad_seq(kv, target)
     if v is not None:
         v = _pad_seq(v, target)
@@ -110,6 +113,7 @@ def etap_decode_splitkv(q, k, v, length=None, *, scale: float,
     S = k.shape[1]
     if not n_splits:
         n_splits = plan_splits(BG, S, H, v.shape[2], block=block).n_splits
+    n_splits = split_geometry(S, block, n_splits)[1]    # effective count
     if n_splits <= 1:
         return etap_decode(q, k, v, length, scale=scale, block=block,
                            interpret=interpret)
@@ -135,48 +139,55 @@ def _pad_table(table, multiple: int):
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def etap_decode_paged(q, k_pool, v_pool, table, lengths, *, scale: float,
-                      interpret: bool = True):
+                      interpret: bool = True, k_sz=None, v_sz=None):
     """Paged ETAP decode. q: [B,H,Dk]; pools: [N,page,D*]; table:
     [B,max_blocks] int32; lengths: [B]. Returns [B,H,Dv].  Bit-identical
-    to :func:`etap_decode` at block == page on the same logical rows."""
+    to :func:`etap_decode` at block == page on the same logical rows.
+    k_sz/v_sz: per-row (scale, zp) pools [N,page,2] when the pools hold
+    int8/fp8 codes (in-register dequant, DESIGN.md §11)."""
     return etap_decode_paged_pallas(q, k_pool, v_pool, table, lengths,
-                                    scale=scale, interpret=interpret)
+                                    scale=scale, interpret=interpret,
+                                    k_sz=k_sz, v_sz=v_sz)
 
 
 @functools.partial(jax.jit, static_argnames=("dv", "scale", "interpret"))
 def etap_decode_mla_paged(q, kv_pool, dv: int, table, lengths, *,
-                          scale: float, interpret: bool = True):
+                          scale: float, interpret: bool = True, kv_sz=None):
     """Paged MLA-fused ETAP: one latent pool, V = pool[..., :dv]."""
     return etap_decode_mla_paged_pallas(q, kv_pool, dv, table, lengths,
-                                        scale=scale, interpret=interpret)
+                                        scale=scale, interpret=interpret,
+                                        kv_sz=kv_sz)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def etap_prefill_paged(q, k_pool, v_pool, table, start, *, scale: float,
-                       interpret: bool = True):
+                       interpret: bool = True, k_sz=None, v_sz=None):
     """Chunked paged ETAP prefill (separate-V). q: [B,Cq,H,Dk]; pools:
     [N,page,D*]; table: [B,max_blocks] int32; start: [B] tokens already in
     the pool before the chunk (whose rows must already be appended).
     Returns [B,Cq,H,Dv] — causal within the chunk, full over the pool."""
     return etap_prefill_paged_pallas(q, k_pool, v_pool, table, start,
-                                     scale=scale, interpret=interpret)
+                                     scale=scale, interpret=interpret,
+                                     k_sz=k_sz, v_sz=v_sz)
 
 
 @functools.partial(jax.jit, static_argnames=("dv", "scale", "interpret"))
 def etap_prefill_mla_paged(q, kv_pool, dv: int, table, start, *,
-                           scale: float, interpret: bool = True):
+                           scale: float, interpret: bool = True, kv_sz=None):
     """Chunked paged MLA-fused ETAP prefill: one latent pool, V = pool[..., :dv]."""
     return etap_prefill_mla_paged_pallas(q, kv_pool, dv, table, start,
-                                         scale=scale, interpret=interpret)
+                                         scale=scale, interpret=interpret,
+                                         kv_sz=kv_sz)
 
 
 def _paged_partial(q, k_pool, v_pool, table, lengths, *, scale, n_splits,
-                   interpret, fused_dv):
-    npb, padded_nb = paged_split_geometry(table.shape[1], n_splits)
+                   interpret, fused_dv, k_sz=None, v_sz=None):
+    n_splits, npb, padded_nb = paged_split_geometry(table.shape[1], n_splits)
     table = _pad_table(table, padded_nb)
     return etap_paged_partial_pallas(q, k_pool, v_pool, table, lengths,
                                      scale=scale, n_splits=n_splits,
-                                     interpret=interpret, fused_dv=fused_dv)
+                                     interpret=interpret, fused_dv=fused_dv,
+                                     k_sz=k_sz, v_sz=v_sz)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "n_splits", "combine",
@@ -184,23 +195,29 @@ def _paged_partial(q, k_pool, v_pool, table, lengths, *, scale, n_splits,
 def etap_decode_paged_splitkv(q, k_pool, v_pool, table, lengths, *,
                               scale: float, n_splits: int = 0,
                               combine: str = "pallas",
-                              interpret: bool = True):
+                              interpret: bool = True, k_sz=None, v_sz=None):
     """Two-phase split-KV ETAP decode over a paged cache. n_splits = 0 →
     auto via the block-granular scheduler; 1 routes to the single-pass
-    paged kernel (bit-identical, same argument as the dense path)."""
+    paged kernel (bit-identical, same argument as the dense path).
+    Requests for more splits than table columns degrade to the effective
+    count of the shared geometry (no zero-length splits)."""
     B, H, _ = q.shape
     page = k_pool.shape[1]
     if not n_splits:
         n_splits = plan_splits_paged(B, table.shape[1], page, H,
                                      v_pool.shape[2]).n_splits
+    n_splits = paged_split_geometry(table.shape[1], n_splits)[0]
     if n_splits <= 1:
         return etap_decode_paged(q, k_pool, v_pool, table, lengths,
-                                 scale=scale, interpret=interpret)
+                                 scale=scale, interpret=interpret,
+                                 k_sz=k_sz, v_sz=v_sz)
     m, l, accT = _paged_partial(q, k_pool, v_pool, table, lengths,
                                 scale=scale, n_splits=n_splits,
-                                interpret=interpret, fused_dv=0)
+                                interpret=interpret, fused_dv=0,
+                                k_sz=k_sz, v_sz=v_sz)
+    out_dtype = q.dtype if k_sz is not None else v_pool.dtype
     return combine_splits(m, l, accT, transposed=True,
-                          out_dtype=v_pool.dtype, combine=combine,
+                          out_dtype=out_dtype, combine=combine,
                           interpret=interpret)
 
 
@@ -209,20 +226,24 @@ def etap_decode_paged_splitkv(q, k_pool, v_pool, table, lengths, *,
 def etap_decode_mla_paged_splitkv(q, kv_pool, dv: int, table, lengths, *,
                                   scale: float, n_splits: int = 0,
                                   combine: str = "pallas",
-                                  interpret: bool = True):
+                                  interpret: bool = True, kv_sz=None):
     """Two-phase split-KV over a paged MLA latent pool (V = pool[..., :dv])."""
     B, H, _ = q.shape
     page = kv_pool.shape[1]
     if not n_splits:
         n_splits = plan_splits_paged(B, table.shape[1], page, H, dv).n_splits
+    n_splits = paged_split_geometry(table.shape[1], n_splits)[0]
     if n_splits <= 1:
         return etap_decode_mla_paged(q, kv_pool, dv, table, lengths,
-                                     scale=scale, interpret=interpret)
+                                     scale=scale, interpret=interpret,
+                                     kv_sz=kv_sz)
     m, l, accT = _paged_partial(q, kv_pool, None, table, lengths,
                                 scale=scale, n_splits=n_splits,
-                                interpret=interpret, fused_dv=dv)
+                                interpret=interpret, fused_dv=dv,
+                                k_sz=kv_sz)
+    out_dtype = q.dtype if kv_sz is not None else kv_pool.dtype
     return combine_splits(m, l, accT, transposed=True,
-                          out_dtype=kv_pool.dtype, combine=combine,
+                          out_dtype=out_dtype, combine=combine,
                           interpret=interpret)
 
 
@@ -237,6 +258,7 @@ def etap_decode_mla_splitkv(q, kv, dv: int, length=None, *, scale: float,
     S = kv.shape[1]
     if not n_splits:
         n_splits = plan_splits(BG, S, H, dv, block=block).n_splits
+    n_splits = split_geometry(S, block, n_splits)[1]    # effective count
     if n_splits <= 1:
         return etap_decode_mla(q, kv, dv, length, scale=scale, block=block,
                                interpret=interpret)

@@ -30,3 +30,25 @@ def etap_decode_ref(q, k, v, length=None, *, scale: float, dtype=jnp.float32):
     pT = jax.nn.softmax(sT, axis=1)                           # softmax over S (cols)
     oT = jnp.einsum("bsv,bsh->bvh", vf, pT)                   # Oᵀ = Vᵀ Pᵀ
     return jnp.swapaxes(oT, 1, 2).astype(v.dtype)             # O = (Oᵀ)ᵀ
+
+
+# ------------------------------------------------------ quantized twins
+def dequantize(codes, sz):
+    """Reference dequant for quantized KV (DESIGN.md §11): codes [..., F]
+    + per-row (scale, zp) [..., 2] -> fp32 rows.  Delegates to the runtime
+    definition so the kernel (kernels/etap/etap.py:_dequant), the XLA
+    gather path (core/etap.py), and this oracle can never drift apart."""
+    from repro.runtime.paged_cache import dequantize_rows
+    return dequantize_rows(codes, sz)
+
+
+def etap_decode_quant_ref(q, k_codes, k_sz, v_codes, v_sz, length=None, *,
+                          scale: float, dv: int = 0, dtype=jnp.float32):
+    """Oracle for the quantized decode kernels: dequantize densely, then
+    the direct (unblocked) transposed softmax.  v_codes None -> MLA-fused
+    (V = the first `dv` dequantized latent columns, exactly the kernels'
+    dequant-then-slice order).  Shapes as :func:`etap_decode_ref` with
+    codes in place of fp K/V."""
+    k = dequantize(k_codes, k_sz)
+    v = dequantize(v_codes, v_sz) if v_codes is not None else k[..., :dv]
+    return etap_decode_ref(q, k, v, length, scale=scale, dtype=dtype)

@@ -46,26 +46,40 @@ def _floor_pow2(n: int) -> int:
 
 
 def split_geometry(S: int, block: int, n_splits: int):
-    """Canonical launch geometry for cutting an S-long context into
-    n_splits segments: (block, nb_per_split, padded_s). Every split-KV
-    entry point (Pallas wrappers, XLA path) pads S to `padded_s` with this
-    ONE function so the phase-1 kernels' S % (n·npb·block) == 0 contract
-    can never diverge between paths."""
+    """Canonical launch geometry for cutting an S-long context into at most
+    n_splits segments: (block, n_splits, nb_per_split, padded_s).  Every
+    split-KV entry point (Pallas wrappers, XLA path) pads S to `padded_s`
+    with this ONE function so the phase-1 kernels' S % (n·npb·block) == 0
+    contract can never diverge between paths.
+
+    The returned split count is EFFECTIVE: requests with n_splits > nb (or
+    S < block, which collapses to nb == 1) degrade to the largest count
+    where every split still owns >= 1 real KV block — zero-length splits
+    would each burn a grid row computing a fully-masked block whose stats
+    are discarded by the combine, and at n_splits > nb the phase-2 stat
+    traffic could exceed the KV bytes the split was meant to amortize.
+    Callers MUST launch with the returned count, not the requested one."""
     S = max(int(S), 1)
     block = max(1, min(block, S))
     nb = -(-S // block)
-    npb = max(1, -(-nb // n_splits))
-    return block, npb, n_splits * npb * block
+    n_splits = max(1, min(int(n_splits), nb))
+    npb = -(-nb // n_splits)
+    n_splits = -(-nb // npb)       # drop splits starting past the last block
+    return block, n_splits, npb, n_splits * npb * block
 
 
 def paged_split_geometry(nb: int, n_splits: int):
     """Split geometry over a PAGED cache: the atomic unit is one KV page
     (block-table entry), so splits always land on page boundaries.
-    Returns (nb_per_split, padded_nb); callers pad the block table to
-    `padded_nb` columns with null blocks (masked via lengths)."""
+    Returns (n_splits, nb_per_split, padded_nb) — n_splits EFFECTIVE,
+    clamped exactly like :func:`split_geometry` (no split may own only
+    padding); callers pad the block table to `padded_nb` columns with null
+    blocks (masked via lengths) and launch with the returned count."""
     nb = max(int(nb), 1)
-    npb = max(1, -(-nb // n_splits))
-    return npb, n_splits * npb
+    n_splits = max(1, min(int(n_splits), nb))
+    npb = -(-nb // n_splits)
+    n_splits = -(-nb // npb)       # drop splits starting past the last block
+    return n_splits, npb, n_splits * npb
 
 
 def plan_splits_paged(B: int, nb: int, page: int, H: int, Dv: int, *,
@@ -78,8 +92,8 @@ def plan_splits_paged(B: int, nb: int, page: int, H: int, Dv: int, *,
     composes with paging without repacking the pool."""
     plan = plan_splits(B, max(int(nb), 1) * page, H, Dv, block=page,
                        num_cores=num_cores, kv_itemsize=kv_itemsize)
-    npb, _ = paged_split_geometry(nb, plan.n_splits)
-    return SplitPlan(n_splits=plan.n_splits, block=page, nb_per_split=npb)
+    n_eff, npb, _ = paged_split_geometry(nb, plan.n_splits)
+    return SplitPlan(n_splits=n_eff, block=page, nb_per_split=npb)
 
 
 def plan_splits(BG: int, S: int, H: int, Dv: int, *, block: int = 512,

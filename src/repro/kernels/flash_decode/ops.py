@@ -47,7 +47,12 @@ def flash_decode_splitkv(q, k, v, length=None, *, scale: float,
                             interpret=interpret)
     if length is None:
         length = jnp.full((BG,), S, jnp.int32)
-    block, _, target = split_geometry(S, block, n_splits)
+    # effective split count from the shared geometry (clamped so every
+    # split owns >= 1 real KV block — short contexts degrade to fewer)
+    block, n_splits, _, target = split_geometry(S, block, n_splits)
+    if n_splits <= 1:
+        return flash_decode(q, k, v, length, scale=scale, block=block,
+                            interpret=interpret)
     pad = target - S
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))

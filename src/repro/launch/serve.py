@@ -26,6 +26,7 @@ Two cache layouts:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from collections import deque
 
@@ -35,7 +36,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import model
-from repro.runtime.paged_cache import BlockPool, layout_for
+from repro.runtime.paged_cache import (KV_LAYOUTS, BlockPool,
+                                       layout_for, layout_for_bytes)
 from repro.runtime.prefix_cache import PrefixCache
 
 
@@ -171,9 +173,20 @@ def run_paged(args, cfg) -> dict:
     max_total = args.prompt + args.gen
     layout = layout_for(B, max_total, block_size=args.page_size,
                         spare_blocks=args.spare_blocks)
+    if args.kv_dtype != "fp":
+        # capacity accounting (DESIGN.md §11): hold the POOL BYTE BUDGET
+        # fixed at what the fp layout would have spent for --batch slots
+        # and let the cheaper quantized rows buy more blocks — and with
+        # them more concurrent batch slots (~2x at int8 for bf16 configs).
+        fp_bytes = model.paged_row_bytes(cfg, "fp")
+        q_bytes = model.paged_row_bytes(cfg, args.kv_dtype)
+        budget = (layout.num_blocks - 1) * layout.block_size * fp_bytes
+        layout, B = layout_for_bytes(budget, q_bytes, max_total,
+                                     block_size=args.page_size,
+                                     spare_blocks=args.spare_blocks)
     bp = BlockPool(layout, B)
     prefix = PrefixCache(layout.block_size) if args.prefix_cache else None
-    cache = model.init_paged_cache(cfg, layout)
+    cache = model.init_paged_cache(cfg, layout, kv_dtype=args.kv_dtype)
     waiting = deque(_make_requests(args, cfg.vocab_size))
     n_requests = len(waiting)
     chunk = max(1, args.prefill_chunk)
@@ -234,6 +247,17 @@ def run_paged(args, cfg) -> dict:
                 # (its match can GROW while it waits), so stats are counted
                 # once, on successful admission, not per retry
                 chain, matched = prefix.match(prompt_np, record=False)
+                # FULL shared blocks only: a chain whose last block is
+                # partial (prefix ends mid-block) still needs a FRESH
+                # block for that logical position — the eager-COW copy
+                # target — so it must count against the free list, not as
+                # shared.  len(chain) would over-count by one there and
+                # let can_admit say yes at exactly-one-block-short
+                # occupancy (admit_shared itself counts full blocks and
+                # would then refuse — tests/test_paged.py pins the
+                # boundary).  Trie matches are block-aligned today, which
+                # made this dormant, not correct.
+                n_full = matched // layout.block_size
                 # pressure: reclaim LRU trie-only leaves until the fresh
                 # need fits (the matched chain itself is protected — its
                 # blocks are trie-exclusive until admit_shared bumps them).
@@ -243,11 +267,11 @@ def run_paged(args, cfg) -> dict:
                 # supply short of the need must refuse WITHOUT trading
                 # away cache state other requests would have hit.
                 protect = frozenset(chain)
-                need = layout.blocks_for(total) - len(chain)
+                need = layout.blocks_for(total) - n_full
                 if (total <= layout.max_len and need > bp.num_free
                         and bp.num_free + prefix.reclaimable(
                             bp, protect) >= need):
-                    while not bp.can_admit(total, n_shared=len(chain)):
+                    while not bp.can_admit(total, n_shared=n_full):
                         if prefix.evict_lru(bp, protect=protect) is None:
                             break
             if chain:
@@ -363,6 +387,7 @@ def run_paged(args, cfg) -> dict:
     print(f"[serve] arch={args.arch} layout=paged mode={args.mode} B={B} "
           f"requests={n_requests} page={layout.block_size} "
           f"blocks={layout.num_blocks - 1} chunk={chunk} budget={budget} "
+          f"kv_dtype={args.kv_dtype} "
           f"prefix_cache={'on' if prefix is not None else 'off'}")
     print(f"[serve] {tokens_served} tokens in {steps} decode steps "
           f"({tokens_served / max(steps, 1):.2f} tokens/step occupancy); "
@@ -379,6 +404,8 @@ def run_paged(args, cfg) -> dict:
     first = outputs[0][:16] if outputs.get(0) else []
     print(f"[serve] sample generation (request 0): {first}")
     return {"outputs": outputs, "tokens_served": tokens_served,
+            "batch_slots": B, "kv_dtype": args.kv_dtype,
+            "pool_blocks": layout.num_blocks - 1,
             "steps": steps, "refusals": len(refused_ids),
             "prefill_chunks": prefill_chunks,
             "interleaved_steps": interleaved_steps,
@@ -436,6 +463,14 @@ def parse_args(argv=None):
     ap.add_argument("--kv-splits", type=int, default=None,
                     help="split-KV count for decode attention "
                          "(default: auto-scheduled)")
+    ap.add_argument("--kv-dtype", default=os.environ.get("REPRO_KV_DTYPE",
+                                                         "fp"),
+                    choices=list(KV_LAYOUTS),
+                    help="paged KV storage layout (DESIGN.md §11): fp = "
+                         "config dtype; int8/fp8 store per-row quantized "
+                         "codes + (scale, zp) and admit ~2x the sequences "
+                         "under the same pool byte budget (env default: "
+                         "REPRO_KV_DTYPE — the CI int8 leg's hook)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reduced", action="store_true")
     return ap.parse_args(argv)

@@ -230,6 +230,36 @@ def attention_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
     return out, {"k": kc, "v": vc}
 
 
+def _append_paged_kv(cache, table, lengths, k, v):
+    """Append one row (or a [B,C,...] chunk) of K/V into the paged GQA
+    cache, quantizing on write when the cache carries (scale, zp) pools
+    (DESIGN.md §11).  Returns the updated cache dict."""
+    chunked = k.ndim == 4                          # [B,C,K,hd] vs [B,K,hd]
+    if "k_sz" in cache:
+        app = (paged_cache.append_chunk_quant if chunked
+               else paged_cache.append_rows_quant)
+        kc, k_sz = app(cache["k"], cache["k_sz"], table, lengths, k)
+        vc, v_sz = app(cache["v"], cache["v_sz"], table, lengths, v)
+        return {"k": kc, "v": vc, "k_sz": k_sz, "v_sz": v_sz}
+    app = paged_cache.append_chunk if chunked else paged_cache.append_rows
+    return {"k": app(cache["k"], table, lengths, k),
+            "v": app(cache["v"], table, lengths, v)}
+
+
+def _gather_paged_kv(cache, table):
+    """Dense [B,S,K,hd] views of the paged GQA cache, dequantized when the
+    pools hold codes (the GQA paged path is gather-based — see
+    attention_decode_paged; MLA streams its pool in place instead)."""
+    kd = paged_cache.gather_blocks(cache["k"], table)
+    vd = paged_cache.gather_blocks(cache["v"], table)
+    if "k_sz" in cache:
+        kd = paged_cache.dequantize_rows(
+            kd, paged_cache.gather_blocks(cache["k_sz"], table))
+        vd = paged_cache.dequantize_rows(
+            vd, paged_cache.gather_blocks(cache["v_sz"], table))
+    return kd, vd
+
+
 def attention_decode_paged(params, cfg, x, cache, table, lengths, *,
                            mode: str = "etap", n_splits=None):
     """One-token GQA decode against a PAGED cache: {"k","v"} pools of shape
@@ -248,16 +278,19 @@ def attention_decode_paged(params, cfg, x, cache, table, lengths, *,
     positions = lengths[:, None].astype(jnp.int32)
     q, k, v = _project_qkv(params, cfg, x[:, None, :], positions)
     q, k, v = q[:, 0], k[:, 0], v[:, 0]                       # [B,H,hd],[B,K,hd]
-    kc = paged_cache.append_rows(cache["k"], table, lengths, k)
-    vc = paged_cache.append_rows(cache["v"], table, lengths, v)
-    kd = paged_cache.gather_blocks(kc, table)                 # [B,S,K,hd]
-    vd = paged_cache.gather_blocks(vc, table)
+    new_cache = _append_paged_kv(cache, table, lengths, k, v)
+    kd, vd = _gather_paged_kv(new_cache, table)               # [B,S,K,hd]
+    if "k_sz" in cache:
+        q = q.astype(jnp.float32)         # match the dequantized fp32 rows
     o = gqa_decode(q, kd, vd, lengths + 1,
                    scale=cfg.resolved_head_dim ** -0.5, mode=mode,
                    use_kernels=cfg.use_kernels,
                    block=cache["k"].shape[1], n_splits=n_splits)
-    out = layers.dense(o.reshape(B, -1), params["w_o"])
-    return out, {"k": kc, "v": vc}
+    # back to the model dtype: under a quantized layout the dequantized
+    # rows (and hence gqa_decode's output) are fp32 — without the cast
+    # every decode step's residual stream would silently promote
+    out = layers.dense(o.reshape(B, -1).astype(x.dtype), params["w_o"])
+    return out, new_cache
 
 
 def attention_prefill_chunk(params, cfg, x, cache, table, lengths, *,
@@ -278,14 +311,14 @@ def attention_prefill_chunk(params, cfg, x, cache, table, lengths, *,
     B, C, D = x.shape
     positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     q, k, v = _project_qkv(params, cfg, x, positions)  # [B,C,H,hd],[B,C,K,hd]
-    kc = paged_cache.append_chunk(cache["k"], table, lengths, k)
-    vc = paged_cache.append_chunk(cache["v"], table, lengths, v)
-    kd = paged_cache.gather_blocks(kc, table)                 # [B,S,K,hd]
-    vd = paged_cache.gather_blocks(vc, table)
+    new_cache = _append_paged_kv(cache, table, lengths, k, v)
+    kd, vd = _gather_paged_kv(new_cache, table)               # [B,S,K,hd]
     H = cfg.num_heads
     S = kd.shape[1]
     kh = _expand_kv(kd, H)
     vh = _expand_kv(vd, H)
+    if "k_sz" in cache:
+        q = q.astype(jnp.float32)         # match the dequantized fp32 rows
     s = jnp.einsum("bchd,bshd->bhcs", q, kh,
                    preferred_element_type=jnp.float32) * cfg.resolved_head_dim ** -0.5
     kpos = jnp.arange(S, dtype=jnp.int32)
@@ -295,7 +328,7 @@ def attention_prefill_chunk(params, cfg, x, cache, table, lengths, *,
     o = jnp.einsum("bhcs,bshv->bchv", p, vh,
                    preferred_element_type=jnp.float32).astype(v.dtype)
     out = layers.dense(o.reshape(B, C, -1), params["w_o"])
-    return out, {"k": kc, "v": vc}
+    return out, new_cache
 
 
 def init_attention_cache(cfg, batch: int, max_len: int, dtype):
@@ -305,7 +338,16 @@ def init_attention_cache(cfg, batch: int, max_len: int, dtype):
             "v": jnp.zeros((batch, n, Kv, hd), dtype)}
 
 
-def init_attention_cache_paged(cfg, layout, dtype):
+def init_attention_cache_paged(cfg, layout, dtype, kv_dtype: str = "fp"):
     Kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     shape = (layout.num_blocks, layout.block_size, Kv, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    qdt = paged_cache.quant_dtype(kv_dtype)
+    if qdt is None:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    # per-row (scale, zp) PER KV HEAD: the quantization granule is the
+    # head's hd-vector (DESIGN.md §11); scale 1 round-trips the zero init
+    sz0 = jnp.concatenate(
+        [jnp.ones(shape[:3] + (1,), jnp.float32),
+         jnp.zeros(shape[:3] + (1,), jnp.float32)], -1)
+    return {"k": jnp.zeros(shape, qdt), "v": jnp.zeros(shape, qdt),
+            "k_sz": sz0, "v_sz": sz0}

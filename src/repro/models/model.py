@@ -264,13 +264,19 @@ def init_cache(cfg, batch: int, max_len: int):
     ]
 
 
-def init_paged_cache(cfg, layout):
+def init_paged_cache(cfg, layout, kv_dtype: str = "fp"):
     """Paged serving cache: one KV block pool per layer (stacked per layer
     group, like :func:`init_cache`), all layers sharing ONE block table
     owned by the scheduler (runtime/paged_cache.BlockPool) — every layer
     sees the same sequence structure, so block ids are reused across
     layers and only the pools differ.  Attention-only stacks: recurrent /
-    SSM state is per-sequence, not per-token — nothing to page."""
+    SSM state is per-sequence, not per-token — nothing to page.
+
+    kv_dtype: "fp" (config dtype) | "int8" | "fp8" — quantized layouts
+    store code pools plus per-row (scale, zp) pools under "*_sz" keys
+    (DESIGN.md §11); every downstream path (decode, chunked prefill, COW
+    block copy) keys off the cache dict, so the layout choice is made
+    exactly once, here."""
     dtype = cfg.jax_dtype
     for kind in cfg.layer_kinds():
         if kind != "attn":
@@ -280,8 +286,10 @@ def init_paged_cache(cfg, layout):
 
     def one(sig):
         if cfg.attention_kind == "mla":
-            return mla_mod.init_mla_cache_paged(cfg, layout, dtype)
-        return attention.init_attention_cache_paged(cfg, layout, dtype)
+            return mla_mod.init_mla_cache_paged(cfg, layout, dtype,
+                                                kv_dtype=kv_dtype)
+        return attention.init_attention_cache_paged(cfg, layout, dtype,
+                                                    kv_dtype=kv_dtype)
 
     def stack(leaf_fn, n):
         one_c = leaf_fn()
@@ -293,6 +301,23 @@ def init_paged_cache(cfg, layout):
          for j, s in enumerate(g["sigs"])}
         for g in groups
     ]
+
+
+def paged_row_bytes(cfg, kv_dtype: str = "fp") -> int:
+    """KV-cache bytes ONE token costs across the whole layer stack in a
+    paged cache of the given layout — the quantity the serve loop's
+    byte-budget capacity accounting divides by (DESIGN.md §11).  MLA: one
+    latent_dim row per layer; GQA: K heads × head_dim for K and V each
+    (each head is its own quantization granule, so each carries its own
+    (scale, zp) overhead)."""
+    from repro.runtime.paged_cache import row_bytes
+    n_layers = len(cfg.layer_kinds())
+    if cfg.attention_kind == "mla":
+        return n_layers * row_bytes(cfg.mla.latent_dim, kv_dtype,
+                                    cfg.jax_dtype)
+    Kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    per_stream = row_bytes(Kv * hd, kv_dtype, cfg.jax_dtype, granules=Kv)
+    return n_layers * 2 * per_stream                      # K and V pools
 
 
 def copy_paged_block(cache, src: int, dst: int):

@@ -40,6 +40,21 @@ trie-cached prompt blocks live on as the LRU-evictable cached set.
 Conservation (checked by :meth:`BlockPool.check_conservation`): a non-null
 block is on the free list iff its refcount is zero, and writes may only
 touch refcount-1 (exclusively owned) blocks.
+
+Quantized layouts (DESIGN.md §11): the pool may store KV rows as int8 (or
+fp8 e4m3) codes with a per-ROW affine (scale, zero-point) pair kept in a
+parallel ``sz`` pool of shape ``[num_blocks, block_size, *lead, 2]``.  The
+row is the quantization granule — one (scale, zp) per written token (per
+kv head for GQA pools) — because every write path (append_rows,
+append_chunk) touches whole rows and only rows: a PER-BLOCK scale would
+have to re-quantize previously-written rows whenever a later append raised
+the block's max, destroying the bitwise-stability the prefix cache depends
+on.  Scales live at block granularity in STORAGE (the sz pool pages with
+the code pool, so :func:`copy_block` and COW move codes and scales
+together), while the numeric granule is the row.  Dequantization is fused
+inside the ETAP Pallas kernels (kernels/etap/etap.py): codes and scales
+stream per pool block and are expanded in registers before the dot;
+softmax statistics and accumulation stay fp32 (§6).
 """
 from __future__ import annotations
 
@@ -52,6 +67,15 @@ import jax.numpy as jnp
 import numpy as np
 
 NULL_BLOCK = 0
+
+# Quantized KV layouts (DESIGN.md §11).  "fp" is the config dtype
+# passthrough; "int8" is asymmetric per-row affine; "fp8" emulates the
+# H20's e4m3 format via jnp.float8_e4m3fn (symmetric — fp8 has a sign
+# bit, so the zero-point is pinned to 0 and only the scale is live).
+KV_LAYOUTS = ("fp", "int8", "fp8")
+HAS_FP8 = hasattr(jnp, "float8_e4m3fn")
+F8_MAX = 448.0                    # e4m3fn finite max (no inf encoding)
+INT8_MAX = 127.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,9 +136,15 @@ class BlockPool:
 
     def can_admit(self, max_total_len: int, n_shared: int = 0) -> bool:
         """Admission predicate: a free batch slot AND enough free blocks to
-        reserve the request's whole token budget.  ``n_shared`` FULL prefix
-        blocks come from the prefix cache (refcount bump, no free-list
-        draw), so only the tail + generation budget needs fresh blocks."""
+        reserve the request's whole token budget.  ``n_shared`` counts FULL
+        prefix blocks only — blocks mapped from the prefix cache by a
+        refcount bump with no free-list draw.  A chain whose tail block is
+        PARTIAL (the shared prefix ends mid-block) contributes
+        ``matched_tokens // block_size``, NOT ``len(chain)``: the partial
+        donor block is never mapped — its logical position is taken by a
+        freshly drawn eager-COW copy target, which must be counted against
+        the free list *before* admission succeeds (the one-block-short
+        refusal boundary, tests/test_paged.py)."""
         if max_total_len > self.layout.max_len:
             return False
         need = self.layout.blocks_for(max_total_len) - int(n_shared)
@@ -342,6 +372,135 @@ def copy_block(pool, src: int, dst: int):
     returned by :meth:`BlockPool.admit_shared` when a cached prefix ends
     mid-block, before any chunk is appended to the new slot."""
     return pool.at[dst].set(pool[src])
+
+
+# ------------------------------------------------------------ quantization
+def quant_dtype(kv_dtype: str):
+    """Pool storage dtype for a KV layout ("fp" -> None: caller keeps the
+    config dtype).  Raises on "fp8" when the jax build has no e4m3 type."""
+    if kv_dtype == "fp":
+        return None
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8":
+        if not HAS_FP8:
+            raise ValueError(
+                "kv_dtype='fp8' needs jnp.float8_e4m3fn (jax >= 0.4.x with "
+                "ml_dtypes); use 'int8' or 'fp' on this build")
+        return jnp.float8_e4m3fn
+    raise ValueError(f"kv_dtype must be one of {KV_LAYOUTS}, got {kv_dtype!r}")
+
+
+def kv_dtype_of(pool) -> str:
+    """Inverse of :func:`quant_dtype`: classify a pool by its dtype."""
+    if pool.dtype == jnp.int8:
+        return "int8"
+    if HAS_FP8 and pool.dtype == jnp.float8_e4m3fn:
+        return "fp8"
+    return "fp"
+
+
+def quantize_rows(rows, kv_dtype: str):
+    """Quantize fp rows to (codes, sz) with one affine pair per row.
+
+    rows: [..., F] — the last axis is the feature vector quantized as one
+    granule (per kv-head granularity falls out of the leading axes: a GQA
+    row [B, K, hd] carries K independent pairs).  Returns
+    (codes [..., F] in :func:`quant_dtype`, sz [..., 2] fp32) with
+    ``sz[..., 0]`` the scale and ``sz[..., 1]`` the zero-point, such that
+    ``dequantize_rows(codes, sz) ≈ rows``:
+
+        int8:  zp = (max+min)/2, scale = (max-min)/254,
+               codes = round((x - zp)/scale) ∈ [-127, 127]
+        fp8:   zp = 0, scale = amax/448, codes = e4m3(x/scale)
+
+    Degenerate rows (max == min, e.g. the all-zero rows of a fresh pool)
+    take scale = 1 so the affine stays invertible and the row round-trips
+    exactly (codes 0, zp = the constant).  Quantization is a pure function
+    of the row values — re-quantizing identical rows is bitwise stable,
+    which is what makes prefix-cached decode bitwise equal to uncached
+    *within* a kv layout."""
+    dt = quant_dtype(kv_dtype)
+    if dt is None:
+        raise ValueError("quantize_rows on a 'fp' layout — nothing to do")
+    x = rows.astype(jnp.float32)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    if kv_dtype == "int8":
+        zp = (hi + lo) * 0.5
+        rng = hi - lo
+        scale = jnp.where(rng > 0, rng / (2.0 * INT8_MAX), 1.0)
+        codes = jnp.round((x - zp) / scale)
+        codes = jnp.clip(codes, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    else:                                     # fp8: symmetric, sign in-code
+        amax = jnp.maximum(jnp.abs(hi), jnp.abs(lo))
+        zp = jnp.zeros_like(hi)
+        scale = jnp.where(amax > 0, amax / F8_MAX, 1.0)
+        # clamp BEFORE the cast: e4m3fn has no inf, overflow would be nan
+        codes = jnp.clip(x / scale, -F8_MAX, F8_MAX).astype(dt)
+    sz = jnp.concatenate([scale, zp], axis=-1)          # [..., 2]
+    return codes, sz
+
+
+def dequantize_rows(codes, sz):
+    """Inverse of :func:`quantize_rows`: ``codes*scale + zp`` in fp32.
+    codes: [..., F]; sz: [..., 2].  This is the SAME expression the Pallas
+    kernels apply in registers (kernels/etap/etap.py:_dequant) — the XLA
+    reference twin (kernels/etap/ref.py) goes through here, so kernel and
+    oracle share one definition of the dequant."""
+    return (codes.astype(jnp.float32) * sz[..., 0:1] + sz[..., 1:2])
+
+
+def quantize_pool(pool, kv_dtype: str):
+    """Quantize a whole fp pool [N, bs, *F] into (codes, sz [N, bs, *lead, 2])
+    — the test/bench path that packs a prefilled fp pool (dense_to_paged)
+    into the quantized layout wholesale."""
+    return quantize_rows(pool, kv_dtype)
+
+
+def row_bytes(feat: int, kv_dtype: str, fp_dtype=jnp.bfloat16,
+              granules: int = 1) -> int:
+    """KV bytes per written token row: `feat` features stored in the
+    layout's code dtype plus (for quantized layouts) `granules` fp32
+    (scale, zp) pairs.  The capacity lever the serve loop admits by."""
+    if kv_dtype == "fp":
+        return feat * jnp.dtype(fp_dtype).itemsize
+    return feat + granules * 8            # 1-byte codes + fp32 (scale, zp)
+
+
+def layout_for_bytes(budget_bytes: int, bytes_per_row: int, max_len: int,
+                     block_size: int = 64, spare_blocks: int = 0):
+    """Size a (layout, batch_slots) pair to a pool BYTE budget: as many
+    blocks as the budget buys at `bytes_per_row`, and as many full-length
+    batch slots as those blocks can back.  With the fp row size this
+    reproduces :func:`layout_for` exactly; with a quantized row size the
+    same budget admits ~2x (int8) the sequences — the acceptance lever of
+    DESIGN.md §11.  `spare_blocks` are held OUT of the slot computation
+    (the operator's COW / mid-block-admission headroom survives the
+    quantized re-sizing instead of being folded into extra slots)."""
+    max_blocks = max(1, -(-int(max_len) // block_size))
+    block_bytes = block_size * int(bytes_per_row)
+    num_blocks = max(2, 1 + int(budget_bytes) // block_bytes)
+    usable = max(1, num_blocks - 1 - max(0, int(spare_blocks)))
+    batch_slots = max(1, usable // max_blocks)
+    return (PagedLayout(block_size=block_size, num_blocks=num_blocks,
+                        max_blocks=max_blocks), batch_slots)
+
+
+def append_rows_quant(pool, sz_pool, table, lengths, rows):
+    """Quantized :func:`append_rows`: quantize the new rows in the pool's
+    layout and scatter codes + (scale, zp) through the same table/length
+    coordinates.  rows arrive in fp; returns (pool, sz_pool)."""
+    codes, sz = quantize_rows(rows, kv_dtype_of(pool))
+    return (append_rows(pool, table, lengths, codes),
+            append_rows(sz_pool, table, lengths, sz))
+
+
+def append_chunk_quant(pool, sz_pool, table, lengths, rows):
+    """Quantized :func:`append_chunk` (rows: [B, C, *F])."""
+    codes, sz = quantize_rows(rows, kv_dtype_of(pool))
+    return (append_chunk(pool, table, lengths, codes),
+            append_chunk(sz_pool, table, lengths, sz))
 
 
 def gather_blocks(pool, table):

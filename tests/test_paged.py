@@ -4,6 +4,8 @@ block boundaries, the bitwise dense↔paged contract at block-aligned
 lengths, allocator reuse-after-release + out-of-blocks admission refusal,
 and the continuous-batching serve loop end to end.  All Pallas runs are
 interpret=True on CPU; tolerances match tests/test_splitkv.py."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -171,6 +173,49 @@ def test_allocator_out_of_blocks_admission_refusal():
     assert bp.can_admit(48)                  # refusal clears after release
 
 
+def test_shared_admission_midblock_cow_refusal_boundary():
+    """ISSUE 5 satellite: when a shared prefix ends MID-block, the chain's
+    partial tail block is NOT mapped — its logical position needs a fresh
+    eager-COW copy target, which must be charged to the free list BEFORE
+    admission succeeds.  At exactly-one-block-short occupancy the
+    accounting must refuse; counting ``len(chain)`` as shared (the old
+    serve-loop arithmetic) would say yes here and strand the request
+    between a lying can_admit and a refusing admit_shared."""
+    bs = 16
+    # donor chain: 3 blocks holding 40 tokens (third block PARTIAL at 8)
+    layout = pc.PagedLayout(block_size=bs, num_blocks=1 + 3 + 2,
+                            max_blocks=5)
+    bp = pc.BlockPool(layout, 3)
+    donor = bp.admit(40, 40)
+    chain = [int(b) for b in bp.block_ids(donor)]
+    assert len(chain) == 3
+    # new request: same 40-token prefix + budget to 64 tokens = 4 logical
+    # blocks; 2 full shared blocks map, so it needs 4 - 2 = 2 fresh blocks
+    # (one of them the COW copy of the partial third block) but only 2
+    # remain... take one away to sit exactly one block short.
+    filler = bp.admit(bs, bs)                # consumes 1 block -> 1 free
+    n_full = 40 // bs                        # 2 FULL shared blocks
+    assert not bp.can_admit(64, n_shared=n_full)       # 2 needed, 1 free
+    # the buggy arithmetic (len(chain) == 3 shared) would claim it fits:
+    assert bp.can_admit(64, n_shared=len(chain))
+    # and admit_shared, which counts full blocks itself, refuses — the
+    # predicate and the admission must agree at the boundary
+    assert bp.admit_shared(40, 64, chain) is None
+    bp.check_conservation()
+    # with the missing block back, the same admission succeeds and returns
+    # the (partial donor block -> fresh private block) COW pair
+    bp.release(filler)
+    assert bp.can_admit(64, n_shared=n_full)
+    slot, cow = bp.admit_shared(40, 64, chain)
+    assert len(cow) == 1
+    src, dst = cow[0]
+    assert src == chain[2] and dst not in chain
+    # the mapped prefix shares refcounts; the COW target is private
+    assert all(int(bp.ref[b]) == 2 for b in chain[:2])
+    assert int(bp.ref[src]) == 1 and int(bp.ref[dst]) == 1
+    bp.check_conservation()
+
+
 def test_append_rows_across_block_boundary():
     """Token-by-token appends crossing a page boundary land in the right
     (block, slot) cells; inactive slots write only the null block."""
@@ -221,9 +266,12 @@ def test_release_nulls_whole_row_and_is_unreachable_from_device_views():
 def test_paged_split_geometry_page_granular():
     for nb in (1, 3, 7, 16):
         for n in (1, 2, 4, 8):
-            npb, padded = paged_split_geometry(nb, n)
-            assert padded % n == 0 and padded >= nb
-            assert npb * n == padded
+            n_eff, npb, padded = paged_split_geometry(nb, n)
+            assert padded % n_eff == 0 and padded >= nb
+            assert npb * n_eff == padded
+            # effective count: every split owns >= 1 REAL table column
+            assert 1 <= n_eff <= min(n, nb)
+            assert (n_eff - 1) * npb < nb
     plan = plan_splits_paged(1, 1024, 64, 16, 512)
     assert plan.block == 64                  # split unit is the page
     assert plan.n_splits * plan.nb_per_split >= 1024   # plan covers the table
@@ -242,12 +290,20 @@ def test_decode_step_paged_matches_dense():
     because the top-k router is DISCONTINUOUS — float-noise differences
     between the two layouts' summation orders can flip an expert at a
     near-tie gate and produce an O(1e-2) logit jump that has nothing to do
-    with the cache layout under test."""
+    with the cache layout under test.
+
+    Under REPRO_KV_DTYPE=int8/fp8 (the CI quantized leg) the paged cache
+    stores codes, so the comparison against the fp dense path loosens to
+    the layout's measured quantization-error budget instead of float
+    noise — the test then proves the quantized serving path tracks the fp
+    model, not that it equals it."""
     import dataclasses
 
     from repro.configs import get_config, reduced
     from repro.models import model
 
+    kv_dtype = os.environ.get("REPRO_KV_DTYPE", "fp")
+    atol = {"fp": 1e-4, "int8": 0.05, "fp8": 0.2}[kv_dtype]
     cfg = dataclasses.replace(reduced(get_config("deepseek_r1_671b")),
                               moe=None)
     params = model.init(jax.random.PRNGKey(0), cfg)
@@ -266,7 +322,7 @@ def test_decode_step_paged_matches_dense():
 
     layout = pc.layout_for(B, S + GEN, block_size=16)
     bp = pc.BlockPool(layout, B)
-    paged = model.init_paged_cache(cfg, layout)
+    paged = model.init_paged_cache(cfg, layout, kv_dtype=kv_dtype)
     for b in range(B):
         slot = bp.admit(0, S + GEN)          # cold: chunked prefill fills it
         assert slot == b
@@ -284,7 +340,7 @@ def test_decode_step_paged_matches_dense():
         for b in range(B):
             bp.append(b)
         np.testing.assert_allclose(np.asarray(lg), np.asarray(dense_lg[i]),
-                                   atol=1e-4, rtol=1e-4)
+                                   atol=atol, rtol=1e-4)
 
 
 def test_init_paged_cache_rejects_non_attention():
@@ -309,6 +365,8 @@ def test_continuous_batching_serve_loop():
     gens = {i: len(v) for i, v in res["outputs"].items()}
     assert res["tokens_served"] == sum(gens.values())
     assert all(n in (3, 6) for n in gens.values())  # the two gen buckets
-    # ragged stream through 2 slots must beat the naive fixed-batch count
+    # ragged stream through the slots must beat the naive fixed-batch
+    # count (batch_slots: quantized layouts admit MORE than --batch under
+    # the same byte budget, so the reported count is the bound)
     assert res["steps"] >= max(gens.values())
-    assert res["tokens_served"] <= 2 * res["steps"]
+    assert res["tokens_served"] <= res["batch_slots"] * res["steps"]

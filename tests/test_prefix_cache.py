@@ -329,12 +329,20 @@ def test_serve_prefix_cache_bitwise_and_prefills_shared_once():
     off = serve.run_paged(serve.parse_args(base + ["--no-prefix-cache"]),
                           cfg)
     assert on["outputs"] == off["outputs"]            # bitwise identical
-    # shared blocks prefilled exactly once: requests 2 and 3 each skip the
-    # 16 shared-prefix tokens request 1 prefilled
-    assert on["prefill_tokens_saved"] == 2 * 16
+    # token conservation holds under every kv layout: caching only moves
+    # prompt tokens from "run" to "skipped"
     assert on["prefill_tokens"] + on["prefill_tokens_saved"] \
         == off["prefill_tokens"]
     assert off["prefill_tokens_saved"] == 0 and off["prefix"] is None
-    # exactly one lookup per ADMITTED request (refusal retries don't count)
-    assert on["prefix"]["hits"] == 2 and on["prefix"]["lookups"] == 3
     assert on["decode_tokens"] == off["decode_tokens"] == on["tokens_served"]
+    if on["batch_slots"] == 1:
+        # serialized admission (the fp leg): requests 2 and 3 each skip
+        # the 16 shared-prefix tokens request 1 prefilled, and exactly one
+        # lookup per ADMITTED request (refusal retries don't count).
+        # Quantized legs (REPRO_KV_DTYPE=int8/fp8) expand batch_slots
+        # under the same byte budget, so all three requests admit COLD
+        # before any donor finishes prefill — hits legitimately drop to 0
+        # there (tests/test_quant.py covers quantized hits with a queue
+        # deeper than the expanded slot count).
+        assert on["prefill_tokens_saved"] == 2 * 16
+        assert on["prefix"]["hits"] == 2 and on["prefix"]["lookups"] == 3

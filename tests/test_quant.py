@@ -1,0 +1,386 @@
+"""Quantized paged KV cache validation (DESIGN.md §11, ISSUE 5).
+
+Four layers of proof, mirroring the fp paged suite (tests/test_paged.py):
+  · quantize→dequantize round-trips at adversarial values (all-zero rows,
+    single-outlier rows, negative-max rows) and BITWISE-stable
+    re-quantization — the property prefix-cache bitwise equality rides on;
+  · in-kernel dequant correctness: every quantized Pallas path (paged
+    single-pass, split-KV partials+combine, chunked prefill; MLA-fused and
+    separate-V) against the dense-dequant oracle (kernels/etap/ref.py) —
+    these must agree to float noise, the quantization error itself is
+    ALREADY in the oracle;
+  · accuracy budget vs the fp32 reference: int8 RMSE <= 5e-3, fp8 <= 2e-2
+    on the smoke shapes (the acceptance gates bench_quant also enforces);
+  · COW/scale co-movement and serve-loop capacity: copy_block moves codes
+    AND (scale, zp) together, int8 admits >= 1.8x the sequences of fp
+    under the same pool byte budget, and prefix-cache on/off stays
+    bitwise identical WITHIN the quantized layout.
+All Pallas runs are interpret=True on CPU."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.etap import decode_attention_paged, prefill_attention_paged
+from repro.kernels.etap import ops as etap_ops
+from repro.kernels.etap.ref import (dequantize, etap_decode_quant_ref,
+                                    etap_decode_ref)
+from repro.runtime import paged_cache as pc
+
+RNG = np.random.default_rng(7)
+QUANT_LAYOUTS = ["int8"] + (["fp8"] if pc.HAS_FP8 else [])
+RMSE_BUDGET = {"int8": 5e-3, "fp8": 2e-2}
+
+
+def _rmse(a, b):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    return float(np.sqrt(np.mean((a - b) ** 2)))
+
+
+# ------------------------------------------------------------- round trips
+@pytest.mark.parametrize("kv_dtype", QUANT_LAYOUTS)
+def test_roundtrip_adversarial_rows(kv_dtype):
+    """Per-row scale correctness at the values that break naive scaling:
+    all-zero rows (scale guard), single-outlier rows (range capture),
+    all-negative rows (max < 0), and constant rows (range 0, value != 0)."""
+    F = 64
+    rows = np.zeros((6, F), np.float32)
+    rows[1, 3] = 1000.0                       # single positive outlier
+    rows[2] = -RNG.uniform(1.0, 2.0, F)       # negative-max row
+    rows[3] = 5.0                             # constant non-zero (range 0)
+    rows[4] = RNG.normal(size=F)
+    rows[5, 7] = -1e-3                        # tiny range
+    codes, sz = pc.quantize_rows(jnp.asarray(rows), kv_dtype)
+    deq = np.asarray(pc.dequantize_rows(codes, sz))
+    # all-zero and constant rows are EXACT (scale guard keeps the affine
+    # invertible: codes 0, zp = the constant)
+    np.testing.assert_array_equal(deq[0], rows[0])
+    if kv_dtype == "int8":
+        np.testing.assert_array_equal(deq[3], rows[3])
+    # every row's error stays within one quantization step of ITS range:
+    # int8 resolves the row range in 254 steps; e4m3's 3 mantissa bits
+    # give half-ULP relative error <= 1/16 of the value's binade, so the
+    # worst absolute error across a row is amax/16
+    rng_row = rows.max(1) - rows.min(1)
+    step = {"int8": rng_row / 254.0,
+            "fp8": np.abs(rows).max(1) / 16.0}[kv_dtype]
+    err = np.abs(deq - rows).max(1)
+    assert (err <= np.maximum(step, 1e-7) + 1e-7).all(), (err, step)
+    # the outlier itself must be representable (scale follows the max)
+    assert abs(deq[1, 3] - 1000.0) <= max(np.asarray(step)[1], 16.0)
+
+
+@pytest.mark.parametrize("kv_dtype", QUANT_LAYOUTS)
+def test_requantization_bitwise_stable(kv_dtype):
+    """Quantization is a pure function of the row values: the same rows
+    quantize to identical codes AND identical (scale, zp) every time —
+    the property that makes prefix-cached decode bitwise equal to
+    uncached within a quantized layout."""
+    rows = jnp.asarray(RNG.normal(size=(16, 48)), jnp.float32)
+    c1, s1 = pc.quantize_rows(rows, kv_dtype)
+    c2, s2 = pc.quantize_rows(rows, kv_dtype)
+    np.testing.assert_array_equal(np.asarray(c1).view(np.uint8),
+                                  np.asarray(c2).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    # and round-tripping the DEQUANTIZED values re-quantizes bitwise too
+    # (idempotence: the dequant grid is a fixed point of the quantizer)
+    c3, s3 = pc.quantize_rows(pc.dequantize_rows(c1, s1), kv_dtype)
+    np.testing.assert_allclose(np.asarray(pc.dequantize_rows(c3, s3)),
+                               np.asarray(pc.dequantize_rows(c1, s1)),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("kv_dtype", QUANT_LAYOUTS)
+def test_cow_copy_moves_codes_and_scales(kv_dtype):
+    """copy_block on a quantized pool must move the code block AND its
+    (scale, zp) block as one unit — a COW copy that dropped the scales
+    would dequantize the copied prefix with the TARGET's stale affine.
+    The copied block is bitwise identical to its donor."""
+    N, bs, F = 5, 8, 32
+    pool_fp = jnp.asarray(RNG.normal(size=(N, bs, F)), jnp.float32)
+    codes, sz = pc.quantize_pool(pool_fp, kv_dtype)
+    codes2 = pc.copy_block(codes, 2, 4)
+    sz2 = pc.copy_block(sz, 2, 4)
+    np.testing.assert_array_equal(np.asarray(codes2[4]).view(np.uint8),
+                                  np.asarray(codes[2]).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(sz2[4]), np.asarray(sz[2]))
+    # dequantized content follows bitwise
+    np.testing.assert_array_equal(
+        np.asarray(pc.dequantize_rows(codes2, sz2)[4]),
+        np.asarray(pc.dequantize_rows(codes, sz)[2]))
+
+
+@pytest.mark.parametrize("kv_dtype", QUANT_LAYOUTS)
+def test_model_copy_paged_block_covers_sz_pools(kv_dtype):
+    """model.copy_paged_block tree-maps the whole cache pytree, so the
+    "*_sz" leaves of a quantized cache ride along with the code pools —
+    the prefix-cache COW path needs no quantization-aware special case."""
+    from repro.configs import get_config, reduced
+    from repro.models import model
+    cfg = dataclasses.replace(reduced(get_config("deepseek_r1_671b")),
+                              moe=None)
+    layout = pc.PagedLayout(block_size=4, num_blocks=6, max_blocks=4)
+    cache = model.init_paged_cache(cfg, layout, kv_dtype=kv_dtype)
+    # scribble distinguishable values into block 1 of every leaf
+    cache = jax.tree.map(
+        lambda p: p.at[:, 1].set(jnp.ones_like(p[:, 1])), cache)
+    copied = model.copy_paged_block(cache, 1, 3)
+    for src_leaf, dst_leaf in zip(jax.tree.leaves(cache),
+                                  jax.tree.leaves(copied)):
+        np.testing.assert_array_equal(
+            np.asarray(dst_leaf[:, 3].astype(jnp.float32)),
+            np.asarray(src_leaf[:, 1].astype(jnp.float32)))
+
+
+# --------------------------------------------------- kernels vs the oracle
+S = 320
+RAGGED = [7, 64, 65, 320]
+
+
+def _quant_paged(dense, lengths, page, kv_dtype):
+    layout = pc.layout_for(dense.shape[0], dense.shape[1], block_size=page,
+                           spare_blocks=2)
+    pool, bp = pc.dense_to_paged(dense, np.asarray(lengths), layout)
+    codes, sz = pc.quantize_pool(pool, kv_dtype)
+    return codes, sz, bp
+
+
+@pytest.mark.parametrize("kv_dtype", QUANT_LAYOUTS)
+@pytest.mark.parametrize("n_splits", [1, 4])
+def test_quant_paged_mla_fused_kernel_vs_oracle(kv_dtype, n_splits):
+    """Quantized paged MLA decode (single-pass and split-KV) against the
+    dense-dequant oracle: the kernels' in-register dequant must match the
+    reference dequant to float noise — and both must sit inside the
+    layout's RMSE budget of the fp32 reference."""
+    q = jnp.asarray(RNG.normal(size=(4, 8, 96)), jnp.float32)
+    kv = jnp.asarray(RNG.normal(size=(4, S, 96)), jnp.float32)
+    dv, scale = 64, 96 ** -0.5
+    L = jnp.asarray(RAGGED, jnp.int32)
+    codes, sz, bp = _quant_paged(kv, RAGGED, 16, kv_dtype)
+    table, lengths = bp.device_views()
+    out = etap_ops.etap_decode_mla_paged_splitkv(
+        q, codes, dv, table, lengths, scale=scale, n_splits=n_splits,
+        kv_sz=sz)
+    kd = pc.gather_blocks(codes, table)
+    szd = pc.gather_blocks(sz, table)
+    oracle = etap_decode_quant_ref(q, kd, szd, None, None, L, scale=scale,
+                                   dv=dv)
+    assert _rmse(out, oracle) <= 1e-5
+    ref = etap_decode_ref(q, kv, kv[..., :dv], L, scale=scale)
+    assert _rmse(out, ref) <= RMSE_BUDGET[kv_dtype]
+    # the XLA twin (gather + dense dequant + blockwise loop) agrees too
+    out_x = decode_attention_paged(q, codes, None, table, lengths,
+                                   scale=scale, dv=dv, k_sz=sz, n_splits=1)
+    assert _rmse(out_x, oracle) <= 1e-5
+
+
+@pytest.mark.parametrize("kv_dtype", QUANT_LAYOUTS)
+@pytest.mark.parametrize("n_splits", [1, 4])
+def test_quant_paged_separate_v_kernel_vs_oracle(kv_dtype, n_splits):
+    q = jnp.asarray(RNG.normal(size=(4, 8, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(4, S, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(4, S, 48)), jnp.float32)
+    scale = 64 ** -0.5
+    L = jnp.asarray(RAGGED, jnp.int32)
+    k_codes, k_sz, bp = _quant_paged(k, RAGGED, 16, kv_dtype)
+    v_codes, v_sz, _ = _quant_paged(v, RAGGED, 16, kv_dtype)
+    table, lengths = bp.device_views()
+    out = etap_ops.etap_decode_paged_splitkv(
+        q, k_codes, v_codes, table, lengths, scale=scale,
+        n_splits=n_splits, k_sz=k_sz, v_sz=v_sz)
+    oracle = etap_decode_quant_ref(
+        q, pc.gather_blocks(k_codes, table), pc.gather_blocks(k_sz, table),
+        pc.gather_blocks(v_codes, table), pc.gather_blocks(v_sz, table),
+        L, scale=scale)
+    assert _rmse(out, oracle) <= 1e-5
+    ref = etap_decode_ref(q, k, v, L, scale=scale)
+    assert _rmse(out, ref) <= RMSE_BUDGET[kv_dtype]
+
+
+@pytest.mark.parametrize("kv_dtype", QUANT_LAYOUTS)
+def test_quant_chunked_prefill_kernel_vs_xla(kv_dtype):
+    """Quantized chunked prefill: the Pallas kernel and the XLA gather
+    twin see the SAME quantized pool, so they must agree to float noise;
+    both must track the fp chunked prefill within the RMSE budget."""
+    B, CQ, H, DIM, DV, page = 2, 8, 4, 96, 64, 16
+    lengths = [24, 40]                      # chunk starts (pool rows before)
+    total = [l + CQ for l in lengths]
+    kv = jnp.asarray(RNG.normal(size=(B, 64, DIM)), jnp.float32)
+    q = jnp.asarray(RNG.normal(size=(B, CQ, H, DIM)), jnp.float32)
+    scale = DIM ** -0.5
+    codes, sz, bp = _quant_paged(kv, total, page, kv_dtype)
+    table, _ = bp.device_views()
+    starts = jnp.asarray(lengths, jnp.int32)
+    out_k = etap_ops.etap_prefill_mla_paged(q, codes, DV, table, starts,
+                                            scale=scale, kv_sz=sz)
+    out_x = prefill_attention_paged(q, codes, None, table, starts,
+                                    scale=scale, dv=DV, k_sz=sz)
+    assert _rmse(out_k, out_x) <= 1e-5
+    # fp path on the same logical rows, only the storage layout differs
+    pool_fp, bp_fp = pc.dense_to_paged(kv, np.asarray(total),
+                                       pc.layout_for(B, 64, block_size=page,
+                                                     spare_blocks=2))
+    table_fp, _ = bp_fp.device_views()
+    out_fp = etap_ops.etap_prefill_mla_paged(q, pool_fp, DV, table_fp,
+                                             starts, scale=scale)
+    assert _rmse(out_k, out_fp) <= RMSE_BUDGET[kv_dtype]
+
+
+@pytest.mark.parametrize("kv_dtype", QUANT_LAYOUTS)
+def test_quant_append_rows_then_decode_matches_wholesale(kv_dtype):
+    """Quantize-on-write (append_rows_quant / append_chunk_quant) lands
+    the same codes as quantizing the packed pool wholesale: writes are
+    row-granular and quantization is a pure per-row function, so HOW rows
+    entered the pool cannot change their stored form."""
+    B, Sx, F, page = 2, 32, 24, 8
+    dense = jnp.asarray(RNG.normal(size=(B, Sx, F)), jnp.float32)
+    layout = pc.layout_for(B, Sx, block_size=page)
+    # path A: pack fp then quantize wholesale
+    pool_fp, bp = pc.dense_to_paged(dense, [Sx, Sx], layout)
+    codes_a, sz_a = pc.quantize_pool(pool_fp, kv_dtype)
+    # path B: start empty, append a chunk then token-by-token rows
+    qdt = pc.quant_dtype(kv_dtype)
+    codes_b = jnp.zeros((layout.num_blocks, page, F), qdt)
+    sz_b = jnp.concatenate(
+        [jnp.ones((layout.num_blocks, page, 1), jnp.float32),
+         jnp.zeros((layout.num_blocks, page, 1), jnp.float32)], -1)
+    table = jnp.asarray(bp.table)
+    lens = jnp.zeros((B,), jnp.int32)
+    C = 20
+    codes_b, sz_b = pc.append_chunk_quant(codes_b, sz_b, table, lens,
+                                          dense[:, :C])
+    for t in range(C, Sx):
+        codes_b, sz_b = pc.append_rows_quant(
+            codes_b, sz_b, table, jnp.full((B,), t, jnp.int32), dense[:, t])
+    live = np.asarray(bp.table).reshape(-1)
+    live = live[live != pc.NULL_BLOCK]
+    np.testing.assert_array_equal(
+        np.asarray(codes_a[live]).view(np.uint8),
+        np.asarray(codes_b[live]).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(sz_a[live]),
+                                  np.asarray(sz_b[live]))
+
+
+def test_dequantize_twin_is_the_runtime_affine():
+    rows = jnp.asarray(RNG.normal(size=(4, 8)), jnp.float32)
+    codes, sz = pc.quantize_rows(rows, "int8")
+    np.testing.assert_array_equal(np.asarray(dequantize(codes, sz)),
+                                  np.asarray(pc.dequantize_rows(codes, sz)))
+
+
+# -------------------------------------------------- capacity + serve loop
+def test_layout_for_bytes_fp_reproduces_layout_for():
+    """At the fp row size the byte-budget sizing is EXACTLY the slot-count
+    sizing — one code path serves both, so they can never drift."""
+    for B, max_len, bs in ((2, 96, 16), (4, 64, 8), (1, 128, 64)):
+        base = pc.layout_for(B, max_len, block_size=bs)
+        row = 100
+        budget = (base.num_blocks - 1) * bs * row
+        layout, slots = pc.layout_for_bytes(budget, row, max_len,
+                                            block_size=bs)
+        assert slots == B
+        assert layout.num_blocks == base.num_blocks
+        assert layout.max_blocks == base.max_blocks
+
+
+def test_int8_capacity_ratio_ge_1_8x():
+    """ACCEPTANCE (ISSUE 5): under the SAME pool byte budget the int8
+    layout must admit >= 1.8x the concurrent full-length sequences of the
+    fp layout (bf16 config: 2-byte rows vs 1-byte codes + 8/row sz)."""
+    from repro.configs import get_config, reduced
+    from repro.models import model
+    cfg = reduced(get_config("deepseek_r1_671b"))
+    fp_row = model.paged_row_bytes(cfg, "fp")
+    q_row = model.paged_row_bytes(cfg, "int8")
+    B, max_len, bs = 4, 96, 16
+    budget = (pc.layout_for(B, max_len, block_size=bs).num_blocks - 1) \
+        * bs * fp_row
+    _, fp_slots = pc.layout_for_bytes(budget, fp_row, max_len,
+                                      block_size=bs)
+    _, q_slots = pc.layout_for_bytes(budget, q_row, max_len, block_size=bs)
+    assert fp_slots == B
+    assert q_slots >= 1.8 * fp_slots, (q_slots, fp_slots)
+
+
+def test_serve_int8_admits_more_and_prefix_stays_bitwise():
+    """End to end through the serve loop: --kv-dtype int8 expands the
+    admitted batch >= 1.8x over fp under the same byte budget, the prefix
+    cache still HITS once the queue outruns the expanded slots, and
+    prefix-cache on/off outputs stay BITWISE identical within the int8
+    layout (quantize-on-write is a pure row function, so donor-written
+    blocks decode exactly as self-written ones)."""
+    from repro.configs import get_config, reduced
+    from repro.launch import serve
+    cfg = dataclasses.replace(reduced(get_config("deepseek_r1_671b")),
+                              moe=None)
+    base = ["--reduced", "--batch", "1", "--prompt", "24", "--gen", "4",
+            "--requests", "8", "--page-size", "8", "--prefill-chunk", "8",
+            "--shared-prefix", "16", "--cache-layout", "paged"]
+    fp = serve.run_paged(serve.parse_args(base + ["--kv-dtype", "fp"]), cfg)
+    on = serve.run_paged(serve.parse_args(base + ["--kv-dtype", "int8"]),
+                         cfg)
+    off = serve.run_paged(serve.parse_args(
+        base + ["--kv-dtype", "int8", "--no-prefix-cache"]), cfg)
+    assert on["batch_slots"] >= 1.8 * fp["batch_slots"]
+    assert on["outputs"] == off["outputs"]          # bitwise within int8
+    assert len(on["outputs"]) == 8                  # every request served
+    # 8 requests through ~3 slots: later admissions must hit the trie
+    assert on["prefix"]["hits"] > 0
+    assert on["prefill_tokens_saved"] > 0
+    assert on["prefill_tokens"] + on["prefill_tokens_saved"] \
+        == off["prefill_tokens"]
+
+
+@pytest.mark.parametrize("arch", ["deepseek_r1_671b", "qwen3_8b"])
+@pytest.mark.parametrize("kv_dtype", QUANT_LAYOUTS)
+def test_decode_step_quant_tracks_fp(kv_dtype, arch):
+    """Model-level guard on the quantization error budget: teacher-forced
+    paged decode logits under int8/fp8 stay within the measured budget of
+    the fp paged path on the same prompts.  Two archs cover the two
+    quantized cache layouts: deepseek MLA (single latent pool streamed by
+    the quant Pallas kernels) and qwen3 GQA (K/V pools with PER-HEAD
+    (scale, zp) granules through the gather-dequant path:
+    attention._append_paged_kv / _gather_paged_kv /
+    init_attention_cache_paged — without this leg the GQA quant branch
+    has no automated coverage and could rot behind the MLA default)."""
+    from repro.configs import get_config, reduced
+    from repro.models import model
+    atol = {"int8": 0.05, "fp8": 0.25}[kv_dtype]
+    cfg = dataclasses.replace(reduced(get_config(arch)), moe=None)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    B, Sp, GEN = 2, 16, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, Sp), 0,
+                              cfg.vocab_size)
+    forced = jax.random.randint(jax.random.PRNGKey(2), (GEN, B), 0,
+                                cfg.vocab_size)
+    layout = pc.layout_for(B, Sp + GEN, block_size=8)
+
+    def run(kvd):
+        bp = pc.BlockPool(layout, B)
+        cache = model.init_paged_cache(cfg, layout, kv_dtype=kvd)
+        for b in range(B):
+            bp.admit(0, Sp + GEN)
+        table, lengths = bp.device_views()
+        _, cache = model.prefill_chunk(params, cfg, cache, toks, table,
+                                       lengths)
+        for b in range(B):
+            bp.extend(b, Sp)
+        out = []
+        for i in range(GEN):
+            table, lengths = bp.device_views()
+            lg, cache = model.decode_step(params, cfg, cache, forced[i],
+                                          None, cache_layout="paged",
+                                          block_table=table,
+                                          lengths=lengths)
+            for b in range(B):
+                bp.append(b)
+            out.append(np.asarray(lg))
+        return out
+
+    fp = run("fp")
+    qt = run(kv_dtype)
+    for a, b in zip(fp, qt):
+        np.testing.assert_allclose(b, a, atol=atol, rtol=0)

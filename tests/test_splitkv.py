@@ -11,7 +11,8 @@ from repro.core.etap import etap_decode_splitkv_xla
 from repro.kernels.etap import ops as etap_ops
 from repro.kernels.etap.combine import combine_splits
 from repro.kernels.etap.ref import etap_decode_ref
-from repro.kernels.etap.schedule import plan_splits
+from repro.kernels.etap.schedule import (paged_split_geometry, plan_splits,
+                                         split_geometry)
 from repro.kernels.flash_decode import ops as fd_ops
 
 RNG = np.random.default_rng(7)
@@ -154,3 +155,141 @@ def test_scheduler_split_granularity():
             p = plan_splits(bg, s, 16, 512)
             assert p.n_splits >= 1 and p.nb_per_split >= 1
             assert p.padded_s >= s
+
+
+def test_split_geometry_exhaustive_small_shapes():
+    """ISSUE 5 satellite: exhaustive small-shape sweep of the canonical
+    geometry.  Invariants for EVERY (S, block, n_splits) request:
+      · the effective count never exceeds the real block count (so no
+        split is pure zero-length padding),
+      · every split's first block index lands inside the real context,
+      · padding covers S and honours the kernels' divisibility contract,
+      · degrading is monotone: asking for more splits never yields fewer.
+    The old geometry emitted (n-1)*npb >= nb splits of pure padding for
+    n_splits > nb — each a grid row computing a fully-masked block."""
+    for S in range(1, 10):
+        for n_req in range(1, 10):
+            for block in range(1, 6):
+                blk, n, npb, padded = split_geometry(S, block, n_req)
+                nb = -(-S // blk)
+                assert 1 <= n <= min(n_req, nb), (S, block, n_req, n)
+                assert (n - 1) * npb < nb            # no all-padding split
+                assert padded == n * npb * blk >= S
+    # monotone degrade at fixed (S, block)
+    for S in (1, 3, 5, 9):
+        for block in (1, 2, 4):
+            ns = [split_geometry(S, block, r)[1] for r in range(1, 12)]
+            assert all(a <= b for a, b in zip(ns, ns[1:])), (S, block, ns)
+    # paged twin: same invariants at table granularity
+    for nb in range(1, 10):
+        for n_req in range(1, 12):
+            n, npb, padded = paged_split_geometry(nb, n_req)
+            assert 1 <= n <= min(n_req, nb)
+            assert (n - 1) * npb < nb
+            assert padded == n * npb >= nb
+
+
+@pytest.mark.parametrize("S,block,n_req", [
+    (4, 512, 8),     # S < block AND n_splits > nb: collapses to 1 split
+    (96, 32, 8),     # nb=3 < 8 requested
+    (5, 2, 4),       # nb=3, npb=1 -> 3 effective
+    (1, 1, 7),       # single token
+])
+def test_splitkv_degrades_not_zero_length(S, block, n_req):
+    """Entry points with n_splits > nb must compute the right answer via
+    fewer non-empty splits (the old path launched zero-length splits that
+    only the combine's ℓ=0 weight kept from corrupting O)."""
+    q, k, v, L = _mk(2, 4, 16, 16, S)
+    scale = 16 ** -0.5
+    ref = etap_decode_ref(q, k, v, L, scale=scale)
+    out = etap_ops.etap_decode_splitkv(q, k, v, L, scale=scale, block=block,
+                                       n_splits=n_req)
+    assert _rmse(out, ref) <= 1e-5
+    out_x = etap_decode_splitkv_xla(q, k, v, L, scale=scale, block=block,
+                                    n_splits=n_req)
+    assert _rmse(out_x, ref) <= 1e-5
+    out_f = fd_ops.flash_decode_splitkv(q, k, v, L, scale=scale,
+                                        block=block, n_splits=n_req)
+    assert _rmse(out_f, ref) <= 1e-5
+    # the phase-1 wrapper reports the effective split count in its shapes
+    m, l, acc = etap_ops.etap_partial(q, k, v, L, scale=scale, block=block,
+                                      n_splits=n_req)
+    blk, n_eff, npb, _ = split_geometry(S, block, n_req)
+    assert m.shape[1] == n_eff <= -(-S // blk)
+
+
+def test_paged_splitkv_degrades_not_zero_length():
+    """Paged twin: a 3-column table asked for 8 splits runs 3."""
+    from repro.runtime import paged_cache as pc
+    S, page = 40, 16                          # 3 table columns
+    q, k, v, L = _mk(2, 4, 16, 16, S, lengths=[23, 40])
+    scale = 16 ** -0.5
+    ref = etap_decode_ref(q, k, v, L, scale=scale)
+    layout = pc.layout_for(2, S, block_size=page)
+    k_pool, bp = pc.dense_to_paged(k, np.asarray(L), layout)
+    v_pool, _ = pc.dense_to_paged(v, np.asarray(L), layout)
+    table, lengths = bp.device_views()
+    out = etap_ops.etap_decode_paged_splitkv(q, k_pool, v_pool, table,
+                                             lengths, scale=scale,
+                                             n_splits=8)
+    assert _rmse(out, ref) <= 1e-5
+
+
+# ----------------------------------------------------------------- combine
+def test_combine_fp32_invariant_bf16_output():
+    """ISSUE 5 satellite: the phase-2 merge must stay fp32 END-TO-END and
+    only cast O at the epilogue.  Oracle: fp64 stats merged in fp64.  The
+    check that would catch a premature downcast: hand the combine bf16
+    stats — the upcast-on-entry contract bounds the result by bf16 INPUT
+    rounding (~1e-2 relative), while a merge computed IN bf16 (exp/sum in
+    half precision, the pre-fix dtype-following behaviour) drifts far
+    beyond it on near-tie split maxima."""
+    BG, n, H, Dv = 3, 4, 8, 16
+    # near-tie maxima across splits: the regime where half-precision
+    # exp(m - m*) collapses distinct weights
+    m = jnp.asarray(10.0 + 1e-2 * RNG.random(size=(BG, n, H)), jnp.float32)
+    l = jnp.asarray(1.0 + RNG.random(size=(BG, n, H)), jnp.float32)
+    acc = jnp.asarray(RNG.normal(size=(BG, n, Dv, H)), jnp.float32)
+
+    def oracle(m, l, acc):
+        m64, l64, a64 = (np.asarray(x, np.float64) for x in (m, l, acc))
+        mg = m64.max(1, keepdims=True)
+        w = np.exp(m64 - mg)
+        lg = (l64 * w).sum(1)
+        ag = (a64 * w[:, :, None, :]).sum(1)
+        return np.swapaxes(ag / lg[:, None, :], 1, 2)
+
+    ref = oracle(m, l, acc)
+    for backend in ("pallas", "xla"):
+        # fp32 stats, bf16 output: only the epilogue cast may lose bits
+        o32 = combine_splits(m, l, acc, transposed=True,
+                             out_dtype=jnp.bfloat16, combine=backend)
+        assert o32.dtype == jnp.bfloat16
+        err32 = np.abs(np.asarray(o32, np.float64) - ref).max()
+        assert err32 <= np.abs(ref).max() * 1e-2 + 1e-3, (backend, err32)
+        # bf16 stats: the upcast-on-entry contract keeps the error at the
+        # level of the INPUT rounding, not of half-precision arithmetic
+        mb, lb, ab = (x.astype(jnp.bfloat16) for x in (m, l, acc))
+        ob = combine_splits(mb, lb, ab, transposed=True,
+                            out_dtype=jnp.bfloat16, combine=backend)
+        refb = oracle(mb.astype(jnp.float32), lb.astype(jnp.float32),
+                      ab.astype(jnp.float32))
+        errb = np.abs(np.asarray(ob, np.float64) - refb).max()
+        assert errb <= np.abs(refb).max() * 2e-2 + 1e-3, (backend, errb)
+
+
+def test_combine_untransposed_fp32_invariant():
+    """Same contract for the baseline (untransposed) orientation."""
+    BG, n, H, Dv = 2, 3, 4, 8
+    m = jnp.asarray(5.0 + 1e-2 * RNG.random(size=(BG, n, H)), jnp.float32)
+    l = jnp.asarray(1.0 + RNG.random(size=(BG, n, H)), jnp.float32)
+    acc = jnp.asarray(RNG.normal(size=(BG, n, H, Dv)), jnp.float32)
+    o_ref = combine_splits(m, l, acc, transposed=False,
+                           out_dtype=jnp.float32, combine="xla")
+    for backend in ("pallas", "xla"):
+        ob = combine_splits(m.astype(jnp.bfloat16), l.astype(jnp.bfloat16),
+                            acc.astype(jnp.bfloat16), transposed=False,
+                            out_dtype=jnp.bfloat16, combine=backend)
+        err = np.abs(np.asarray(ob, np.float64)
+                     - np.asarray(o_ref, np.float64)).max()
+        assert err <= np.abs(np.asarray(o_ref)).max() * 2e-2 + 1e-3
