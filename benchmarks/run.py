@@ -3,9 +3,10 @@ Prints ``name,us_per_call,derived`` CSV rows (derived = the artifact's
 headline metric).  ``--kv-splits`` runs the split-KV decode sweep instead
 and records per-split-count results to BENCH_splitkv.json.  ``--smoke``
 runs the fast CI subset (kernel interpret paths + paged cache + prefix
-cache + a tiny split-KV sweep) and records BENCH_smoke.json +
-BENCH_prefix.json + BENCH_smoke_splitkv.json — the per-PR perf-trajectory
-artifacts the CI smoke job uploads."""
+cache + the multi-tenant scheduler + a tiny split-KV sweep) and records
+BENCH_smoke.json + BENCH_prefix.json + BENCH_serve.json +
+BENCH_smoke_splitkv.json — the per-PR perf-trajectory artifacts the CI
+smoke job uploads."""
 from __future__ import annotations
 
 import argparse
@@ -369,6 +370,139 @@ def bench_quant():
     return rows
 
 
+def bench_serve():
+    """Multi-tenant scheduler subsystem (DESIGN.md §12) → BENCH_serve.json.
+
+    Two kinds of rows, same split as bench_prefix: the GATED timings are
+    pure host-side scheduler/pool roundtrips (admit → preempt → restore
+    and swap_out → swap_in at serving scale — no device dispatch, stable
+    on shared runners); the trace-driven serve SWEEP rows are
+    informational (us=0, under the noise-floor rule) and carry the
+    per-priority-class p50/p99 TTFT/ITL tails plus preemption counts.
+    The acceptance criteria are HARD-asserted before the artifact is
+    written: under a ~2x over-subscribed burst trace every request
+    completes (zero permanent refusals) and greedy outputs are BITWISE
+    identical to an uncontended run, for both evacuation modes."""
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.launch import serve
+    from repro.runtime import scheduler as sch
+    from repro.runtime.paged_cache import BlockPool, PagedLayout
+    from repro.runtime.prefix_cache import PrefixCache
+
+    rows = []
+    # --- gated: admit -> preempt (recompute) -> restore roundtrip.  Half
+    # the requests fit; the other half arrive at higher priority and evict
+    # them; the victims re-admit as slots drain — every path in the policy
+    # (victim selection, pin/unpin, backoff, idle kick) runs host-side.
+    bs, nb, n_seq = 16, 8, 64
+    layout = PagedLayout(block_size=bs, num_blocks=1 + (n_seq // 2) * nb,
+                         max_blocks=nb)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 50000, size=(4 * bs,)) for _ in range(n_seq)]
+
+    def sched_preempt_roundtrip():
+        bp = BlockPool(layout, n_seq // 2)
+        sched = sch.Scheduler(bp, PrefixCache(bs))
+        for i, toks in enumerate(prompts):
+            late = i >= n_seq // 2        # high class arrives second and
+            sched.add(sch.Request(id=i, prompt=toks, gen=4 * bs,
+                                  priority=0 if late else 1,
+                                  arrival=int(late)))     # evicts the first
+        for tick in range(3):
+            sched.admit(tick)             # fill; then evict the low class
+        while sched.queue:                # drain: finish runners, restore
+            for r in list(sched.by_slot.values()):
+                r.remaining = 0
+                r.replay.clear()
+                sched.finish(r)
+            sched.admit(tick)
+            tick += 1
+        for r in list(sched.by_slot.values()):
+            r.remaining = 0
+            r.replay.clear()
+            sched.finish(r)
+        assert len(sched.done) == n_seq
+        assert sched.stats()["preemptions"] > 0
+
+    rows.append(("serve/sched_preempt_roundtrip",
+                 _best_of(sched_preempt_roundtrip),
+                 f"{n_seq}reqs through {n_seq // 2}slots x 2 classes"))
+
+    # --- gated: two-tier swap accounting roundtrip (no bytes, pure pool)
+    def swap_roundtrip():
+        bp = BlockPool(layout, n_seq // 2, host_blocks=(n_seq // 2) * nb)
+        for _ in range(50):
+            slots = []
+            for _ in range(n_seq // 2):
+                s = bp.admit(0, nb * bs)
+                bp.extend(s, nb * bs)
+                slots.append(s)
+            for s in slots:
+                assert bp.swap_out(s, f"k{s}") is not None
+            for s in slots:
+                assert bp.swap_in(f"k{s}") is not None
+            for s in range(bp.batch_slots):
+                if bp.active[s]:
+                    bp.release(s)
+        bp.check_conservation()
+
+    rows.append(("serve/swap_roundtrip_x50", _best_of(swap_roundtrip),
+                 f"{n_seq // 2}slots x {nb}blocks/seq"))
+
+    # --- informational: trace-driven serve sweep through the real loop
+    # (reduced MLA arch, MoE dropped: contended == uncontended bitwise)
+    cfg = dataclasses.replace(reduced(get_config("deepseek_r1_671b")),
+                              moe=None)
+    base = ["--reduced", "--prompt", "24", "--gen", "8", "--requests", "6",
+            "--page-size", "8", "--prefill-chunk", "8", "--cache-layout",
+            "paged", "--priority-classes", "3", "--arrival-rate", "0.25",
+            "--trace", "burst", "--burst-size", "3", "--retry-backoff", "4",
+            "--paranoia", "4"]
+    runs = {}
+    for name, argv in (("calm", ["--batch", "8"]),
+                       ("recompute", ["--batch", "2",
+                                      "--preemption", "recompute"]),
+                       ("swap", ["--batch", "2", "--preemption", "swap"])):
+        res = serve.run_paged(serve.parse_args(base + argv), cfg)
+        runs[name] = res
+        s = res["sched"]
+        rows.append((f"serve/trace/{name}", 0.0,
+                     f"preempts={s['preemptions']};"
+                     f"refusals={res['refusals']};"
+                     f"replayed={res['replayed_tokens']};"
+                     f"served={res['tokens_served']}"))
+        for cls, c in res["classes"].items():
+            rows.append((f"serve/trace/{name}/class{cls}", 0.0,
+                         f"n={c['n']};preempts={c['preemptions']};"
+                         f"ttft_p50={c['ttft_p50_ms']:.1f}ms;"
+                         f"ttft_p99={c['ttft_p99_ms']:.1f}ms;"
+                         f"itl_p50={c['itl_p50_ms']:.2f}ms;"
+                         f"itl_p99={c['itl_p99_ms']:.2f}ms"))
+    # acceptance, asserted before the artifact can become a baseline
+    calm = runs["calm"]
+    assert calm["sched"]["preemptions"] == 0
+    for name in ("recompute", "swap"):
+        res = runs[name]
+        assert len(res["outputs"]) == 6, \
+            f"{name}: permanent refusal under over-subscription"
+        assert res["outputs"] == calm["outputs"], \
+            f"{name}: contended outputs diverged from uncontended"
+    if runs["recompute"]["kv_dtype"] == "fp":   # quantized legs widen slots
+        assert runs["recompute"]["sched"]["preempts_recompute"] > 0
+        assert runs["swap"]["sched"]["preempts_swap"] > 0
+
+    with open("BENCH_serve.json", "w") as f:
+        json.dump({"meta": bench_meta("serve"),
+                   "geometry": {"page": bs, "slots": n_seq // 2,
+                                "blocks_per_seq": nb},
+                   "rows": [{"name": n, "us": us, "derived": str(d)}
+                            for n, us, d in rows]}, f, indent=2)
+    rows.append(("serve/json", 0.0, "BENCH_serve.json"))
+    return rows
+
+
 def bench_splitkv(full: bool = False):
     """Split-KV ETAP decode sweep → CSV rows + BENCH_splitkv.json."""
     from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
@@ -387,16 +521,18 @@ def bench_splitkv(full: bool = False):
 def bench_smoke():
     """CI smoke subset: kernel interpret paths, the paged cache, the
     quantized KV layouts (timings + hard RMSE/capacity asserts), the
-    prefix cache, and a tiny split-KV sweep.  Writes BENCH_smoke.json
-    (this aggregate) plus the BENCH_paged.json / BENCH_quant.json /
-    BENCH_prefix.json / BENCH_smoke_splitkv.json the sub-benches emit
-    (the committed full-sweep BENCH_splitkv.json is only written by
-    --kv-splits)."""
+    prefix cache, the multi-tenant scheduler (timings + hard bitwise /
+    zero-permanent-refusal asserts), and a tiny split-KV sweep.  Writes
+    BENCH_smoke.json (this aggregate) plus the BENCH_paged.json /
+    BENCH_quant.json / BENCH_prefix.json / BENCH_serve.json /
+    BENCH_smoke_splitkv.json the sub-benches emit (the committed
+    full-sweep BENCH_splitkv.json is only written by --kv-splits)."""
     rows = []
     rows += bench_kernels_interpret()
     rows += bench_paged()
     rows += bench_quant()
     rows += bench_prefix()
+    rows += bench_serve()
     from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
     sk = run_splitkv(full=False, splits=(1, 4))
     # own path: never clobber the committed full-sweep BENCH_splitkv.json
@@ -420,7 +556,8 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset; writes BENCH_smoke.json, "
                          "BENCH_paged.json, BENCH_quant.json, "
-                         "BENCH_prefix.json and BENCH_smoke_splitkv.json")
+                         "BENCH_prefix.json, BENCH_serve.json and "
+                         "BENCH_smoke_splitkv.json")
     ap.add_argument("--full", action="store_true",
                     help="wider sweep geometry")
     args = ap.parse_args(argv)

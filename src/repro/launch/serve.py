@@ -36,6 +36,9 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import model
+from repro.runtime import scheduler
+from repro.runtime.fault_tolerance import (FailureInjector,
+                                           HeartbeatRegistry, WorkerFailure)
 from repro.runtime.paged_cache import (KV_LAYOUTS, BlockPool,
                                        layout_for, layout_for_bytes)
 from repro.runtime.prefix_cache import PrefixCache
@@ -99,7 +102,18 @@ def _make_requests(args, vocab: int):
     prefix-cache workload.  The stream is identical for a given seed
     whether or not the prefix cache is enabled (the flag only changes how
     it is served), which is what makes the on/off bitwise-equivalence
-    check meaningful."""
+    check meaningful.
+
+    Multi-tenant knobs (DESIGN.md §12) ride on SEPARATE rng streams so
+    enabling them never perturbs the prompt/length draws — the same seed
+    serves the same tokens contended or uncontended, which is what makes
+    the preempted-vs-uncontended bitwise check meaningful:
+      · --priority-classes N draws a class in [0, N) per request
+        (0 = most important);
+      · --arrival-rate R staggers arrivals over scheduler ticks —
+        Poisson inter-arrival gaps (--trace uniform) or adversarial
+        over-admission bursts of --burst-size simultaneous requests
+        (--trace burst)."""
     rng = np.random.default_rng(args.seed + 1)
     # buckets never exceed --prompt: the pool layout is sized for
     # prompt + gen, so every request must fit it by construction
@@ -111,8 +125,23 @@ def _make_requests(args, vocab: int):
         assert args.shared_prefix < args.prompt, \
             "--shared-prefix must leave room for a per-request tail"
         shared = rng.integers(0, vocab, size=(args.shared_prefix,))
+    n = args.requests
+    prios = [0] * n
+    if getattr(args, "priority_classes", 1) > 1:
+        prng = np.random.default_rng(args.seed + 2)
+        prios = prng.integers(0, args.priority_classes, size=n).tolist()
+    arrivals = [0] * n
+    if getattr(args, "arrival_rate", 0.0) > 0:
+        arng = np.random.default_rng(args.seed + 3)
+        if args.trace == "burst":
+            bsz = max(1, args.burst_size)
+            gap = max(1, round(bsz / args.arrival_rate))
+            arrivals = [(i // bsz) * gap for i in range(n)]
+        else:
+            gaps = arng.exponential(1.0 / args.arrival_rate, size=n)
+            arrivals = np.floor(np.cumsum(gaps)).astype(int).tolist()
     reqs = []
-    for i in range(args.requests):
+    for i in range(n):
         plen = int(rng.choice(p_buckets))
         glen = int(rng.choice(g_buckets))
         if shared is None:
@@ -122,48 +151,54 @@ def _make_requests(args, vocab: int):
             tail = rng.integers(0, vocab, size=(plen - args.shared_prefix,))
             toks = np.concatenate([shared, tail])
         reqs.append({"id": i, "prompt": jnp.asarray(toks, jnp.int32),
-                     "gen": glen})
+                     "gen": glen, "priority": int(prios[i]),
+                     "arrival": int(arrivals[i])})
     return reqs
 
 
 def run_paged(args, cfg) -> dict:
     """Continuous-batching serve loop: CHUNKED paged prefill interleaved
-    with decode under a per-step token budget (DESIGN.md §9).
+    with decode under a per-step token budget, driven by the SLO-aware
+    scheduler (runtime/scheduler.py, DESIGN.md §9/§12).
 
-    Per step:
-      (1) admit queued requests COLD into free slots while the block pool
-          can reserve their full budget (admission refusal = stay queued —
-          never a mid-flight OOM).  Admission is CACHE-AWARE when the
-          prefix cache is on (--prefix-cache, DESIGN.md §10): the radix
-          tree is walked with the request's prompt, the matched
-          block-aligned prefix is mapped into the slot's block table with
-          a refcount bump per block (zero prefill tokens spent on it), and
-          under pool pressure LRU trie-only leaves are evicted to the free
-          list before refusing.  Admission reserves blocks only; no
-          prompt tokens run yet.
+    Per tick:
+      (0) requests whose arrival tick has come join the scheduler queue;
+          the optional ``--paranoia N`` sweep runs the pool's full
+          conservation + table audit.
+      (1) the scheduler places candidates in (priority, PREEMPTED-first,
+          arrival, id) order: cache-aware admission when the prefix cache
+          is on (the radix tree is walked, the matched block-aligned
+          prefix maps by refcount bump, LRU trie-only leaves are evicted
+          under pressure — DESIGN.md §10), swap-tier restore for
+          preempted-by-swap requests, and PREEMPTION of strictly-lower-
+          priority victims when placement refuses (--preemption swap
+          evacuates the victim's blocks to host RAM; recompute drops them
+          and re-prefills at restore).  A candidate refused even after
+          preemption backs off (--retry-backoff) — never a permanent
+          refusal.  Admission reserves blocks only; no prompt tokens run.
       (2) spend the step's token budget (``--token-budget``): the decode
-          batch (one token per decoding slot) is committed first, then
-          prefill chunks of ``--prefill-chunk`` tokens from admitted-but-
-          cold requests are appended FCFS while they fit the remainder —
-          so a long prompt never head-of-line-blocks in-flight decodes
-          (chunked-prefill continuous batching, vLLM/Sarathi-style).  Each
-          chunk runs ``model.prefill_chunk`` straight into the request's
-          pool blocks: no dense staging cache, no post-hoc scatter, peak
-          extra memory = one chunk.  When nothing is decoding, one chunk
-          always runs even if it exceeds the budget (progress guarantee).
-          A prefix-cache hit resumes prefill at the match offset; the
-          first tail chunk is trimmed onto the GLOBAL chunk grid
-          (positions k*chunk), so for chunk-aligned matches every tail
-          chunk has exactly the shape it would have had uncached — that is
-          what makes cached decode output BITWISE identical to uncached,
-          not merely close (DESIGN.md §10).  A request that finishes its
-          prompt INSERTS its full prompt blocks into the trie right away
-          (not at release), so queued requests share them while the donor
-          is still decoding; only tail tokens were charged to the budget.
+          batch first, then prefill chunks of ``--prefill-chunk`` tokens
+          from cold slots FCFS while they fit the remainder — a long
+          prompt never head-of-line-blocks in-flight decodes (chunked-
+          prefill continuous batching).  Under an ITL SLO the scheduler
+          shrinks the prefill SHARE of the budget (chunk shapes never
+          change — outputs stay bitwise).  The first chunk after a cache
+          hit or restore is trimmed onto the GLOBAL chunk grid, so every
+          later chunk has exactly the shape the uncached run would have
+          used — cached/restored decode is BITWISE identical to the
+          uncontended run, not merely close (DESIGN.md §10/§12).  A
+          request finishing its prompt inserts its full prompt blocks
+          into the trie right away; a RESTORED recompute victim re-seeds
+          from the same prefill logits and then TEACHER-FORCES its
+          already-delivered tokens through the decode kernel (replay —
+          delivered exactly once, re-fed as needed).
       (3) one jitted paged decode step over the decoding slots (cold
-          slots' table rows are masked to the null block, so the decode
-          write can't touch a half-prefilled prompt), then retire finished
-          sequences and release their blocks.
+          slots' table rows are masked to the null block), then retire
+          finished sequences.  ``--fault-rate`` injects deterministic
+          worker failures here: the step is discarded, the victim slot is
+          requeued through the recompute path, and the heartbeat registry
+          notices the missed beat — greedy outputs stay bitwise-identical
+          to the unfailed run.
 
     Re-tracing is bounded: prefill_chunk compiles once per distinct chunk
     size, and chunk sizes are min(--prefill-chunk, remaining prompt) over
@@ -184,14 +219,48 @@ def run_paged(args, cfg) -> dict:
         layout, B = layout_for_bytes(budget, q_bytes, max_total,
                                      block_size=args.page_size,
                                      spare_blocks=args.spare_blocks)
-    bp = BlockPool(layout, B)
+    host_blocks = args.host_blocks
+    if args.preemption == "swap" and host_blocks == 0:
+        host_blocks = layout.num_blocks - 1   # host tier mirrors the pool
+    bp = BlockPool(layout, B, host_blocks=host_blocks)
     prefix = PrefixCache(layout.block_size) if args.prefix_cache else None
     cache = model.init_paged_cache(cfg, layout, kv_dtype=args.kv_dtype)
-    waiting = deque(_make_requests(args, cfg.vocab_size))
-    n_requests = len(waiting)
+    pending = deque(sorted(_make_requests(args, cfg.vocab_size),
+                           key=lambda r: (r["arrival"], r["id"])))
+    n_requests = len(pending)
     chunk = max(1, args.prefill_chunk)
     # auto budget: the whole decode batch plus one prefill chunk per step
     budget = args.token_budget if args.token_budget > 0 else B + chunk
+
+    # KVOps: the scheduler stays device-free; these closures move swap/COW
+    # bytes through the LIVE cache pytree (holder — the jitted entries
+    # donate and rebind it, so the closures must not capture a stale ref)
+    holder = {"cache": cache}
+
+    def _kv_read(ids):
+        return model.read_paged_blocks(holder["cache"], ids)
+
+    def _kv_write(ids, rows, start):
+        sel = jax.tree.map(lambda r: r[:, start:start + len(ids)], rows)
+        holder["cache"] = model.write_paged_blocks(holder["cache"], ids, sel)
+
+    def _kv_copy(src, dst):
+        holder["cache"] = model.copy_paged_block(holder["cache"], src, dst)
+
+    sched = scheduler.Scheduler(
+        bp, prefix,
+        scheduler.KVOps(_kv_read, _kv_write, _kv_copy),
+        scheduler.SchedulerConfig(
+            preemption=args.preemption, slo_ttft_ms=args.slo_ttft,
+            slo_itl_ms=args.slo_itl,
+            backoff_cap=max(1, args.retry_backoff)))
+    injector = (FailureInjector.from_rate(args.fault_rate)
+                if args.fault_rate > 0 else None)
+    tick_box = [0]
+    # heartbeats on the TICK clock: a beat every tick is alive (gap 1 <=
+    # 1.5); the skipped beat of a failure tick (gap 2) trips dead()
+    hb = HeartbeatRegistry(timeout_s=1.5, clock=lambda: float(tick_box[0]))
+    WORKER = "decode-worker-0"
 
     # the cache pytree is DONATED through both jitted entries (as the dense
     # path donates through its scan carry): the pool is updated in place
@@ -206,189 +275,169 @@ def run_paged(args, cfg) -> dict:
     # in the reserved null block, so rebinding the returned cache (the
     # donated input is gone) leaves every real pool row untouched.
     table0, lengths0 = bp.device_views()
-    logits0, cache = step_fn(params, cache, jnp.zeros((B,), jnp.int32),
-                             table0, lengths0)
+    logits0, holder["cache"] = step_fn(params, holder["cache"],
+                                       jnp.zeros((B,), jnp.int32),
+                                       table0, lengths0)
     jax.block_until_ready(logits0)
 
     # one jitted entry — jax.jit caches per chunk-size shape on its own
     prefill_fn = jax.jit(lambda p, cch, t, table, lens: model.prefill_chunk(
         p, cfg, cch, t, table, lens, mode=args.mode), donate_argnums=(1,))
 
-    cur = np.zeros((B,), np.int64)            # next token per slot
-    remaining = np.zeros((B,), np.int64)      # gen budget left per slot
-    decoding = np.zeros((B,), bool)           # prompt fully prefilled
-    pf_pos = np.zeros((B,), np.int64)         # prompt tokens prefilled
-    prompt_of = [None] * B
-    gen_of = np.zeros((B,), np.int64)
-    admit_seq = np.zeros((B,), np.int64)      # FCFS order among cold slots
-    req_of = [None] * B
-    outputs = {}                              # id -> [generated tokens]
     tokens_served = 0
-    refused_ids = set()                       # requests refused >= once
     steps = 0                                 # decode steps
     prefill_chunks = 0
     interleaved_steps = 0                     # decode step + >=1 chunk
-    n_admitted = 0
     prefill_tokens = 0                        # prompt tokens actually run
-    prefill_tokens_saved = 0                  # prompt tokens skipped (hits)
+    replayed_tokens = 0                       # teacher-forced after restore
+    worker_restarts = 0
     t_prefill = 0.0
 
     t0 = time.perf_counter()
-    while waiting or bp.active.any():
-        # ---- (1) admit: FCFS, cache-aware while the prefix cache is on
-        while waiting:
-            req = waiting[0]
-            prompt_np = np.asarray(req["prompt"])
-            plen = int(prompt_np.shape[0])
-            total = plen + req["gen"]
-            chain, matched = ([], 0)
-            if prefix is not None and bp.free_slots():
-                # record=False: a refused request is re-matched every step
-                # (its match can GROW while it waits), so stats are counted
-                # once, on successful admission, not per retry
-                chain, matched = prefix.match(prompt_np, record=False)
-                # FULL shared blocks only: a chain whose last block is
-                # partial (prefix ends mid-block) still needs a FRESH
-                # block for that logical position — the eager-COW copy
-                # target — so it must count against the free list, not as
-                # shared.  len(chain) would over-count by one there and
-                # let can_admit say yes at exactly-one-block-short
-                # occupancy (admit_shared itself counts full blocks and
-                # would then refuse — tests/test_paged.py pins the
-                # boundary).  Trie matches are block-aligned today, which
-                # made this dormant, not correct.
-                n_full = matched // layout.block_size
-                # pressure: reclaim LRU trie-only leaves until the fresh
-                # need fits (the matched chain itself is protected — its
-                # blocks are trie-exclusive until admit_shared bumps them).
-                # Evict ONLY when eviction can actually make the admission
-                # fit: block shortage is the one evictable-away refusal —
-                # a full batch, an over-max_len request, or an evictable
-                # supply short of the need must refuse WITHOUT trading
-                # away cache state other requests would have hit.
-                protect = frozenset(chain)
-                need = layout.blocks_for(total) - n_full
-                if (total <= layout.max_len and need > bp.num_free
-                        and bp.num_free + prefix.reclaimable(
-                            bp, protect) >= need):
-                    while not bp.can_admit(total, n_shared=n_full):
-                        if prefix.evict_lru(bp, protect=protect) is None:
-                            break
-            if chain:
-                got = bp.admit_shared(matched, total, chain)
-                slot = None
-                if got is not None:
-                    slot, cow = got
-                    # trie matches are block-aligned so cow is empty today;
-                    # a mid-block match (divergence inside a block) copies
-                    # the partial donor block into the slot's private block
-                    # before any token is written
-                    for src, dst in cow:
-                        cache = model.copy_paged_block(cache, src, dst)
-            else:
-                slot = bp.admit(0, total)
-            if slot is None:
-                if bp.active.any():
-                    refused_ids.add(req["id"])
-                    break
-                raise RuntimeError(
-                    f"request {req['id']} ({total} tokens) can never fit "
-                    f"the pool ({layout.num_blocks - 1} blocks)")
-            waiting.popleft()
-            req_of[slot] = req["id"]
-            prompt_of[slot] = req["prompt"]
-            gen_of[slot] = req["gen"]
-            pf_pos[slot] = matched             # prefill resumes at the match
-            prefill_tokens_saved += matched
-            if prefix is not None:
-                prefix.record(matched)         # one lookup per admission
-            decoding[slot] = False
-            admit_seq[slot] = n_admitted
-            n_admitted += 1
-            outputs[req["id"]] = []
+    while pending or sched.queue or sched.by_slot:
+        tick = tick_box[0]
+        now = time.perf_counter()
+        # ---- (0) arrivals + paranoia sweep + heartbeat bookkeeping
+        while pending and pending[0]["arrival"] <= tick:
+            req = pending.popleft()
+            sched.add(scheduler.Request(
+                id=req["id"], prompt=req["prompt"], gen=req["gen"],
+                priority=req["priority"], arrival=req["arrival"]), now)
+        if args.paranoia and tick % args.paranoia == 0:
+            bp.audit()
+        if hb.dead():                         # missed beat = failure tick
+            worker_restarts += 1              # ...worker comes back below
 
-        dec_mask = bp.active & decoding       # fixed for the whole step: a
-        # slot finishing its prompt below starts decoding NEXT step
-        decode_slots = [b for b in range(B) if dec_mask[b]]
-        spent = len(decode_slots)             # decode tokens this step
+        # ---- (1) admission / restore / preemption (scheduler policy)
+        sched.admit(tick, now)
+
+        running = sched.running()
+        dec = [r for r in running if r.decoding]
+        spent = len(dec)                      # decode tokens this step
+        # ITL SLO: shrink the prefill share of the budget when delivered
+        # inter-token latency runs hot (no-op at the default budget split)
+        budget_eff = spent + sched.prefill_quota(max(0, budget - spent))
 
         # ---- (2) prefill chunks from cold slots under the budget
         pf_tokens = 0
-        cold = sorted((b for b in range(B)
-                       if bp.active[b] and not decoding[b]),
-                      key=lambda b: admit_seq[b])
-        for b in cold:
-            plen = int(prompt_of[b].shape[0])
+        cold = sorted((r for r in running if not r.decoding),
+                      key=lambda r: r.admit_seq)
+        for r in cold:
+            b = r.slot
+            plen = r.plen
             # trim the first tail chunk onto the global chunk grid: after a
-            # prefix-cache hit at a non-chunk-multiple offset, the next
-            # chunk ends at the grid point, so every later chunk has the
-            # exact shape the uncached run would have used (bitwise-equal
-            # decode, DESIGN.md §10).  Uncached (pf_pos % chunk == 0) this
-            # is the plain min(chunk, remaining).
-            c = min(chunk - int(pf_pos[b]) % chunk, plen - int(pf_pos[b]))
-            if spent + c > budget and spent > 0:
+            # prefix-cache hit (or a restore) at a non-chunk-multiple
+            # offset, the next chunk ends at the grid point, so every later
+            # chunk has the exact shape the uncached run would have used
+            # (bitwise-equal decode, DESIGN.md §10).  Uncached
+            # (pf_pos % chunk == 0) this is the plain min(chunk, remaining).
+            c = min(chunk - r.pf_pos % chunk, plen - r.pf_pos)
+            if spent + c > budget_eff and spent > 0:
                 break                         # budget spent — defer chunk
             tp = time.perf_counter()
-            toks_c = prompt_of[b][None, int(pf_pos[b]):int(pf_pos[b]) + c]
+            toks_c = r.prompt[None, r.pf_pos:r.pf_pos + c]
             trow = jnp.array(bp.table[b:b + 1])
             lrow = jnp.array(bp.lengths[b:b + 1])
-            logits, cache = prefill_fn(params, cache, toks_c, trow, lrow)
+            logits, holder["cache"] = prefill_fn(params, holder["cache"],
+                                                 toks_c, trow, lrow)
             jax.block_until_ready(logits)
             t_prefill += time.perf_counter() - tp
             bp.extend(b, c)
-            pf_pos[b] += c
+            r.pf_pos += c
             spent += c
             pf_tokens += c
             prefill_tokens += c
             prefill_chunks += 1
-            if int(pf_pos[b]) == plen:        # prompt done -> start decoding
-                cur[b] = int(jnp.argmax(logits[0, -1]))
-                remaining[b] = gen_of[b]
-                decoding[b] = True
+            if r.pf_pos == plen:              # prompt done -> start decoding
+                seed = int(jnp.argmax(logits[0, -1]))
+                if r.replay:
+                    # restored victim: the re-prefill must re-derive the
+                    # first delivered token bit-for-bit (grid invariant)
+                    assert seed == r.replay[0], \
+                        f"request {r.id}: restore diverged at prefill " \
+                        f"(got {seed}, delivered {r.replay[0]})"
+                else:
+                    r.cur = seed
+                r.decoding = True
                 if prefix is not None:
                     # cache the prompt's full blocks NOW (not at release):
                     # queued requests share them while this one decodes
-                    prefix.insert(np.asarray(prompt_of[b]),
-                                  bp.block_ids(b), bp)
+                    prefix.insert(np.asarray(r.prompt), bp.block_ids(b), bp)
 
         # ---- (3) one ragged decode step over the decoding slots
-        if decode_slots:
+        if dec:
+            if injector is not None:
+                try:
+                    injector.check(tick)
+                except WorkerFailure:
+                    # the decode worker died mid-step: its outputs never
+                    # land — requeue the victim through the recompute
+                    # path and skip the step (no beat → dead() next tick)
+                    victim = max(dec, key=lambda r: r.slot)
+                    sched.fail_running(victim.slot, tick)
+                    tick_box[0] += 1
+                    continue
             # mask cold slots to the null block: the decode write for them
             # must not land inside a half-prefilled prompt
+            dec_slots = {r.slot for r in dec}
             table_m = bp.table.copy()
             lens_m = bp.lengths.copy()
+            cur_arr = np.zeros((B,), np.int64)
             for b in range(B):
-                if not dec_mask[b]:
+                if b not in dec_slots:
                     table_m[b] = 0
                     lens_m[b] = 0
-            logits, cache = step_fn(params, cache, jnp.array(cur, jnp.int32),
-                                    jnp.array(table_m), jnp.array(lens_m))
+            for r in dec:
+                cur_arr[r.slot] = r.replay[0] if r.replay else r.cur
+            logits, holder["cache"] = step_fn(
+                params, holder["cache"], jnp.array(cur_arr, jnp.int32),
+                jnp.array(table_m), jnp.array(lens_m))
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             steps += 1
             if pf_tokens:
                 interleaved_steps += 1
 
-            # ---- retire / bookkeep (host side — the scheduler's job)
-            for b in decode_slots:
-                outputs[req_of[b]].append(int(cur[b]))
-                tokens_served += 1
-                bp.append(b)
-                remaining[b] -= 1
-                cur[b] = nxt[b]
-                if remaining[b] == 0:
-                    bp.release(b)
-                    req_of[b] = None
-                    decoding[b] = False
+            # ---- retire / bookkeep (host side)
+            now = time.perf_counter()
+            for r in dec:
+                b = r.slot
+                if r.replay:
+                    # teacher-forced replay: the token was already
+                    # delivered before preemption — rebuild its KV row and
+                    # assert the decode path re-derives the NEXT token
+                    # bit-for-bit (the bitwise-restore guarantee made
+                    # falsifiable at every replayed position)
+                    fed = r.replay.popleft()
+                    bp.append(b)
+                    expect = r.replay[0] if r.replay else r.cur
+                    assert int(nxt[b]) == int(expect), \
+                        f"request {r.id}: replay diverged after token " \
+                        f"{fed} (got {int(nxt[b])}, expected {int(expect)})"
+                    replayed_tokens += 1
+                else:
+                    sched.deliver(r, r.cur, now)
+                    tokens_served += 1
+                    bp.append(b)
+                    r.cur = int(nxt[b])
+                    if r.remaining == 0:
+                        sched.finish(r)
+        hb.beat(WORKER)
+        tick_box[0] += 1
     t_total = time.perf_counter() - t0
     t_decode = t_total - t_prefill
 
+    outputs = {rid: r.out for rid, r in sorted(sched.done.items())}
+    refused_ids = sched.refused_ids
+    prefill_tokens_saved = sched.prefill_tokens_saved
+    sstats = sched.stats()
     pstats = prefix.stats() if prefix is not None else None
     # true tokens served (NOT batch * gen: sequences join/leave mid-stream)
     print(f"[serve] arch={args.arch} layout=paged mode={args.mode} B={B} "
           f"requests={n_requests} page={layout.block_size} "
-          f"blocks={layout.num_blocks - 1} chunk={chunk} budget={budget} "
-          f"kv_dtype={args.kv_dtype} "
-          f"prefix_cache={'on' if prefix is not None else 'off'}")
+          f"blocks={layout.num_blocks - 1} host_blocks={host_blocks} "
+          f"chunk={chunk} budget={budget} kv_dtype={args.kv_dtype} "
+          f"prefix_cache={'on' if prefix is not None else 'off'} "
+          f"preemption={args.preemption}")
     print(f"[serve] {tokens_served} tokens in {steps} decode steps "
           f"({tokens_served / max(steps, 1):.2f} tokens/step occupancy); "
           f"{prefill_chunks} prefill chunks, {interleaved_steps} steps "
@@ -401,18 +450,38 @@ def run_paged(args, cfg) -> dict:
           + (f"; prefix cache: {pstats['hits']}/{pstats['lookups']} hits "
              f"({pstats['hit_rate']:.0%}), {pstats['cached_blocks']} blocks "
              f"cached, {pstats['evictions']} evicted" if pstats else ""))
+    if (sstats["preemptions"] or sstats["failures"]
+            or sstats["refusals"]):
+        print(f"[serve] pressure: {sstats['preemptions']} preemptions "
+              f"({sstats['preempts_swap']} swap / "
+              f"{sstats['preempts_recompute']} recompute), "
+              f"{sstats['restores_swap']}+{sstats['restores_recompute']} "
+              f"restores, {replayed_tokens} tokens replayed, "
+              f"{sstats['refusals']} transient refusals, "
+              f"{sstats['failures']} injected failures "
+              f"({worker_restarts} worker restarts)")
+        for cls, st in sched.class_stats().items():
+            print(f"[serve]   class {cls}: n={st['n']} "
+                  f"preempt={st['preemptions']} "
+                  f"ttft p50/p99 {st['ttft_p50_ms']:.1f}/"
+                  f"{st['ttft_p99_ms']:.1f}ms itl p50/p99 "
+                  f"{st['itl_p50_ms']:.2f}/{st['itl_p99_ms']:.2f}ms")
     first = outputs[0][:16] if outputs.get(0) else []
     print(f"[serve] sample generation (request 0): {first}")
     return {"outputs": outputs, "tokens_served": tokens_served,
             "batch_slots": B, "kv_dtype": args.kv_dtype,
             "pool_blocks": layout.num_blocks - 1,
+            "host_blocks": host_blocks,
             "steps": steps, "refusals": len(refused_ids),
             "prefill_chunks": prefill_chunks,
             "interleaved_steps": interleaved_steps,
             "prefill_tokens": prefill_tokens,
             "decode_tokens": tokens_served,
             "prefill_tokens_saved": prefill_tokens_saved,
-            "prefix": pstats,
+            "replayed_tokens": replayed_tokens,
+            "worker_restarts": worker_restarts,
+            "prefix": pstats, "sched": sstats,
+            "classes": sched.class_stats(),
             "t_prefill": t_prefill, "t_decode": t_decode}
 
 
@@ -460,6 +529,53 @@ def parse_args(argv=None):
                     help="tokens of a common prompt prefix shared by every "
                          "generated request (the prefix-cache workload; "
                          "0 = fully independent prompts)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="priority classes drawn per request (0 = most "
+                         "important; 1 = single-tenant FCFS, the default)")
+    ap.add_argument("--slo-ttft", type=float, default=0.0,
+                    help="time-to-first-token budget in ms: a request past "
+                         "it jumps every priority class at admission "
+                         "(0 = off; ordering only — outputs stay bitwise)")
+    ap.add_argument("--slo-itl", type=float, default=0.0,
+                    help="inter-token latency budget in ms: over-budget "
+                         "delivered ITL shrinks the prefill share of the "
+                         "step token budget (0 = off; bounds chunked-"
+                         "prefill interference, outputs stay bitwise)")
+    ap.add_argument("--preemption", default="recompute",
+                    choices=["swap", "recompute"],
+                    help="victim evacuation mode (DESIGN.md §12): swap "
+                         "copies written blocks to the host tier and back "
+                         "(bitwise trivially); recompute drops them and "
+                         "re-prefills + replays at restore (bitwise by the "
+                         "chunk-grid invariant + teacher forcing)")
+    ap.add_argument("--host-blocks", type=int, default=0,
+                    help="host-RAM swap tier size in blocks (0 with "
+                         "--preemption swap sizes the tier to mirror the "
+                         "device pool)")
+    ap.add_argument("--retry-backoff", type=int, default=1,
+                    help="max backoff in ticks between admission retries "
+                         "(exponential from 1; 1 = retry every tick, the "
+                         "pre-scheduler behavior)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="injected decode-worker failures per tick "
+                         "(deterministic schedule via FailureInjector; "
+                         "victims requeue through the recompute path and "
+                         "outputs stay bitwise; 0 = off)")
+    ap.add_argument("--paranoia", type=int, default=0,
+                    help="run the BlockPool conservation + full-row table "
+                         "audit every N ticks (0 = off; on in tests/CI "
+                         "smoke so invariant corruption surfaces at the "
+                         "step that caused it)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="request arrivals per scheduler tick (0 = all "
+                         "arrive at tick 0)")
+    ap.add_argument("--trace", default="uniform",
+                    choices=["uniform", "burst"],
+                    help="arrival trace shape under --arrival-rate: "
+                         "uniform = Poisson gaps; burst = adversarial "
+                         "over-admission bursts of --burst-size requests")
+    ap.add_argument("--burst-size", type=int, default=4,
+                    help="requests per burst for --trace burst")
     ap.add_argument("--kv-splits", type=int, default=None,
                     help="split-KV count for decode attention "
                          "(default: auto-scheduled)")

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import mla as mla_mod
@@ -329,6 +330,31 @@ def copy_paged_block(cache, src: int, dst: int):
     chunk is appended to the new slot (DESIGN.md §10) — all layers share
     one block table, so one (src, dst) pair covers the whole stack."""
     return jax.tree.map(lambda p: p.at[:, dst].set(p[:, src]), cache)
+
+
+def read_paged_blocks(cache, ids):
+    """HOST copies of physical blocks `ids` from every pool leaf of a paged
+    cache pytree (leaves: [n_layers, num_blocks, bs, *F]) — the device→host
+    leg of preemption-by-swap (DESIGN.md §12).  Returns a matching numpy
+    pytree with [n_layers, len(ids), bs, *F] leaves, bitwise copies in the
+    pool's storage dtype (codes AND sz scale pools both ride along, so a
+    quantized sequence swaps losslessly).  np.asarray forces the host sync:
+    the caller frees the device blocks right after, so the copy must be
+    materialized, not a lazy view of in-flight state."""
+    idx = np.asarray(ids, np.int32)
+    return jax.tree.map(lambda p: np.asarray(p[:, idx]), cache)
+
+
+def write_paged_blocks(cache, ids, rows):
+    """Write host block rows (a pytree from :func:`read_paged_blocks`) back
+    into physical blocks `ids` of every pool leaf — the host→device leg of
+    swap restoration.  Dtypes already match (the host copy kept the pool's
+    storage dtype), so the round-trip is bitwise and a restored sequence
+    decodes exactly as if it had never been preempted."""
+    idx = jnp.asarray(np.asarray(ids, np.int32))
+    return jax.tree.map(
+        lambda p, r: p.at[:, idx].set(jnp.asarray(r).astype(p.dtype)),
+        cache, rows)
 
 
 def _block_prefill_chunk(params, cfg, sig, x, cache, table, lengths, mode):

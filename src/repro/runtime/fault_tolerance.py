@@ -72,6 +72,17 @@ class FailureInjector:
         if step in self.fail_at_steps:
             raise WorkerFailure(f"injected failure at step {step}")
 
+    @classmethod
+    def from_rate(cls, rate: float, horizon: int = 100_000):
+        """Schedule matching a mean failure RATE (failures per step): one
+        failure every round(1/rate) steps out to `horizon`.  Periodic, not
+        sampled — the serve loop's --fault-rate drills must be replayable
+        bit-for-bit, and a deterministic schedule is what lets the test
+        assert the faulted run's outputs against the unfaulted run's."""
+        assert 0 < rate <= 1, f"rate must be in (0, 1], got {rate}"
+        period = max(1, round(1.0 / rate))
+        return cls(fail_at_steps=frozenset(range(period, horizon, period)))
+
 
 class WorkerFailure(RuntimeError):
     pass

@@ -41,6 +41,21 @@ Conservation (checked by :meth:`BlockPool.check_conservation`): a non-null
 block is on the free list iff its refcount is zero, and writes may only
 touch refcount-1 (exclusively owned) blocks.
 
+Rollback and the host swap tier (DESIGN.md §12): :meth:`BlockPool.truncate`
+is the invariant-safe rollback primitive — it shrinks a slot's block chain
+(and, because the sz scale pools page with the code pools, its quantized
+twin) to a token boundary, freeing tail blocks through the same
+``unref_block`` path release uses, so trie-cached blocks survive and
+free ⟺ ref == 0 conservation holds at every intermediate state.  ``release``
+is ``truncate(slot, 0)`` plus slot teardown.  On top of it the pool is a
+TWO-TIER HBM/host hierarchy: ``swap_out`` moves a preempted slot's written
+blocks into a host-RAM tier (a second free-list of ``host_blocks`` ids; the
+actual bytes are read off-device by the caller BEFORE the call and restored
+by it after ``swap_in``), releasing every device block.  Swap records hold
+NO device references — a swapped request's trie-cached prompt blocks are
+owned by the trie alone, and cancelling a swapped request frees host ids
+only (the double-unref edge tests/test_scheduler.py pins).
+
 Quantized layouts (DESIGN.md §11): the pool may store KV rows as int8 (or
 fp8 e4m3) codes with a per-ROW affine (scale, zero-point) pair kept in a
 parallel ``sz`` pool of shape ``[num_blocks, block_size, *lead, 2]``.  The
@@ -106,11 +121,31 @@ def layout_for(batch_slots: int, max_len: int, block_size: int = 64,
                        max_blocks=max_blocks)
 
 
+@dataclasses.dataclass
+class SwapRecord:
+    """Accounting for one preempted sequence resident in the host tier.
+
+    ``host_ids`` hold one host-tier block id per WRITTEN logical block (the
+    tail of the reservation that held no rows is re-reserved at swap_in,
+    not stored); ``n_tokens`` is how many rows the host copies carry and
+    ``budget`` the original reserved token budget, so restoration re-admits
+    with exactly the guarantees the first admission had.  A record holds NO
+    device references: the victim's trie-cached prompt blocks belong to the
+    trie alone after swap_out, and discarding a record (cancel) returns
+    host ids only."""
+    key: object
+    host_ids: list
+    n_tokens: int
+    budget: int
+
+
 class BlockPool:
     """Host-side free-list allocator over `layout.num_blocks` KV blocks,
-    owning the block table and per-slot lengths for `batch_slots` slots."""
+    owning the block table and per-slot lengths for `batch_slots` slots.
+    ``host_blocks`` > 0 adds the host swap tier (DESIGN.md §12)."""
 
-    def __init__(self, layout: PagedLayout, batch_slots: int):
+    def __init__(self, layout: PagedLayout, batch_slots: int,
+                 host_blocks: int = 0):
         self.layout = layout
         self.batch_slots = batch_slots
         # pop order low→high keeps tables human-readable in tests/logs
@@ -126,10 +161,20 @@ class BlockPool:
         self._chain: list[list[int]] = [[] for _ in range(batch_slots)]
         self._nshared = np.zeros((batch_slots,), np.int32)
         self._budget = np.zeros((batch_slots,), np.int32)    # reserved tokens
+        # host swap tier: a second free-list of host-RAM block ids.  The
+        # pool accounts capacity; the KV bytes live with the caller (read
+        # off-device before swap_out, written back after swap_in).
+        self.host_blocks = int(host_blocks)
+        self._host_free = deque(range(self.host_blocks))
+        self.swapped: dict = {}                  # key -> SwapRecord
 
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+    @property
+    def host_free(self) -> int:
+        return len(self._host_free)
 
     def free_slots(self) -> list[int]:
         return [b for b in range(self.batch_slots) if not self.active[b]]
@@ -272,30 +317,140 @@ class BlockPool:
                                   int(self.lengths[slot]) + n - 1)
         self.lengths[slot] += n
 
+    def truncate(self, slot: int, n_tokens: int, *,
+                 free_blocks: bool = True) -> int:
+        """Invariant-safe ROLLBACK (DESIGN.md §12): shrink `slot`'s chain
+        to the `n_tokens` boundary.  Tail blocks beyond
+        ``blocks_for(n_tokens)`` (all of them at 0) are dropped through
+        :meth:`unref_block` — a trie-cached or slot-shared tail block
+        survives at its remaining refcount, exactly like release — their
+        table columns are nulled, and the slot's budget shrinks to the
+        kept blocks' capacity (the slot may still fill the kept tail block
+        without allocating, but growing past it needs a fresh admission).
+        The sz scale pools shrink for free: they page with the code pools,
+        and rows beyond the new length are masked by ``lengths`` on every
+        read path.  A truncation landing MID-block keeps that boundary
+        block; if it is shared (refcount > 1) it stays read-only and the
+        device write guard still fires on any append into it.
+
+        ``free_blocks=False`` is the pure LENGTH rollback (the speculative-
+        decoding primitive, ROADMAP item 2): only ``lengths`` rewinds — the
+        rejected tokens' rows become masked garbage — and the reservation
+        is untouched, so decoding continues under the no-mid-flight-
+        allocation guarantee.
+
+        Returns the number of blocks freed to the free list."""
+        assert self.active[slot]
+        n_tokens = int(n_tokens)
+        assert 0 <= n_tokens <= int(self.lengths[slot]), \
+            f"truncate to {n_tokens} past written length " \
+            f"{int(self.lengths[slot])}"
+        if not free_blocks:
+            self.lengths[slot] = n_tokens
+            return 0
+        keep = self.layout.blocks_for(n_tokens) if n_tokens else 0
+        chain = self._chain[slot]
+        assert keep <= len(chain)
+        freed = 0
+        for bid in reversed(chain[keep:]):
+            freed += bool(self.unref_block(bid))
+        self._chain[slot] = chain[:keep]
+        self.table[slot, keep:] = NULL_BLOCK
+        self.lengths[slot] = n_tokens
+        self._nshared[slot] = min(int(self._nshared[slot]), keep)
+        self._budget[slot] = keep * self.layout.block_size
+        return freed
+
     def release(self, slot: int) -> None:
-        """Drop one reference per chain block and null the slot's table row.
-        Blocks hitting refcount zero return to the free list; blocks the
-        prefix-cache trie (or another slot) still references stay allocated
-        — that is what turns a finished request's prompt blocks into the
-        LRU-evictable cached set instead of freeing them."""
+        """Drop one reference per chain block and null the slot's table row
+        (``truncate(slot, 0)`` + slot teardown).  Blocks hitting refcount
+        zero return to the free list; blocks the prefix-cache trie (or
+        another slot) still references stay allocated — that is what turns
+        a finished request's prompt blocks into the LRU-evictable cached
+        set instead of freeing them."""
         assert self.active[slot]
         # audit (falsifiable): columns BEYOND the chain must already be
         # null — admission nulls the row before writing the chain and no
         # write path touches columns past it, so a stale physical id there
         # means some mutation scribbled the table out of band.  The
-        # full-row assignment below then guarantees a released row can
-        # never surface a stale mapping through device_views()
-        # (tests/test_paged.py).
+        # truncate below then guarantees a released row can never surface
+        # a stale mapping through device_views() (tests/test_paged.py).
         assert (self.table[slot, len(self._chain[slot]):]
                 == NULL_BLOCK).all(), "stale ids beyond the slot's chain"
-        for bid in self._chain[slot]:
-            self.unref_block(bid)
-        self._chain[slot] = []
+        self.truncate(slot, 0)
         self._nshared[slot] = 0
-        self.table[slot] = NULL_BLOCK
-        self.lengths[slot] = 0
         self._budget[slot] = 0
         self.active[slot] = False
+
+    # ------------------------------------------------------ host swap tier
+    def can_swap_out(self, slot: int) -> bool:
+        """Whether the host tier can absorb `slot`'s written blocks."""
+        n = int(self.lengths[slot])
+        nb = self.layout.blocks_for(n) if n else 0
+        return nb <= self.host_free
+
+    def swap_out(self, slot: int, key) -> Optional[SwapRecord]:
+        """Evacuate `slot` to the host tier: reserve one host block per
+        WRITTEN device block, record (key, host ids, written length,
+        original budget), then fully release the slot — device blocks the
+        trie still caches survive as the cached set, private tail blocks
+        free.  Returns the record, or None when the host tier is full (the
+        scheduler then falls back to drop-and-recompute preemption).
+
+        The CALLER moves the bytes: it must copy the written blocks
+        (``block_ids(slot)[:nb]``) off-device BEFORE calling — after this
+        returns, freed device blocks may be re-allocated and overwritten
+        at any time."""
+        assert self.active[slot]
+        assert key not in self.swapped, f"key {key!r} already swapped"
+        n_tokens = int(self.lengths[slot])
+        nb = self.layout.blocks_for(n_tokens) if n_tokens else 0
+        if nb > self.host_free:
+            return None
+        host_ids = [self._host_free.popleft() for _ in range(nb)]
+        rec = SwapRecord(key=key, host_ids=host_ids, n_tokens=n_tokens,
+                         budget=int(self._budget[slot]))
+        self.swapped[key] = rec
+        self.release(slot)
+        return rec
+
+    def swap_in(self, key, shared_ids=(), matched: int = 0):
+        """Restore a swapped sequence into a fresh slot: re-admit with the
+        record's ORIGINAL budget (``admit_shared`` — a trie match on the
+        prompt maps `shared_ids` by refcount bump so only the unmatched
+        blocks need host copies written back), account the restored rows,
+        and return the host ids to the tier.  Returns
+        ``(slot, cow, record)`` or None (admission refusal: the record is
+        untouched and the scheduler retries later).
+
+        The caller writes the bytes AFTER this returns: host copies of
+        logical blocks ``[matched // block_size : blocks_for(n_tokens))``
+        go into ``block_ids(slot)`` at those positions.  A trie match
+        LONGER than the swapped length is fine (the trie grew while the
+        request was out): the matched blocks already hold valid rows and
+        the restored length is their maximum."""
+        rec = self.swapped[key]
+        matched = int(matched)
+        got = self.admit_shared(matched, rec.budget, shared_ids)
+        if got is None:
+            return None
+        slot, cow = got
+        n_eff = max(matched, rec.n_tokens)
+        if n_eff > matched:
+            self.extend(slot, n_eff - matched)
+        self.swap_free(key)
+        return slot, cow, rec
+
+    def swap_free(self, key) -> SwapRecord:
+        """Drop a swap record and return its host ids to the tier — the
+        restore-complete path, and the WHOLE release path for a request
+        cancelled while preempted: its device references were already
+        dropped once at swap_out, so freeing host capacity must not touch
+        device refcounts again (the double-unref edge,
+        tests/test_scheduler.py)."""
+        rec = self.swapped.pop(key)
+        self._host_free.extend(rec.host_ids)
+        return rec
 
     def check_conservation(self) -> None:
         """Refcount conservation (DESIGN.md §10): refcounts never negative,
@@ -320,6 +475,38 @@ class BlockPool:
             else:
                 assert not self._chain[b]
                 assert (self.table[b] == NULL_BLOCK).all()
+        # host tier: free ids + swap-record ids partition [0, host_blocks),
+        # and no record claims more rows than its host blocks can hold
+        hf = list(self._host_free)
+        assert len(set(hf)) == len(hf), "duplicate ids on the host free list"
+        used = [h for r in self.swapped.values() for h in r.host_ids]
+        assert len(set(used)) == len(used), "host block in two swap records"
+        assert not set(hf) & set(used)
+        assert len(hf) + len(used) == self.host_blocks
+        for r in self.swapped.values():
+            nb = self.layout.blocks_for(r.n_tokens) if r.n_tokens else 0
+            assert len(r.host_ids) == nb and r.n_tokens <= r.budget
+
+    def audit(self) -> None:
+        """The paranoia sweep (DESIGN.md §12, ``--paranoia N``):
+        :meth:`check_conservation` plus the FULL-ROW null audit over every
+        slot — table columns beyond each chain must be null and the mapped
+        columns must mirror the chain exactly, written lengths must fit
+        budgets, and budgets must fit chains — so invariant corruption
+        surfaces at the scheduler step that caused it, not at release
+        time.  Raises AssertionError on any violation."""
+        self.check_conservation()
+        for b in range(self.batch_slots):
+            chain = self._chain[b]
+            assert (self.table[b, len(chain):] == NULL_BLOCK).all(), \
+                f"slot {b}: stale ids beyond its chain"
+            assert (self.table[b, :len(chain)]
+                    == np.asarray(chain, np.int32)).all(), \
+                f"slot {b}: table row disagrees with its chain"
+            assert int(self.lengths[b]) <= int(self._budget[b])
+            if self._budget[b]:
+                assert self.layout.blocks_for(int(self._budget[b])) \
+                    <= len(chain), f"slot {b}: budget outruns its chain"
 
     def device_views(self):
         """(block_table [B, max_blocks], lengths [B]) as device arrays.

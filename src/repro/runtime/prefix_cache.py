@@ -65,11 +65,19 @@ class PrefixCache:
         self._root = _Node(None, None, None, -1)
         self._lru: OrderedDict[int, _Node] = OrderedDict()  # LRU -> MRU
         self._uid = itertools.count()
+        # persistent pins (block id -> pin count): chains a PREEMPTED
+        # request will re-match at restore (DESIGN.md §12).  Pinning is
+        # BEST-EFFORT pressure steering, not protection: pinned blocks are
+        # evicted last (second pass of evict_lru), never exempted — a
+        # recompute-restore whose pinned prefix was reclaimed anyway just
+        # re-prefills it, so reclaimable() stays an exact supply.
+        self._pinned: dict[int, int] = {}
         self.lookups = 0
         self.hits = 0
         self.matched_tokens = 0
         self.inserted_blocks = 0
         self.evictions = 0
+        self.pinned_evictions = 0
 
     def __len__(self) -> int:
         """Cached blocks (= trie nodes)."""
@@ -147,6 +155,30 @@ class PrefixCache:
         self.inserted_blocks += new
         return new
 
+    def pin_chain(self, chain) -> None:
+        """Take a best-effort pin on every block of `chain`: pinned blocks
+        are passed over by :meth:`evict_lru`'s first pass, so a preempted
+        request's cached prompt survives routine pressure and its restore
+        stays a refcount bump instead of a re-prefill.  Pins nest (a block
+        two preempted requests depend on needs two unpins) and do NOT
+        protect absolutely — under exhaustive pressure the second pass
+        reclaims pinned blocks too."""
+        for bid in chain:
+            bid = int(bid)
+            self._pinned[bid] = self._pinned.get(bid, 0) + 1
+
+    def unpin_chain(self, chain) -> None:
+        """Drop one pin per block of `chain` (restore-complete, or the
+        request was cancelled).  Unpinning a block evicted meanwhile is a
+        no-op — the pin was best-effort and the eviction already counted."""
+        for bid in chain:
+            bid = int(bid)
+            n = self._pinned.get(bid, 0)
+            if n <= 1:
+                self._pinned.pop(bid, None)
+            else:
+                self._pinned[bid] = n - 1
+
     def evict_lru(self, pool, protect=frozenset()):
         """Evict the least-recently-used evictable LEAF and drop its pool
         reference; returns the freed physical block id, or None when
@@ -156,18 +188,27 @@ class PrefixCache:
         no memory and could strand a mapper's future re-match), and its
         block is not in `protect` (a chain the caller matched but has not
         yet mapped).  Evicting a leaf exposes its parent for the next
-        round, so repeated calls peel cached chains back to front."""
-        for uid, node in self._lru.items():
-            if node.children or node.block_id in protect:
-                continue
-            if int(pool.ref[node.block_id]) != 1:
-                continue
-            del node.parent.children[node.key]
-            del self._lru[uid]
-            freed = pool.unref_block(node.block_id)
-            assert freed, "trie held the only reference, block must free"
-            self.evictions += 1
-            return node.block_id
+        round, so repeated calls peel cached chains back to front.
+        Two passes: unpinned leaves first; PINNED blocks (chains preempted
+        requests will re-match, :meth:`pin_chain`) go only when nothing
+        else is left, so pins steer pressure without shrinking the
+        reclaimable supply."""
+        for take_pinned in (False, True):
+            for uid, node in self._lru.items():
+                if node.children or node.block_id in protect:
+                    continue
+                if (node.block_id in self._pinned) != take_pinned:
+                    continue
+                if int(pool.ref[node.block_id]) != 1:
+                    continue
+                del node.parent.children[node.key]
+                del self._lru[uid]
+                freed = pool.unref_block(node.block_id)
+                assert freed, "trie held the only reference, block must free"
+                self.evictions += 1
+                if take_pinned:
+                    self.pinned_evictions += 1
+                return node.block_id
         return None
 
     def reclaimable(self, pool, protect=frozenset()) -> int:
@@ -190,4 +231,6 @@ class PrefixCache:
                 "matched_tokens": self.matched_tokens,
                 "inserted_blocks": self.inserted_blocks,
                 "evictions": self.evictions,
+                "pinned_evictions": self.pinned_evictions,
+                "pinned_blocks": len(self._pinned),
                 "cached_blocks": len(self._lru)}

@@ -1,0 +1,552 @@
+"""Scheduler subsystem validation (DESIGN.md §12): invariant-safe rollback
+(BlockPool.truncate), the two-tier HBM/host swap path, preemption policy
+(strict priority, victim order, backoff + idle kick, terminal refusal),
+the preempted-then-released double-unref regression, a property test over
+random admit/extend/append/truncate/swap_out/swap_in/release/evict
+interleavings, and the end-to-end acceptance: a burst trace that
+over-subscribes the pool 2x completes EVERY request via preemption/retry
+with greedy outputs bitwise-identical to an uncontended run — under both
+evacuation modes and under injected worker failures."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.runtime import paged_cache as pc
+from repro.runtime import scheduler as sch
+from repro.runtime.fault_tolerance import FailureInjector, WorkerFailure
+from repro.runtime.prefix_cache import PrefixCache
+
+
+def _pool(bs=4, blocks=16, maxb=6, slots=3, host=0):
+    layout = pc.PagedLayout(block_size=bs, num_blocks=blocks, max_blocks=maxb)
+    return pc.BlockPool(layout, slots, host_blocks=host), PrefixCache(bs)
+
+
+def _prefilled(bp, trie, tokens, gen=2):
+    plen = len(tokens)
+    slot = bp.admit(0, plen + gen)
+    assert slot is not None
+    bp.extend(slot, plen)
+    if trie is not None:
+        trie.insert(tokens, bp.block_ids(slot), bp)
+    return slot
+
+
+# ------------------------------------------------------- rollback primitive
+def test_truncate_frees_tail_blocks_to_boundary():
+    bp, _ = _pool(bs=4, blocks=16, maxb=6)
+    s = bp.admit(0, 20)                      # 5 blocks reserved
+    bp.extend(s, 18)
+    free0 = bp.num_free
+    assert bp.truncate(s, 9) == 2            # keep ceil(9/4)=3, free 2
+    assert bp.num_free == free0 + 2
+    assert int(bp.lengths[s]) == 9
+    assert len(bp.block_ids(s)) == 3
+    assert (bp.table[s, 3:] == pc.NULL_BLOCK).all()
+    # budget shrank to the kept blocks' capacity: the slot may refill the
+    # boundary block but not grow past it
+    bp.extend(s, 3)                          # back to 12 = 3 * 4, allowed
+    with pytest.raises(AssertionError, match="budget"):
+        bp.append(s)
+    bp.audit()
+    bp.release(s)
+    bp.check_conservation()
+    assert bp.num_free == bp.layout.num_blocks - 1
+
+
+def test_truncate_to_zero_frees_everything():
+    bp, _ = _pool()
+    s = bp.admit(0, 10)
+    bp.extend(s, 10)
+    assert bp.truncate(s, 0) == 3            # blocks_for(10) all freed
+    assert int(bp.lengths[s]) == 0 and len(bp.block_ids(s)) == 0
+    assert bp.active[s]                      # truncate is NOT release
+    bp.check_conservation()
+
+
+def test_truncate_length_only_keeps_reservation():
+    """free_blocks=False is the speculative-decoding rollback: lengths
+    rewinds, the reservation survives, decoding continues allocation-free."""
+    bp, _ = _pool()
+    s = bp.admit(0, 12)
+    bp.extend(s, 10)
+    free0 = bp.num_free
+    assert bp.truncate(s, 6, free_blocks=False) == 0
+    assert bp.num_free == free0              # nothing freed
+    assert int(bp.lengths[s]) == 6
+    for _ in range(6):                       # rejected rows re-append fine
+        bp.append(s)
+    assert int(bp.lengths[s]) == 12
+    bp.audit()
+
+
+def test_truncate_spares_shared_tail_blocks():
+    """A trie-cached block dropped by truncate survives at the trie's
+    reference — same unref path as release, conservation at every step."""
+    bp, trie = _pool(bs=4)
+    toks = np.arange(8)
+    s = _prefilled(bp, trie, toks, gen=4)
+    cached = [int(b) for b in bp.block_ids(s)[:2]]
+    bp.truncate(s, 0)
+    assert all(bp.ref[b] == 1 for b in cached)       # trie still holds them
+    chain, matched = trie.match(np.asarray(list(toks) + [9]))
+    assert chain == cached and matched == 8          # still matchable
+    bp.check_conservation()
+
+
+# --------------------------------------------------------- host swap tier
+def test_swap_roundtrip_accounting():
+    bp, _ = _pool(bs=4, blocks=16, maxb=6, slots=2, host=8)
+    s = bp.admit(0, 20)
+    bp.extend(s, 10)                         # 3 written of 5 reserved blocks
+    rec = bp.swap_out(s, "r0")
+    assert rec is not None
+    assert len(rec.host_ids) == 3 and rec.n_tokens == 10 and rec.budget == 20
+    assert bp.host_free == 5
+    assert not bp.active[s]                  # slot fully released
+    assert bp.num_free == bp.layout.num_blocks - 1
+    bp.check_conservation()
+    got = bp.swap_in("r0")
+    assert got is not None
+    slot, cow, rec2 = got
+    assert rec2 is rec and cow == []
+    assert int(bp.lengths[slot]) == 10       # restored rows accounted
+    assert int(bp._budget[slot]) == 20       # original budget re-reserved
+    assert bp.host_free == 8                 # host ids returned
+    assert "r0" not in bp.swapped
+    bp.check_conservation()
+
+
+def test_swap_out_refuses_when_host_tier_full():
+    bp, _ = _pool(bs=4, host=1)
+    s = bp.admit(0, 10)
+    bp.extend(s, 10)                         # 3 blocks > 1 host block
+    assert not bp.can_swap_out(s)
+    assert bp.swap_out(s, "r0") is None
+    assert bp.active[s] and bp.host_free == 1    # untouched on refusal
+    bp.check_conservation()
+
+
+def test_swap_in_refusal_leaves_record_untouched():
+    bp, _ = _pool(bs=4, blocks=7, maxb=6, slots=2, host=8)  # 6 real blocks
+    s = bp.admit(0, 20)                      # 5 of 6 blocks
+    bp.extend(s, 8)
+    assert bp.swap_out(s, "r0") is not None
+    hog = bp.admit(0, 20)                    # re-take the capacity
+    assert hog is not None
+    assert bp.swap_in("r0") is None          # refusal: 5 needed, 1 free
+    assert "r0" in bp.swapped and bp.host_free == 6
+    bp.check_conservation()
+    bp.release(hog)
+    assert bp.swap_in("r0") is not None      # retry succeeds
+    bp.check_conservation()
+
+
+def test_preempted_then_released_does_not_double_unref():
+    """REGRESSION (ISSUE 6 satellite): a preempted-then-cancelled request
+    whose prompt blocks are trie-cached dropped its device references ONCE
+    at swap_out — cancelling while the swap tier holds the copy must free
+    HOST ids only.  A second device unref would free trie-cached blocks
+    out from under other requests' future matches."""
+    bp, trie = _pool(bs=4, host=8)
+    toks = np.arange(8)
+    s = _prefilled(bp, trie, toks, gen=4)
+    cached = [int(b) for b in bp.block_ids(s)[:2]]
+    sched = sch.Scheduler(bp, trie, cfg=sch.SchedulerConfig(
+        preemption="swap"))
+    r = sch.Request(id=0, prompt=toks, gen=4)
+    r.state, r.slot, r.decoding, r.pf_pos = sch.RUNNING, s, True, 8
+    sched.by_slot[s] = r
+    sched.preempt(r, tick=0)
+    assert r.state == sch.PREEMPTED and 0 in bp.swapped
+    assert all(bp.ref[b] == 1 for b in cached)   # trie's ref survives swap
+    ref_snapshot = bp.ref.copy()
+    sched.cancel(r)                              # released while preempted
+    assert r.state == sch.DONE and 0 not in bp.swapped
+    assert bp.host_free == 8                     # host ids returned...
+    np.testing.assert_array_equal(bp.ref, ref_snapshot)  # ...device refs
+    assert all(bp.ref[b] == 1 for b in cached)   # NOT touched again
+    chain, matched = trie.match(np.asarray(list(toks) + [9]))
+    assert chain == cached and matched == 8      # cache still serves hits
+    bp.check_conservation()
+
+
+def test_audit_catches_out_of_band_table_scribble():
+    bp, _ = _pool()
+    s = bp.admit(0, 8)
+    bp.audit()                               # clean
+    bp.table[s, 4] = 3                       # scribble beyond the chain
+    with pytest.raises(AssertionError, match="stale ids"):
+        bp.audit()
+    bp.table[s, 4] = pc.NULL_BLOCK
+    bp.table[s, 0] = 9                       # table/chain disagreement
+    with pytest.raises(AssertionError, match="disagrees"):
+        bp.audit()
+
+
+# ------------------------------------------------------- scheduler policy
+def _mk_sched(slots=2, blocks=9, maxb=4, bs=4, host=0, preemption="recompute",
+              prefix=False, **cfg):
+    bp, trie = _pool(bs=bs, blocks=blocks, maxb=maxb, slots=slots, host=host)
+    sched = sch.Scheduler(bp, trie if prefix else None,
+                          cfg=sch.SchedulerConfig(preemption=preemption,
+                                                  **cfg))
+    return bp, sched
+
+
+def _req(rid, priority=0, plen=8, gen=8, arrival=0):
+    return sch.Request(id=rid, prompt=np.arange(plen), gen=gen,
+                       priority=priority, arrival=arrival)
+
+
+def test_preemption_strictly_lower_priority_only():
+    """Equals never preempt each other (the livelock guard); a higher
+    class evicts the lowest class first and the victim requeues ahead of
+    same-class WAITING requests."""
+    bp, sched = _mk_sched()                  # 2 slots x 4 blocks: 2 fit
+    r0, r1 = _req(0, priority=1), _req(1, priority=2)
+    sched.add(r0)
+    sched.add(r1)
+    sched.admit(0)
+    assert r0.state == r1.state == sch.RUNNING
+    same = _req(2, priority=2)               # equal to the worst victim
+    sched.add(same)
+    sched.admit(1)
+    assert same.state == sch.WAITING         # no preemption among equals
+    assert sched.counters["refusals"] == 1
+    high = _req(3, priority=0)
+    sched.add(high)
+    sched.admit(2)
+    assert high.state == sch.RUNNING         # preempted the class-2 victim
+    assert r1.state == sch.PREEMPTED and r1.preemptions == 1
+    assert r0.state == sch.RUNNING           # class 1 survives class 0's ask
+    assert sched.counters["preempts_recompute"] == 1
+    bp.check_conservation()
+
+
+def test_victim_selection_lowest_priority_then_shortest_progress():
+    bp, sched = _mk_sched(slots=3, blocks=13)
+    a, b, c = _req(0, priority=2), _req(1, priority=2), _req(2, priority=1)
+    for r in (a, b, c):
+        sched.add(r)
+    sched.admit(0)
+    bp.extend(a.slot, 6)                     # a has made more progress
+    bp.extend(b.slot, 2)
+    bp.extend(c.slot, 8)
+    sched.add(_req(3, priority=0, plen=8))
+    sched.admit(1)
+    assert b.state == sch.PREEMPTED          # lowest class, least progress
+    assert a.state == sch.RUNNING and c.state == sch.RUNNING
+
+
+def test_preempted_requeues_ahead_of_waiting_peers():
+    bp, sched = _mk_sched()
+    v = _req(0, priority=1)
+    sched.add(v)
+    sched.admit(0)
+    sched.preempt(v, tick=0)                 # forced (e.g. fault path)
+    w = _req(1, priority=1)                  # same class, WAITING
+    sched.add(w)
+    sched.admit(1)
+    assert v.state == sch.RUNNING            # PREEMPTED sorts first
+    assert sched.counters["restores_recompute"] == 1
+    assert w.state == sch.RUNNING            # room for both afterwards
+
+
+def test_backoff_and_idle_kick():
+    bp, sched = _mk_sched(slots=1, backoff_cap=8)
+    r0 = _req(0, gen=8)
+    sched.add(r0)
+    sched.admit(0)
+    r1 = _req(1, priority=0)                 # equal class: cannot preempt
+    sched.add(r1)
+    for t in (1, 2):
+        sched.admit(t)
+    assert r1.attempts == 2 and r1.next_try == 2 + 2   # 1, then 2 ticks
+    assert 1 in sched.refused_ids
+    # pool drains: nothing is running, r1 still backing off — the idle
+    # kick clears the backoff instead of idling a non-empty queue
+    r0.remaining = 0
+    sched.finish(r0)
+    sched.admit(3)
+    assert r1.state == sch.RUNNING and sched.counters["idle_kicks"] == 1
+
+
+def test_terminal_refusal_raises_on_impossible_request():
+    bp, sched = _mk_sched(slots=1)
+    sched.add(_req(0, plen=20, gen=10))      # 30 tokens > max_len 16
+    with pytest.raises(RuntimeError, match="can never fit"):
+        sched.admit(0)
+
+
+def test_recompute_restore_pins_prompt_chain():
+    """While a recompute victim is out, its cached prompt chain is pinned
+    (evicted last); restore unpins so the supply is not leaked."""
+    bp, trie = _pool(bs=4, blocks=16, maxb=6, slots=2)
+    sched = sch.Scheduler(bp, trie)
+    toks = np.arange(8)
+    donor = sch.Request(id=0, prompt=toks, gen=4)
+    sched.add(donor)
+    sched.admit(0)
+    bp.extend(donor.slot, 8)
+    trie.insert(toks, bp.block_ids(donor.slot), bp)
+    donor.decoding, donor.pf_pos = True, 8
+    sched.preempt(donor, tick=0)
+    # the pinned chain is the MATCHABLE prefix (match caps at plen-1, so
+    # the final prompt block re-prefills regardless): one block here
+    assert donor.pinned == [int(trie._root.children[(0, 1, 2, 3)].block_id)]
+    assert len(trie._pinned) == 1
+    sched.admit(1)                               # restore
+    assert donor.state == sch.RUNNING
+    assert donor.pinned is None and not trie._pinned
+    assert donor.matched == 4                    # trie served the re-match
+    assert donor.replay == sch.deque()           # nothing delivered yet
+
+
+def test_prefill_quota_shrinks_under_itl_pressure():
+    bp, sched = _mk_sched(slo_itl_ms=10.0)
+    assert sched.prefill_quota(32) == 32     # no samples yet: full share
+    sched._itl_recent.extend([5.0] * 16)
+    assert sched.prefill_quota(32) == 32     # under budget: full share
+    sched._itl_recent.extend([40.0] * 64)    # p50 4x over budget
+    assert sched.prefill_quota(32) == 8      # proportional, floored at 1
+    assert sched.prefill_quota(1) == 1
+
+
+def test_failure_injector_from_rate():
+    inj = FailureInjector.from_rate(0.25, horizon=20)
+    fails = []
+    for t in range(20):
+        try:
+            inj.check(t)
+        except WorkerFailure:
+            fails.append(t)
+    assert fails == [4, 8, 12, 16]
+
+
+# ------------------------------------------------- property: conservation
+def _drive(seed: int) -> None:
+    """Random interleaving of admit/extend/append/truncate/swap_out/
+    swap_in/release/evict ops; after every op the pool must conserve
+    blocks (free + slot-owned + trie-cached partition the device pool,
+    free + swap-record ids partition the host tier) and refcounts stay
+    non-negative.  Truncation rolls back GENERATED tokens only — the
+    scheduler's real rollback shapes (speculative rewind, preempt via
+    swap_out/release) — since re-prefilling trie-inserted rows in place
+    would be a COW violation by design."""
+    layout = pc.PagedLayout(block_size=2, num_blocks=14, max_blocks=6)
+    slots = 3
+    bp = pc.BlockPool(layout, slots, host_blocks=8)
+    trie = PrefixCache(layout.block_size)
+    rng = np.random.default_rng(seed)
+    prompts = [None] * slots
+    pf = [0] * slots
+    gen_left = [0] * slots
+    swapped_meta = {}                        # key -> (prompt, gen_left)
+    next_key = [0]
+
+    def check():
+        bp.check_conservation()
+        free = set(bp._free)
+        owned = set()
+        for s in range(slots):
+            if bp.active[s]:
+                owned |= set(int(x) for x in bp.block_ids(s))
+        cached = {n.block_id for n in trie._lru.values()}
+        assert not free & (owned | cached)
+        assert free | owned | cached == set(range(1, layout.num_blocks))
+
+    for _ in range(160):
+        op = int(rng.integers(0, 8))
+        if op == 0 and bp.free_slots():                       # admit/share
+            plen = int(rng.integers(1, 9))
+            glen = int(rng.integers(1, 4))
+            total = plen + glen
+            if total > layout.max_len:
+                continue
+            toks = rng.integers(0, 3, size=plen)              # tiny vocab:
+            chain, matched = trie.match(toks)                 # real hits
+            while not bp.can_admit(total, n_shared=len(chain)):
+                if trie.evict_lru(bp, protect=frozenset(chain)) is None:
+                    break
+            if chain:
+                got = bp.admit_shared(matched, total, chain)
+            else:
+                s = bp.admit(0, total)
+                got = None if s is None else (s, [])
+            if got is not None:
+                s, cow = got
+                assert not cow                # trie matches: block-aligned
+                prompts[s], pf[s], gen_left[s] = toks, matched, glen
+        elif op == 1:                                          # extend
+            cands = [s for s in range(slots) if bp.active[s]
+                     and prompts[s] is not None and pf[s] < len(prompts[s])]
+            if cands:
+                s = cands[int(rng.integers(len(cands)))]
+                c = int(rng.integers(1, len(prompts[s]) - pf[s] + 1))
+                bp.extend(s, c)
+                pf[s] += c
+                if pf[s] == len(prompts[s]):   # prompt done: cache it
+                    trie.insert(prompts[s], bp.block_ids(s), bp)
+        elif op == 2:                                          # append
+            cands = [s for s in range(slots) if bp.active[s]
+                     and prompts[s] is not None
+                     and pf[s] == len(prompts[s]) and gen_left[s] > 0
+                     and bp.lengths[s] < bp._budget[s]]
+            if cands:
+                s = cands[int(rng.integers(len(cands)))]
+                bp.append(s)
+                gen_left[s] -= 1
+        elif op == 3:                                          # truncate
+            cands = [s for s in range(slots) if bp.active[s]
+                     and prompts[s] is not None
+                     and bp.lengths[s] > pf[s]]
+            if cands:                          # roll back generated rows
+                s = cands[int(rng.integers(len(cands)))]
+                lo, hi = pf[s], int(bp.lengths[s])
+                n = int(rng.integers(lo, hi + 1))
+                if rng.integers(2):            # spec-decode shape: length
+                    bp.truncate(s, n, free_blocks=False)
+                    for _ in range(int(bp.lengths[s]),
+                                   min(hi, int(bp._budget[s]))):
+                        bp.append(s)           # rows re-append in place
+                else:
+                    rolled = hi - n
+                    bp.truncate(s, n)
+                    gen_left[s] += rolled      # rolled-back budget returns
+        elif op == 4:                                          # swap_out
+            cands = [s for s in range(slots) if bp.active[s]
+                     and prompts[s] is not None and bp.can_swap_out(s)]
+            if cands:
+                s = cands[int(rng.integers(len(cands)))]
+                key = next_key[0]
+                next_key[0] += 1
+                rec = bp.swap_out(s, key)
+                assert rec is not None
+                swapped_meta[key] = (prompts[s], gen_left[s])
+                prompts[s] = None
+        elif op == 5 and bp.swapped:                           # swap_in
+            keys = sorted(bp.swapped)
+            key = keys[int(rng.integers(len(keys)))]
+            rec = bp.swapped[key]
+            toks, gl = swapped_meta[key]
+            chain, matched = trie.match(toks, record=False)
+            if matched > rec.budget:
+                chain, matched = [], 0
+            while not bp.can_admit(rec.budget, n_shared=len(chain)):
+                if trie.evict_lru(bp, protect=frozenset(chain)) is None:
+                    break
+            got = bp.swap_in(key, chain, matched)
+            if got is not None:
+                s, cow, rec = got
+                assert not cow
+                del swapped_meta[key]
+                n_eff = max(matched, rec.n_tokens)
+                prompts[s] = toks
+                pf[s] = min(n_eff, len(toks))
+                gen_left[s] = gl
+                if pf[s] == len(toks):
+                    trie.insert(toks, bp.block_ids(s), bp)
+        elif op == 6 and bp.swapped:                           # cancel
+            keys = sorted(bp.swapped)
+            key = keys[int(rng.integers(len(keys)))]
+            bp.swap_free(key)
+            del swapped_meta[key]
+        elif op == 7:                                          # release
+            cands = [s for s in range(slots) if bp.active[s]]
+            if cands:
+                s = cands[int(rng.integers(len(cands)))]
+                bp.release(s)
+                prompts[s] = None
+            else:
+                trie.evict_lru(bp)
+        check()
+        bp.audit()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_rollback_swap_conservation_property(seed):
+        _drive(seed)
+else:
+    def test_rollback_swap_conservation_property():
+        """Deterministic stand-in for the hypothesis property (keeps the
+        tier-1 skip count flat when hypothesis is absent): seeded random
+        interleavings through the same driver."""
+        for seed in range(25):
+            _drive(seed)
+
+
+# ---------------------------------------------------------- end to end
+def _serve(argv, cfg):
+    from repro.launch import serve
+    return serve.run_paged(serve.parse_args(argv), cfg)
+
+
+def _no_moe_cfg():
+    from repro.configs import get_config, reduced
+    return dataclasses.replace(reduced(get_config("deepseek_r1_671b")),
+                               moe=None)
+
+
+CONTENDED = ["--reduced", "--batch", "2", "--prompt", "24", "--gen", "8",
+             "--requests", "6", "--page-size", "8", "--prefill-chunk", "8",
+             "--cache-layout", "paged", "--priority-classes", "3",
+             "--arrival-rate", "0.25", "--trace", "burst",
+             "--burst-size", "3", "--retry-backoff", "4", "--paranoia", "1"]
+
+
+def test_serve_preemption_bitwise_both_modes():
+    """ACCEPTANCE (ISSUE 6): a burst trace over-subscribing the pool ~2x
+    (6 requests x up to 32 tokens through 2 fp slots) completes every
+    request with zero permanent refusals, and greedy outputs are BITWISE
+    identical to an uncontended run — for swap AND recompute evacuation.
+    MoE is dropped because dropless routing mixes tokens across slots and
+    contended runs batch different slot compositions per step; the
+    paranoia sweep audits pool invariants every tick throughout."""
+    cfg = _no_moe_cfg()
+    calm = _serve(CONTENDED[:2] + ["8"] + CONTENDED[3:], cfg)  # batch 8
+    rec = _serve(CONTENDED + ["--preemption", "recompute"], cfg)
+    swp = _serve(CONTENDED + ["--preemption", "swap"], cfg)
+    assert calm["sched"]["preemptions"] == 0          # truly uncontended
+    for res in (rec, swp):
+        assert len(res["outputs"]) == 6               # zero PERMANENT
+        assert res["outputs"] == calm["outputs"]      # refusals, bitwise
+        assert res["tokens_served"] == calm["tokens_served"]
+    if rec["kv_dtype"] == "fp":
+        # quantized legs expand batch_slots under the same byte budget and
+        # may never need to preempt; the fp leg must actually contend
+        assert rec["sched"]["preemptions"] > 0
+        assert rec["sched"]["preempts_recompute"] > 0
+        assert swp["sched"]["preempts_swap"] > 0
+        assert swp["sched"]["restores_swap"] > 0
+        assert rec["refusals"] > 0                    # transient only
+    # per-class latency tails exist for every class that finished work
+    for res in (rec, swp):
+        for cls, st_ in res["classes"].items():
+            assert st_["n"] > 0 and st_["ttft_p99_ms"] >= st_["ttft_p50_ms"]
+
+
+def test_serve_fault_injection_bitwise():
+    """Satellite (ISSUE 6): deterministic mid-decode worker failures under
+    --fault-rate requeue the victim through the recompute path, the
+    heartbeat registry notices each missed beat, and the run completes
+    with outputs bitwise-identical to the unfaulted run."""
+    cfg = _no_moe_cfg()
+    base = ["--reduced", "--batch", "2", "--prompt", "24", "--gen", "8",
+            "--requests", "4", "--page-size", "8", "--prefill-chunk", "8",
+            "--cache-layout", "paged", "--paranoia", "1"]
+    clean = _serve(base, cfg)
+    fault = _serve(base + ["--fault-rate", "0.05"], cfg)
+    assert fault["outputs"] == clean["outputs"]       # bitwise identical
+    assert len(fault["outputs"]) == 4
+    assert fault["worker_restarts"] == fault["sched"]["failures"]
+    if fault["kv_dtype"] == "fp":
+        # the quantized CI leg widens batch_slots, finishes before the
+        # first scheduled fault, and (correctly) injects nothing — only
+        # the fp leg is guaranteed to still be decoding at the fault tick
+        assert fault["sched"]["failures"] > 0
+        assert fault["replayed_tokens"] > 0           # replay actually ran
