@@ -19,7 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-SCHEMA_VERSION = 1
+# v2: rescale-mode era — kernels default to AMLA deferred rescaling
+# (kernels/softmax_state.py) and bench_kernels_interpret carries a
+# mul-referee comparison row; v1 baselines are not comparable.
+SCHEMA_VERSION = 2
 
 
 def bench_meta(config: str) -> dict:
@@ -73,7 +76,11 @@ def bench_table1_rmse():
 
 
 def bench_kernels_interpret():
-    """Pallas kernel paths (interpret mode) at the paper geometry."""
+    """Pallas kernel paths (interpret mode) at the paper geometry.  The
+    timed rows run the default rescale mode (amla unless REPRO_RESCALE /
+    --rescale overrides); a mul-referee row times the same ETAP kernel
+    under multiply-rescale and records the max |amla - mul| divergence."""
+    from repro.kernels import softmax_state
     from repro.kernels.etap import ops as etap_ops
     from repro.kernels.flash_decode import ops as fd_ops
     rng = np.random.default_rng(0)
@@ -88,6 +95,16 @@ def bench_kernels_interpret():
                      ("kernel/flash_decode_baseline", lambda: fd_ops.flash_decode(
             q, k, v, None, scale=576 ** -0.5, block=512))):
         out.append((name, _best_of(fn), "interpret=True"))
+    # mul-vs-amla referee: same kernel, flag-selected rescale modes
+    o_amla = etap_ops.etap_decode(q, k, v, None, scale=576 ** -0.5,
+                                  block=512, rescale="amla")
+    o_mul = etap_ops.etap_decode(q, k, v, None, scale=576 ** -0.5,
+                                 block=512, rescale="mul")
+    div = float(jnp.max(jnp.abs(o_amla - o_mul)))
+    out.append(("kernel/etap_rescale_mul", _best_of(
+        lambda: etap_ops.etap_decode(q, k, v, None, scale=576 ** -0.5,
+                                     block=512, rescale="mul")),
+        f"max|amla-mul|={div:.2e};default={softmax_state.default_mode()}"))
     return out
 
 
@@ -560,7 +577,13 @@ def main(argv=None) -> None:
                          "BENCH_smoke_splitkv.json")
     ap.add_argument("--full", action="store_true",
                     help="wider sweep geometry")
+    ap.add_argument("--rescale", default=os.environ.get("REPRO_RESCALE",
+                                                        "amla"),
+                    help="online-softmax rescaling mode for every timed "
+                         "kernel row: amla (default) | mul")
     args = ap.parse_args(argv)
+    from repro.kernels import softmax_state
+    softmax_state.set_default_mode(args.rescale)
     if args.smoke:
         benches = [bench_smoke]
     elif args.kv_splits:

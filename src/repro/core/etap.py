@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.kernels import softmax_state
 
-NEG_INF = -1e30
+NEG_INF = softmax_state.NEG_INF
 
 
 def _blocks(s: int, block: int) -> int:
@@ -35,7 +36,8 @@ def _blocks(s: int, block: int) -> int:
     return s // block
 
 
-def etap_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512):
+def etap_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512,
+                    rescale: str | None = None):
     """ETAP transposed decode attention, online softmax over KV blocks.
 
     Blocks are taken with lax.dynamic_slice inside a fori_loop (not scan xs),
@@ -47,13 +49,13 @@ def etap_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512):
     Dv = v.shape[2]
     block = min(block, S)
     nb = _blocks(S, block)
+    mode = softmax_state.resolve(rescale)
     if length is None:
         length = jnp.full((BG,), S, jnp.int32)
 
     qT = jnp.swapaxes(q, 1, 2).astype(jnp.float32)            # [BG, Dk, H]
 
     def step(j, carry):
-        m, l, accT = carry                                    # [BG,H] [BG,H] [BG,Dv,H]
         kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
         vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
         # Sᵀ = K·Qᵀ : [BG, block, H] — KV block length on the M dimension.
@@ -62,26 +64,21 @@ def etap_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512):
         pos = j * block + jnp.arange(block, dtype=jnp.int32)  # [block]
         valid = pos[None, :] < length[:, None]                # [BG, block]
         sT = jnp.where(valid[:, :, None], sT, NEG_INF)
-        # column-wise (per-head) online softmax statistics.
-        m_new = jnp.maximum(m, jnp.max(sT, axis=1))           # [BG, H]
-        pT = jnp.exp(sT - m_new[:, None, :])                  # [BG, block, H]
-        corr = jnp.exp(m - m_new)                             # [BG, H]
-        l_new = l * corr + jnp.sum(pT, axis=1)
-        # Oᵀ += Vᵀ·Pᵀ : contraction over the KV block (the long axis).
-        accT = accT * corr[:, None, :] + jnp.einsum(
-            "bkv,bkh->bvh", vj, pT.astype(v.dtype),
-            preferred_element_type=jnp.float32)
-        return (m_new, l_new, accT)
+        # column-wise (per-head) stats; Oᵀ += Vᵀ·Pᵀ over the long KV axis.
+        return softmax_state.update(
+            carry, sT,
+            lambda pT: jnp.einsum("bkv,bkh->bvh", vj, pT.astype(v.dtype),
+                                  preferred_element_type=jnp.float32),
+            axis=1, mode=mode, expand=lambda c: c[:, None, :])
 
-    init = (jnp.full((BG, H), NEG_INF, jnp.float32),
-            jnp.zeros((BG, H), jnp.float32),
-            jnp.zeros((BG, Dv, H), jnp.float32))
-    m, l, accT = jax.lax.fori_loop(0, nb, step, init)
-    oT = accT / l[:, None, :]                                 # [BG, Dv, H]
+    state = jax.lax.fori_loop(
+        0, nb, step, softmax_state.init((BG, H), (BG, Dv, H)))
+    oT = softmax_state.finalize(state, expand=lambda l: l[:, None, :])
     return jnp.swapaxes(oT, 1, 2).astype(v.dtype)             # final O = (Oᵀ)ᵀ
 
 
-def standard_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512):
+def standard_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512,
+                        rescale: str | None = None):
     """Baseline (FlashMLA-without-ETAP): untransposed flash decode. Same
     signature/semantics as :func:`etap_decode_xla`; the thin head dim rides M."""
     BG, H, Dk = q.shape
@@ -89,13 +86,13 @@ def standard_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512)
     Dv = v.shape[2]
     block = min(block, S)
     nb = _blocks(S, block)
+    mode = softmax_state.resolve(rescale)
     if length is None:
         length = jnp.full((BG,), S, jnp.int32)
 
     qf = q.astype(jnp.float32)
 
     def step(j, carry):
-        m, l, acc = carry                                     # [BG,H] [BG,H] [BG,H,Dv]
         kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
         vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
         s = jnp.einsum("bhd,bkd->bhk", qf.astype(k.dtype), kj,
@@ -103,24 +100,20 @@ def standard_decode_xla(q, k, v, length=None, *, scale: float, block: int = 512)
         pos = j * block + jnp.arange(block, dtype=jnp.int32)
         valid = pos[None, :] < length[:, None]                # [BG, block]
         s = jnp.where(valid[:, None, :], s, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, axis=2))
-        p = jnp.exp(s - m_new[:, :, None])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=2)
-        acc = acc * corr[:, :, None] + jnp.einsum(
-            "bhk,bkv->bhv", p.astype(v.dtype), vj,
-            preferred_element_type=jnp.float32)
-        return (m_new, l_new, acc)
+        return softmax_state.update(
+            carry, s,
+            lambda p: jnp.einsum("bhk,bkv->bhv", p.astype(v.dtype), vj,
+                                 preferred_element_type=jnp.float32),
+            axis=2, mode=mode, expand=lambda c: c[:, :, None])
 
-    init = (jnp.full((BG, H), NEG_INF, jnp.float32),
-            jnp.zeros((BG, H), jnp.float32),
-            jnp.zeros((BG, H, Dv), jnp.float32))
-    m, l, acc = jax.lax.fori_loop(0, nb, step, init)
-    return (acc / l[:, :, None]).astype(v.dtype)
+    state = jax.lax.fori_loop(
+        0, nb, step, softmax_state.init((BG, H), (BG, H, Dv)))
+    return softmax_state.finalize(
+        state, expand=lambda l: l[:, :, None]).astype(v.dtype)
 
 
 def etap_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
-                     vary_axis=None):
+                     vary_axis=None, rescale: str | None = None):
     """ETAP loop WITHOUT the epilogue: returns raw (m, l, accT) softmax
     statistics — the combinable form used by sequence-sharded decode.
     vary_axis: shard_map manual axis name(s) to mark the carry varying over
@@ -130,11 +123,11 @@ def etap_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
     Dv = v.shape[2]
     block = min(block, S)
     nb = _blocks(S, block)
+    mode = softmax_state.resolve(rescale)
 
     qT = jnp.swapaxes(q, 1, 2).astype(jnp.float32)
 
     def step(j, carry):
-        m, l, accT = carry
         kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
         vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
         sT = jnp.einsum("bkd,bdh->bkh", kj, qT.astype(k.dtype),
@@ -142,42 +135,35 @@ def etap_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
         pos = j * block + jnp.arange(block, dtype=jnp.int32)
         valid = pos[None, :] < length[:, None]
         sT = jnp.where(valid[:, :, None], sT, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(sT, axis=1))
-        pT = jnp.exp(sT - m_new[:, None, :])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(pT, axis=1)
-        accT = accT * corr[:, None, :] + jnp.einsum(
-            "bkv,bkh->bvh", vj, pT.astype(v.dtype),
-            preferred_element_type=jnp.float32)
-        return (m_new, l_new, accT)
+        return softmax_state.update(
+            carry, sT,
+            lambda pT: jnp.einsum("bkv,bkh->bvh", vj, pT.astype(v.dtype),
+                                  preferred_element_type=jnp.float32),
+            axis=1, mode=mode, expand=lambda c: c[:, None, :])
 
-    init = (jnp.full((BG, H), NEG_INF, jnp.float32),
-            jnp.zeros((BG, H), jnp.float32),
-            jnp.zeros((BG, Dv, H), jnp.float32))
+    init = softmax_state.init((BG, H), (BG, Dv, H))
     if vary_axis is not None:
         init = jax.tree.map(lambda a: compat.pvary(a, vary_axis), init)
     return jax.lax.fori_loop(0, nb, step, init)
 
 
-def combine_partials(m, l, accT):
+def combine_partials(m, l, accT, *, rescale: str | None = None):
     """Merge per-shard (m, l, accT) stats (leading shard axis) into O.
-    m,l: [n,BG,H]; accT: [n,BG,Dv,H] -> [BG,H,Dv].  Stats are upcast so
-    the merge is fp32 end-to-end regardless of what a caller hands in —
-    half-precision exp/sum here would erase the split-invariance the
-    combine owes the single-pass path (DESIGN.md §6)."""
-    m = m.astype(jnp.float32)
-    l = l.astype(jnp.float32)
-    accT = accT.astype(jnp.float32)
-    m_g = jnp.max(m, axis=0)                                  # [BG,H]
-    w = jnp.exp(m - m_g[None])                                # [n,BG,H]
-    l_g = jnp.sum(l * w, axis=0)
-    acc_g = jnp.sum(accT * w[:, :, None, :], axis=0)          # [BG,Dv,H]
-    oT = acc_g / l_g[:, None, :]
+    m,l: [n,BG,H]; accT: [n,BG,Dv,H] -> [BG,H,Dv].  The stat-domain merge
+    (and its fp32-on-entry upcast — half-precision exp/sum here would erase
+    the split-invariance the combine owes the single-pass path, DESIGN.md
+    §6) is :func:`softmax_state.merge_splits`, shared with the Pallas
+    combine kernel.  ``rescale`` must match the partials' producer."""
+    _, l_g, acc_g = softmax_state.merge_splits(
+        m, l, accT, axis=0, mode=softmax_state.resolve(rescale),
+        expand=lambda w: w[:, :, None, :])
+    oT = acc_g / l_g[:, None, :]                              # [BG,Dv,H]
     return jnp.swapaxes(oT, 1, 2)
 
 
 def etap_decode_splitkv_xla(q, k, v, length=None, *, scale: float,
-                            block: int = 512, n_splits: int = 2):
+                            block: int = 512, n_splits: int = 2,
+                            rescale: str | None = None):
     """Two-phase split-KV ETAP decode in pure XLA (DESIGN.md §3).
 
     The KV context is cut into n_splits contiguous segments; each segment's
@@ -189,15 +175,18 @@ def etap_decode_splitkv_xla(q, k, v, length=None, *, scale: float,
     BG, H, Dk = q.shape
     S = k.shape[1]
     Dv = v.shape[2]
+    mode = softmax_state.resolve(rescale)
     if length is None:
         length = jnp.full((BG,), S, jnp.int32)
     if n_splits <= 1:
-        return etap_decode_xla(q, k, v, length, scale=scale, block=block)
+        return etap_decode_xla(q, k, v, length, scale=scale, block=block,
+                               rescale=mode)
     from repro.kernels.etap.schedule import split_geometry
     # effective count: short contexts degrade to fewer non-empty splits
     block, n_splits, npb, padded_s = split_geometry(S, block, n_splits)
     if n_splits <= 1:
-        return etap_decode_xla(q, k, v, length, scale=scale, block=block)
+        return etap_decode_xla(q, k, v, length, scale=scale, block=block,
+                               rescale=mode)
     seg = npb * block
     pad = padded_s - S
     if pad:
@@ -209,12 +198,14 @@ def etap_decode_splitkv_xla(q, k, v, length=None, *, scale: float,
     seg_len = jnp.clip(length[None, :] - starts, 0, seg)       # [n,BG]
     m, l, accT = jax.vmap(
         lambda kk, vv, ll: etap_partial_xla(q, kk, vv, ll, scale=scale,
-                                            block=block))(ks, vs, seg_len)
-    return combine_partials(m, l, accT).astype(v.dtype)
+                                            block=block,
+                                            rescale=mode))(ks, vs, seg_len)
+    return combine_partials(m, l, accT, rescale=mode).astype(v.dtype)
 
 
 def seq_sharded_decode(q, cache, new_row, pos, *, dv: int, scale: float,
-                       axis: str = "model", block: int = 512):
+                       axis: str = "model", block: int = 512,
+                       rescale: str | None = None):
     """Sequence-sharded MLA decode (shard_map over `axis`).
 
     The MLA latent cache [B, S, L] has NO head dimension, so tensor
@@ -227,6 +218,7 @@ def seq_sharded_decode(q, cache, new_row, pos, *, dv: int, scale: float,
     from jax.sharding import PartitionSpec as P
 
     mesh = compat.get_mesh()
+    mode = softmax_state.resolve(rescale)
 
     # shard ids ride in as an axis-sharded operand instead of
     # jax.lax.axis_index: the latter lowers to partition-id, which SPMD
@@ -249,11 +241,13 @@ def seq_sharded_decode(q, cache, new_row, pos, *, dv: int, scale: float,
         m, l, accT = etap_partial_xla(
             q, cache, cache[..., :dv],
             jnp.full((B,), length, jnp.int32), scale=scale, block=block,
-            vary_axis=(axis,))
+            vary_axis=(axis,), rescale=mode)
         # combine via weighted psum: one all-reduce of [B,dv,H] instead of
-        # an n-fold all-gather (§Perf iteration D3 — 8x less wire traffic)
+        # an n-fold all-gather (§Perf iteration D3 — 8x less wire traffic);
+        # the weights come from THE merge definition (softmax_state), the
+        # Σ is the all-reduce.
         m_g = jax.lax.pmax(m, axis)                           # [B,H]
-        w = jnp.exp(m - m_g)
+        w = softmax_state.merge_weights(m, m_g, mode=mode)
         l_g = jax.lax.psum(l * w, axis)
         acc_g = jax.lax.psum(accT * w[:, None, :], axis)      # [B,dv,H]
         oT = acc_g / l_g[:, None, :]
@@ -271,7 +265,8 @@ def seq_sharded_decode(q, cache, new_row, pos, *, dv: int, scale: float,
 
 def decode_attention(q, k, v, length=None, *, scale: float, mode: str = "etap",
                      block: int = 512, use_kernels: bool = False,
-                     interpret: bool = True, n_splits=None):
+                     interpret: bool = True, n_splits=None,
+                     rescale: str | None = None):
     """Unified decode attention entry point.
 
     mode: "etap" (the paper) or "standard" (FlashMLA-like baseline).
@@ -283,17 +278,22 @@ def decode_attention(q, k, v, length=None, *, scale: float, mode: str = "etap",
     kernel and XLA "etap" paths; 1 → force single-pass. The "standard" XLA
     loop streams serially regardless — it is the deliberately unsplit
     baseline.
+    rescale: softmax-state rescale mode, None → the process default
+    (``--rescale`` / REPRO_RESCALE) — resolved here, before any jit cache.
     """
+    rescale = softmax_state.resolve(rescale)
     if use_kernels:
         from repro.kernels.etap import ops as etap_ops
         from repro.kernels.flash_decode import ops as fd_ops
         if mode == "etap":
             return etap_ops.etap_decode_splitkv(
                 q, k, v, length, scale=scale, block=block,
-                n_splits=int(n_splits or 0), interpret=interpret)
+                n_splits=int(n_splits or 0), interpret=interpret,
+                rescale=rescale)
         return fd_ops.flash_decode_splitkv(
             q, k, v, length, scale=scale, block=block,
-            n_splits=int(n_splits or 0), interpret=interpret)
+            n_splits=int(n_splits or 0), interpret=interpret,
+            rescale=rescale)
     if mode == "etap":
         if n_splits is None:
             from repro.kernels.etap.schedule import plan_splits
@@ -302,9 +302,10 @@ def decode_attention(q, k, v, length=None, *, scale: float, mode: str = "etap",
         if n_splits > 1:
             return etap_decode_splitkv_xla(q, k, v, length, scale=scale,
                                            block=block,
-                                           n_splits=int(n_splits))
+                                           n_splits=int(n_splits),
+                                           rescale=rescale)
     fn = etap_decode_xla if mode == "etap" else standard_decode_xla
-    return fn(q, k, v, length, scale=scale, block=block)
+    return fn(q, k, v, length, scale=scale, block=block, rescale=rescale)
 
 
 # ------------------------------------------------------------------- paged
@@ -329,7 +330,8 @@ def _gather_kv(k_pool, v_pool, table, dv: int, k_sz=None, v_sz=None):
 
 
 def etap_decode_paged_xla(q, k_pool, v_pool, table, lengths, *,
-                          scale: float, dv: int = 0, k_sz=None, v_sz=None):
+                          scale: float, dv: int = 0, k_sz=None, v_sz=None,
+                          rescale: str | None = None):
     """Paged ETAP decode in pure XLA: gather the pool rows through the
     block table into the dense layout, then run the blockwise loop with
     block == page — so at block-aligned lengths it is bit-identical to the
@@ -342,13 +344,14 @@ def etap_decode_paged_xla(q, k_pool, v_pool, table, lengths, *,
     if k_sz is not None:
         q = q.astype(jnp.float32)          # match the dequantized fp32 rows
     return etap_decode_xla(q, k, v, lengths, scale=scale,
-                           block=k_pool.shape[1])
+                           block=k_pool.shape[1], rescale=rescale)
 
 
 def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
                            scale: float, mode: str = "etap",
                            use_kernels: bool = False, interpret: bool = True,
-                           n_splits=None, dv: int = 0, k_sz=None, v_sz=None):
+                           n_splits=None, dv: int = 0, k_sz=None, v_sz=None,
+                           rescale: str | None = None):
     """Paged decode attention entry point (the `cache_layout="paged"`
     analogue of :func:`decode_attention`).
 
@@ -359,17 +362,18 @@ def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
     n_splits: None = auto via the block-granular paged scheduler; the
     "standard" baseline runs on the gathered dense layout (it exists for
     comparison, not serving)."""
+    rescale = softmax_state.resolve(rescale)
     if use_kernels and mode == "etap":
         from repro.kernels.etap import ops as etap_ops
         if v_pool is None:
             return etap_ops.etap_decode_mla_paged_splitkv(
                 q, k_pool, dv, table, lengths, scale=scale,
                 n_splits=int(n_splits or 0), interpret=interpret,
-                kv_sz=k_sz)
+                kv_sz=k_sz, rescale=rescale)
         return etap_ops.etap_decode_paged_splitkv(
             q, k_pool, v_pool, table, lengths, scale=scale,
             n_splits=int(n_splits or 0), interpret=interpret,
-            k_sz=k_sz, v_sz=v_sz)
+            k_sz=k_sz, v_sz=v_sz, rescale=rescale)
     if mode == "etap":
         page = k_pool.shape[1]
         if n_splits is None:
@@ -381,21 +385,24 @@ def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
             k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
             return etap_decode_splitkv_xla(q, k, v, lengths, scale=scale,
                                            block=page,
-                                           n_splits=int(n_splits))
+                                           n_splits=int(n_splits),
+                                           rescale=rescale)
         return etap_decode_paged_xla(q, k_pool, v_pool, table, lengths,
                                      scale=scale, dv=dv, k_sz=k_sz,
-                                     v_sz=v_sz)
+                                     v_sz=v_sz, rescale=rescale)
     k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
     if use_kernels:
         from repro.kernels.flash_decode import ops as fd_ops
         return fd_ops.flash_decode_splitkv(
             q, k, v, lengths, scale=scale, block=k_pool.shape[1],
-            n_splits=int(n_splits or 0), interpret=interpret)
+            n_splits=int(n_splits or 0), interpret=interpret,
+            rescale=rescale)
     return standard_decode_xla(q, k, v, lengths, scale=scale,
-                               block=k_pool.shape[1])
+                               block=k_pool.shape[1], rescale=rescale)
 
 
-def etap_prefill_xla(q, k, v, start, *, scale: float, block: int = 512):
+def etap_prefill_xla(q, k, v, start, *, scale: float, block: int = 512,
+                     rescale: str | None = None):
     """Chunked ETAP prefill, online softmax over KV blocks (the XLA twin of
     the paged Pallas prefill kernel — DESIGN.md §9).
 
@@ -411,13 +418,13 @@ def etap_prefill_xla(q, k, v, start, *, scale: float, block: int = 512):
     CH = Cq * H
     block = min(block, S)
     nb = _blocks(S, block)
+    mode = softmax_state.resolve(rescale)
 
     qT = jnp.swapaxes(q.reshape(B, CH, Dk), 1, 2).astype(jnp.float32)
     # column c of the transposed score tile is query row c // H
     qpos = start[:, None] + jnp.arange(CH, dtype=jnp.int32)[None, :] // H
 
     def step(j, carry):
-        m, l, accT = carry                        # [B,CH] [B,CH] [B,Dv,CH]
         kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
         vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
         sT = jnp.einsum("bkd,bdh->bkh", kj, qT.astype(k.dtype),
@@ -425,27 +432,23 @@ def etap_prefill_xla(q, k, v, start, *, scale: float, block: int = 512):
         kpos = j * block + jnp.arange(block, dtype=jnp.int32)  # [block]
         valid = kpos[None, :, None] <= qpos[:, None, :]        # [B,block,CH]
         sT = jnp.where(valid, sT, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(sT, axis=1))
-        pT = jnp.exp(sT - m_new[:, None, :])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(pT, axis=1)
-        accT = accT * corr[:, None, :] + jnp.einsum(
-            "bkv,bkh->bvh", vj, pT.astype(v.dtype),
-            preferred_element_type=jnp.float32)
-        return (m_new, l_new, accT)
+        return softmax_state.update(
+            carry, sT,
+            lambda pT: jnp.einsum("bkv,bkh->bvh", vj, pT.astype(v.dtype),
+                                  preferred_element_type=jnp.float32),
+            axis=1, mode=mode, expand=lambda c: c[:, None, :])
 
-    init = (jnp.full((B, CH), NEG_INF, jnp.float32),
-            jnp.zeros((B, CH), jnp.float32),
-            jnp.zeros((B, Dv, CH), jnp.float32))
-    m, l, accT = jax.lax.fori_loop(0, nb, step, init)
-    oT = accT / l[:, None, :]                                  # [B,Dv,CH]
+    state = jax.lax.fori_loop(
+        0, nb, step, softmax_state.init((B, CH), (B, Dv, CH)))
+    oT = softmax_state.finalize(state, expand=lambda l: l[:, None, :])
     return jnp.swapaxes(oT, 1, 2).reshape(B, Cq, H, Dv).astype(v.dtype)
 
 
 def prefill_attention_paged(q, k_pool, v_pool, table, start, *, scale: float,
                             mode: str = "etap", use_kernels: bool = False,
                             interpret: bool = True, dv: int = 0,
-                            k_sz=None, v_sz=None):
+                            k_sz=None, v_sz=None,
+                            rescale: str | None = None):
     """Chunked paged prefill attention entry point (the prefill analogue of
     :func:`decode_attention_paged`).
 
@@ -462,24 +465,25 @@ def prefill_attention_paged(q, k_pool, v_pool, table, start, *, scale: float,
     `mode` is accepted for signature parity with decode; both modes share
     the transposed loop here — prefill tiles are never thin on M."""
     del mode
+    rescale = softmax_state.resolve(rescale)
     if use_kernels:
         from repro.kernels.etap import ops as etap_ops
         if v_pool is None:
             return etap_ops.etap_prefill_mla_paged(
                 q, k_pool, dv, table, start, scale=scale,
-                interpret=interpret, kv_sz=k_sz)
+                interpret=interpret, kv_sz=k_sz, rescale=rescale)
         return etap_ops.etap_prefill_paged(
             q, k_pool, v_pool, table, start, scale=scale,
-            interpret=interpret, k_sz=k_sz, v_sz=v_sz)
+            interpret=interpret, k_sz=k_sz, v_sz=v_sz, rescale=rescale)
     k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
     if k_sz is not None:
         q = q.astype(jnp.float32)          # match the dequantized fp32 rows
     return etap_prefill_xla(q, k, v, start, scale=scale,
-                            block=k_pool.shape[1])
+                            block=k_pool.shape[1], rescale=rescale)
 
 
 def gqa_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
-                    vary_axis=None):
+                    vary_axis=None, rescale: str | None = None):
     """ETAP partial stats for GQA in the native [B,S,K,hd] cache layout.
     q: [B,K,G,hd]. Returns (m, l, accT): [B,K,G], [B,K,G], [B,K,Dv,G]."""
     B, K, G, Dk = q.shape
@@ -487,10 +491,10 @@ def gqa_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
     Dv = v.shape[3]
     block = min(block, S)
     nb = _blocks(S, block)
+    mode = softmax_state.resolve(rescale)
     qf = q.astype(jnp.float32)
 
     def step(j, carry):
-        m, l, accT = carry
         kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
         vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
         sT = jnp.einsum("bskd,bkgd->bksg", kj, qf.astype(k.dtype),
@@ -498,18 +502,13 @@ def gqa_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
         pos = j * block + jnp.arange(block, dtype=jnp.int32)
         valid = pos[None, :] < length[:, None]
         sT = jnp.where(valid[:, None, :, None], sT, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(sT, axis=2))
-        pT = jnp.exp(sT - m_new[:, :, None, :])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(pT, axis=2)
-        accT = accT * corr[:, :, None, :] + jnp.einsum(
-            "bskv,bksg->bkvg", vj, pT.astype(v.dtype),
-            preferred_element_type=jnp.float32)
-        return (m_new, l_new, accT)
+        return softmax_state.update(
+            carry, sT,
+            lambda pT: jnp.einsum("bskv,bksg->bkvg", vj, pT.astype(v.dtype),
+                                  preferred_element_type=jnp.float32),
+            axis=2, mode=mode, expand=lambda c: c[:, :, None, :])
 
-    init = (jnp.full((B, K, G), NEG_INF, jnp.float32),
-            jnp.zeros((B, K, G), jnp.float32),
-            jnp.zeros((B, K, Dv, G), jnp.float32))
+    init = softmax_state.init((B, K, G), (B, K, Dv, G))
     if vary_axis is not None:
         init = jax.tree.map(lambda a: compat.pvary(a, vary_axis), init)
     return jax.lax.fori_loop(0, nb, step, init)
@@ -517,7 +516,7 @@ def gqa_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
 
 def seq_sharded_gqa_decode(q, k_cache, v_cache, new_k, new_v, pos, *,
                            scale: float, axis: str = "model",
-                           block: int = 512):
+                           block: int = 512, rescale: str | None = None):
     """Sequence-sharded GQA decode (shard_map over `axis`) — the generic-
     attention analogue of :func:`seq_sharded_decode`: each shard owns an
     S/n slice of the [B,S,K,hd] cache, writes the new KV row if `pos` falls
@@ -526,6 +525,7 @@ def seq_sharded_gqa_decode(q, k_cache, v_cache, new_k, new_v, pos, *,
     Returns (O [B,K*G,Dv], new k_cache, new v_cache)."""
     from jax.sharding import PartitionSpec as P
     mesh = compat.get_mesh()
+    mode = softmax_state.resolve(rescale)
     B, K, G, Dk = q.shape
     Dv = v_cache.shape[3]
 
@@ -547,10 +547,11 @@ def seq_sharded_gqa_decode(q, k_cache, v_cache, new_k, new_v, pos, *,
         length = jnp.full((B,), jnp.clip(pos + 1 - start, 0, S_local),
                           jnp.int32)
         m, l, accT = gqa_partial_xla(q, kc, vc, length, scale=scale,
-                                     block=block, vary_axis=(axis,))
+                                     block=block, vary_axis=(axis,),
+                                     rescale=mode)
         # weighted-psum combine (one all-reduce, no n-fold gather — §Perf D3)
         m_g = jax.lax.pmax(m, axis)                    # [B,K,G]
-        w = jnp.exp(m - m_g)
+        w = softmax_state.merge_weights(m, m_g, mode=mode)
         l_g = jax.lax.psum(l * w, axis)
         acc_g = jax.lax.psum(accT * w[:, :, None, :], axis)
         o = jnp.swapaxes(acc_g / l_g[:, :, None, :], 2, 3)   # [B,K,G,Dv]
@@ -566,7 +567,7 @@ def seq_sharded_gqa_decode(q, k_cache, v_cache, new_k, new_v, pos, *,
 
 
 def gqa_decode_xla(q, k, v, length, *, scale: float, mode: str = "etap",
-                   block: int = 512):
+                   block: int = 512, rescale: str | None = None):
     """GQA decode attention operating NATIVELY on the [B,S,K,hd] cache layout
     (no transpose/copy of the multi-GiB cache — it is streamed in place with
     dynamic_slice). q: [B,K,G,hd]; k,v: [B,S,K,hd*]; length: [B].
@@ -577,10 +578,10 @@ def gqa_decode_xla(q, k, v, length, *, scale: float, mode: str = "etap",
     Dv = v.shape[3]
     block = min(block, S)
     nb = _blocks(S, block)
+    rs = softmax_state.resolve(rescale)
     qf = q.astype(jnp.float32)
 
     def step_etap(j, carry):
-        m, l, accT = carry                        # [B,K,G] [B,K,G] [B,K,Dv,G]
         kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
         vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
         # Sᵀ: KV block on the long dim, per-(k,g) column statistics
@@ -589,17 +590,13 @@ def gqa_decode_xla(q, k, v, length, *, scale: float, mode: str = "etap",
         pos = j * block + jnp.arange(block, dtype=jnp.int32)
         valid = pos[None, :] < length[:, None]    # [B, block]
         sT = jnp.where(valid[:, None, :, None], sT, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(sT, axis=2))
-        pT = jnp.exp(sT - m_new[:, :, None, :])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(pT, axis=2)
-        accT = accT * corr[:, :, None, :] + jnp.einsum(
-            "bskv,bksg->bkvg", vj, pT.astype(v.dtype),
-            preferred_element_type=jnp.float32)
-        return (m_new, l_new, accT)
+        return softmax_state.update(
+            carry, sT,                            # stats [B,K,G]
+            lambda pT: jnp.einsum("bskv,bksg->bkvg", vj, pT.astype(v.dtype),
+                                  preferred_element_type=jnp.float32),
+            axis=2, mode=rs, expand=lambda c: c[:, :, None, :])
 
     def step_std(j, carry):
-        m, l, acc = carry                         # [B,K,G] [B,K,G] [B,K,G,Dv]
         kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
         vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=1)
         s = jnp.einsum("bkgd,bskd->bkgs", qf.astype(k.dtype), kj,
@@ -607,25 +604,21 @@ def gqa_decode_xla(q, k, v, length, *, scale: float, mode: str = "etap",
         pos = j * block + jnp.arange(block, dtype=jnp.int32)
         valid = pos[None, :] < length[:, None]
         s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, axis=3))
-        p = jnp.exp(s - m_new[..., None])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=3)
-        acc = acc * corr[..., None] + jnp.einsum(
-            "bkgs,bskv->bkgv", p.astype(v.dtype), vj,
-            preferred_element_type=jnp.float32)
-        return (m_new, l_new, acc)
+        return softmax_state.update(
+            carry, s,                             # acc [B,K,G,Dv]
+            lambda p: jnp.einsum("bkgs,bskv->bkgv", p.astype(v.dtype), vj,
+                                 preferred_element_type=jnp.float32),
+            axis=3, mode=rs, expand=lambda c: c[..., None])
 
-    stats = (jnp.full((B, K, G), NEG_INF, jnp.float32),
-             jnp.zeros((B, K, G), jnp.float32))
     if mode == "etap":
-        init = stats + (jnp.zeros((B, K, Dv, G), jnp.float32),)
-        m, l, accT = jax.lax.fori_loop(0, nb, step_etap, init)
-        o = jnp.swapaxes(accT / l[:, :, None, :], 2, 3)       # [B,K,G,Dv]
+        state = jax.lax.fori_loop(
+            0, nb, step_etap, softmax_state.init((B, K, G), (B, K, Dv, G)))
+        oT = softmax_state.finalize(state, expand=lambda l: l[:, :, None, :])
+        o = jnp.swapaxes(oT, 2, 3)                            # [B,K,G,Dv]
     else:
-        init = stats + (jnp.zeros((B, K, G, Dv), jnp.float32),)
-        m, l, acc = jax.lax.fori_loop(0, nb, step_std, init)
-        o = acc / l[..., None]
+        state = jax.lax.fori_loop(
+            0, nb, step_std, softmax_state.init((B, K, G), (B, K, G, Dv)))
+        o = softmax_state.finalize(state, expand=lambda l: l[..., None])
     return o.reshape(B, K * G, Dv).astype(v.dtype)
 
 

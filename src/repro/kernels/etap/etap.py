@@ -23,8 +23,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels import softmax_state
 
-NEG_INF = -1e30
+NEG_INF = softmax_state.NEG_INF
 
 
 def _dequant(blk, sz_ref):
@@ -42,19 +43,21 @@ def _dequant(blk, sz_ref):
 
 def _etap_body(length_ref, q_ref, k_ref, v_ref, o_ref,
                acc_ref, m_ref, l_ref, *, scale: float, block: int,
-               nb: int, fused_dv: int, k_sz_ref=None, v_sz_ref=None):
+               nb: int, fused_dv: int, rescale: str,
+               k_sz_ref=None, v_sz_ref=None):
     """Shared kernel body. With fused_dv > 0, v_ref is None and V is the
     first fused_dv columns of the K (latent) block.  With k_sz_ref /
     v_sz_ref set, the K/V blocks arrive as int8/fp8 codes and are
     dequantized in registers before the dot (DESIGN.md §11); the softmax
-    statistics and the accumulator are fp32 either way."""
+    statistics and the accumulator are fp32 either way.  The online-softmax
+    state lives in the (m, l, acc) scratch refs and is advanced exclusively
+    through :mod:`repro.kernels.softmax_state` (``rescale`` selects the
+    mul/amla recurrence)."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        softmax_state.init_refs(m_ref, l_ref, acc_ref)
 
     k_blk = _dequant(k_ref[0], k_sz_ref)               # [block, Dk]
     q = q_ref[0]                                       # [H, Dk]
@@ -69,22 +72,19 @@ def _etap_body(length_ref, q_ref, k_ref, v_ref, o_ref,
     pos = j * block + jax.lax.broadcasted_iota(jnp.int32, sT.shape, 0)
     sT = jnp.where(pos < length, sT, NEG_INF)
 
-    m_old = m_ref[...]                                 # [1, H]
-    m_new = jnp.maximum(m_old, jnp.max(sT, axis=0, keepdims=True))
-    p = jnp.exp(sT - m_new)                            # [block, H]  (Pᵀ)
-    corr = jnp.exp(m_old - m_new)                      # [1, H]
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
-    m_ref[...] = m_new
-
     v_blk = k_blk[:, :fused_dv] if fused_dv else _dequant(v_ref[0], v_sz_ref)
     # Accᵀ += Vᵀ·Pᵀ — contraction over the KV block.
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        v_blk, p, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)            # [Dv, H]
+    m_ref[...], l_ref[...], acc_ref[...] = softmax_state.update(
+        (m_ref[...], l_ref[...], acc_ref[...]), sT,
+        lambda p: jax.lax.dot_general(
+            v_blk, p, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32),       # [Dv, H]
+        axis=0, mode=rescale)
 
     @pl.when(j == nb - 1)
     def _epilogue():
-        o_ref[0] = (acc_ref[...] / l_ref[...]).T.astype(o_ref.dtype)
+        o_ref[0] = softmax_state.finalize(
+            (None, l_ref[...], acc_ref[...])).T.astype(o_ref.dtype)
 
 
 def _body_fused(length_ref, q_ref, k_ref, o_ref, acc, m, l, **kw):
@@ -119,7 +119,7 @@ def _paged_body_quant_fused(length_ref, table_ref, q_ref, k_ref, k_sz_ref,
                k_sz_ref=k_sz_ref, **kw)
 
 
-def _call(q, k, v, length, *, scale, block, interpret, fused_dv):
+def _call(q, k, v, length, *, scale, block, interpret, fused_dv, rescale):
     BG, H, Dk = q.shape
     S = k.shape[1]
     Dv = fused_dv or v.shape[2]
@@ -136,7 +136,8 @@ def _call(q, k, v, length, *, scale, block, interpret, fused_dv):
         in_specs.append(pl.BlockSpec((1, block, Dv), lambda b, j, *_: (b, j, 0)))
         operands.append(v)
 
-    kw = dict(scale=scale, block=block, nb=nb, fused_dv=fused_dv)
+    kw = dict(scale=scale, block=block, nb=nb, fused_dv=fused_dv,
+              rescale=softmax_state.resolve(rescale))
     body = functools.partial(_body_fused if fused_dv else _etap_body, **kw)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -161,17 +162,18 @@ def _call(q, k, v, length, *, scale, block, interpret, fused_dv):
 
 
 def etap_decode_pallas(q, k, v, length, *, scale: float, block: int = 512,
-                       interpret: bool = True):
+                       interpret: bool = True, rescale: str | None = None):
     """Generic (separate-V) ETAP decode kernel."""
     return _call(q, k, v, length, scale=scale, block=block,
-                 interpret=interpret, fused_dv=0)
+                 interpret=interpret, fused_dv=0, rescale=rescale)
 
 
 def etap_decode_mla_pallas(q, kv, dv: int, length, *, scale: float,
-                           block: int = 512, interpret: bool = True):
+                           block: int = 512, interpret: bool = True,
+                           rescale: str | None = None):
     """MLA-fused ETAP: single latent stream, V = kv[..., :dv]."""
     return _call(q, kv, None, length, scale=scale, block=block,
-                 interpret=interpret, fused_dv=dv)
+                 interpret=interpret, fused_dv=dv, rescale=rescale)
 
 
 # ----------------------------------------------------------- paged variants
@@ -181,7 +183,7 @@ def _pool_spec(page, D):
 
 
 def _paged_call(q, pool, v_pool, table, lengths, *, scale, interpret,
-                fused_dv, k_sz=None, v_sz=None):
+                fused_dv, rescale, k_sz=None, v_sz=None):
     """Paged single-pass ETAP: KV lives in a block pool [N, page, D]; the
     block table [B, max_blocks] rides in as a scalar-prefetch operand and
     the K/V BlockSpec index maps dereference it, so each grid step DMAs
@@ -210,7 +212,8 @@ def _paged_call(q, pool, v_pool, table, lengths, *, scale, interpret,
             in_specs.append(_pool_spec(page, 2))
             operands.append(v_sz)
 
-    kw = dict(scale=scale, block=page, nb=nb, fused_dv=fused_dv)
+    kw = dict(scale=scale, block=page, nb=nb, fused_dv=fused_dv,
+              rescale=softmax_state.resolve(rescale))
     if quant:
         body = functools.partial(
             _paged_body_quant_fused if fused_dv else _paged_body_quant, **kw)
@@ -243,28 +246,31 @@ def _paged_call(q, pool, v_pool, table, lengths, *, scale, interpret,
 
 def etap_decode_paged_pallas(q, k_pool, v_pool, table, lengths, *,
                              scale: float, interpret: bool = True,
-                             k_sz=None, v_sz=None):
+                             k_sz=None, v_sz=None,
+                             rescale: str | None = None):
     """Paged (separate-V) ETAP decode kernel. q: [B,H,Dk]; pools
     [N,page,D*]; table: [B,max_blocks]; lengths: [B]. Returns [B,H,Dv].
     k_sz/v_sz: (scale, zp) pools when k_pool/v_pool hold int8/fp8 codes."""
     return _paged_call(q, k_pool, v_pool, table, lengths, scale=scale,
-                       interpret=interpret, fused_dv=0, k_sz=k_sz, v_sz=v_sz)
+                       interpret=interpret, fused_dv=0, rescale=rescale,
+                       k_sz=k_sz, v_sz=v_sz)
 
 
 def etap_decode_mla_paged_pallas(q, kv_pool, dv: int, table, lengths, *,
                                  scale: float, interpret: bool = True,
-                                 kv_sz=None):
+                                 kv_sz=None, rescale: str | None = None):
     """Paged MLA-fused ETAP: single latent pool, V = pool[..., :dv].
     kv_sz: (scale, zp) pool when kv_pool holds int8/fp8 codes — V is
     sliced AFTER the affine, so one sz pair serves both operands."""
     return _paged_call(q, kv_pool, None, table, lengths, scale=scale,
-                       interpret=interpret, fused_dv=dv, k_sz=kv_sz)
+                       interpret=interpret, fused_dv=dv, rescale=rescale,
+                       k_sz=kv_sz)
 
 
 # ---------------------------------------------------------- chunked prefill
 def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
                        acc_ref, m_ref, l_ref, *, scale: float, page: int,
-                       nb: int, heads: int, fused_dv: int,
+                       nb: int, heads: int, fused_dv: int, rescale: str,
                        k_sz_ref=None, v_sz_ref=None):
     """Chunked paged ETAP prefill (DESIGN.md §9): the decode body with the
     single query row widened to a [Cq, H] tile, flattened to CH = Cq*H
@@ -279,9 +285,7 @@ def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        softmax_state.init_refs(m_ref, l_ref, acc_ref)
 
     k_blk = _dequant(k_ref[0], k_sz_ref)               # [page, Dk]
     q = q_ref[0]                                       # [CH, Dk]
@@ -297,21 +301,18 @@ def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
     qpos = start + jax.lax.broadcasted_iota(jnp.int32, sT.shape, 1) // heads
     sT = jnp.where(kpos <= qpos, sT, NEG_INF)          # causal chunk-vs-pool
 
-    m_old = m_ref[...]                                 # [1, CH]
-    m_new = jnp.maximum(m_old, jnp.max(sT, axis=0, keepdims=True))
-    p = jnp.exp(sT - m_new)                            # [page, CH]
-    corr = jnp.exp(m_old - m_new)                      # [1, CH]
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
-    m_ref[...] = m_new
-
     v_blk = k_blk[:, :fused_dv] if fused_dv else _dequant(v_ref[0], v_sz_ref)
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        v_blk, p, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)            # [Dv, CH]
+    m_ref[...], l_ref[...], acc_ref[...] = softmax_state.update(
+        (m_ref[...], l_ref[...], acc_ref[...]), sT,
+        lambda p: jax.lax.dot_general(
+            v_blk, p, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32),       # [Dv, CH]
+        axis=0, mode=rescale)
 
     @pl.when(j == nb - 1)
     def _epilogue():
-        o_ref[0] = (acc_ref[...] / l_ref[...]).T.astype(o_ref.dtype)
+        o_ref[0] = softmax_state.finalize(
+            (None, l_ref[...], acc_ref[...])).T.astype(o_ref.dtype)
 
 
 def _prefill_body_fused(start_ref, table_ref, q_ref, k_ref, o_ref,
@@ -333,7 +334,7 @@ def _prefill_body_quant_fused(start_ref, table_ref, q_ref, k_ref, k_sz_ref,
 
 
 def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
-                  fused_dv, k_sz=None, v_sz=None):
+                  fused_dv, rescale, k_sz=None, v_sz=None):
     B, CH, Dk = q.shape
     page = pool.shape[1]
     nb = table.shape[1]
@@ -355,7 +356,8 @@ def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
             in_specs.append(_pool_spec(page, 2))
             operands.append(v_sz)
 
-    kw = dict(scale=scale, page=page, nb=nb, heads=heads, fused_dv=fused_dv)
+    kw = dict(scale=scale, page=page, nb=nb, heads=heads, fused_dv=fused_dv,
+              rescale=softmax_state.resolve(rescale))
     if quant:
         body = functools.partial(
             _prefill_body_quant_fused if fused_dv else _prefill_body_quant,
@@ -389,7 +391,8 @@ def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
 
 def etap_prefill_paged_pallas(q, k_pool, v_pool, table, start, *,
                               scale: float, interpret: bool = True,
-                              k_sz=None, v_sz=None):
+                              k_sz=None, v_sz=None,
+                              rescale: str | None = None):
     """Paged (separate-V) chunked ETAP prefill. q: [B,Cq,H,Dk]; pools
     [N,page,D*]; table [B,max_blocks]; start [B] = tokens already in the
     pool BEFORE this chunk (the chunk's own rows must already be appended).
@@ -398,18 +401,18 @@ def etap_prefill_paged_pallas(q, k_pool, v_pool, table, start, *,
     B, Cq, H, Dk = q.shape
     o = _prefill_call(q.reshape(B, Cq * H, Dk), k_pool, v_pool, table, start,
                       heads=H, scale=scale, interpret=interpret, fused_dv=0,
-                      k_sz=k_sz, v_sz=v_sz)
+                      rescale=rescale, k_sz=k_sz, v_sz=v_sz)
     return o.reshape(B, Cq, H, o.shape[-1])
 
 
 def etap_prefill_mla_paged_pallas(q, kv_pool, dv: int, table, start, *,
                                   scale: float, interpret: bool = True,
-                                  kv_sz=None):
+                                  kv_sz=None, rescale: str | None = None):
     """Paged MLA-fused chunked prefill: single latent pool, V = pool[..., :dv]."""
     B, Cq, H, Dk = q.shape
     o = _prefill_call(q.reshape(B, Cq * H, Dk), kv_pool, None, table, start,
                       heads=H, scale=scale, interpret=interpret, fused_dv=dv,
-                      k_sz=kv_sz)
+                      rescale=rescale, k_sz=kv_sz)
     return o.reshape(B, Cq, H, dv)
 
 
@@ -417,7 +420,7 @@ def etap_prefill_mla_paged_pallas(q, kv_pool, dv: int, table, start, *,
 def _etap_partial_body(length_ref, q_ref, k_ref, v_ref,
                        m_out_ref, l_out_ref, acc_out_ref,
                        acc_ref, m_ref, l_ref, *, scale: float, block: int,
-                       npb: int, fused_dv: int,
+                       npb: int, fused_dv: int, rescale: str,
                        k_sz_ref=None, v_sz_ref=None):
     """Split-KV partial: same transposed update as :func:`_etap_body`, on a
     3-D ``(BG, n_splits, nb_per_split)`` grid.  Each (b, split) pair owns a
@@ -429,9 +432,7 @@ def _etap_partial_body(length_ref, q_ref, k_ref, v_ref,
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        softmax_state.init_refs(m_ref, l_ref, acc_ref)
 
     k_blk = _dequant(k_ref[0], k_sz_ref)               # [block, Dk]
     q = q_ref[0]                                       # [H, Dk]
@@ -446,17 +447,13 @@ def _etap_partial_body(length_ref, q_ref, k_ref, v_ref,
         jnp.int32, sT.shape, 0)
     sT = jnp.where(pos < length, sT, NEG_INF)
 
-    m_old = m_ref[...]                                 # [1, H]
-    m_new = jnp.maximum(m_old, jnp.max(sT, axis=0, keepdims=True))
-    p = jnp.exp(sT - m_new)                            # [block, H]
-    corr = jnp.exp(m_old - m_new)                      # [1, H]
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
-    m_ref[...] = m_new
-
     v_blk = k_blk[:, :fused_dv] if fused_dv else _dequant(v_ref[0], v_sz_ref)
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        v_blk, p, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)            # [Dv, H]
+    m_ref[...], l_ref[...], acc_ref[...] = softmax_state.update(
+        (m_ref[...], l_ref[...], acc_ref[...]), sT,
+        lambda p: jax.lax.dot_general(
+            v_blk, p, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32),       # [Dv, H]
+        axis=0, mode=rescale)
 
     @pl.when(j == npb - 1)
     def _emit():
@@ -473,7 +470,7 @@ def _partial_body_fused(length_ref, q_ref, k_ref, m_out, l_out, acc_out,
 
 def etap_partial_pallas(q, k, v, length, *, scale: float, block: int,
                         n_splits: int, interpret: bool = True,
-                        fused_dv: int = 0):
+                        fused_dv: int = 0, rescale: str | None = None):
     """Phase-1 split-KV ETAP kernel.
 
     q: [BG,H,Dk]; k: [BG,S,Dk] with S == n_splits * nb_per_split * block
@@ -497,7 +494,8 @@ def etap_partial_pallas(q, k, v, length, *, scale: float, block: int,
             (1, block, Dv), lambda b, s, j, *_, npb=npb: (b, s * npb + j, 0)))
         operands.append(v)
 
-    kw = dict(scale=scale, block=block, npb=npb, fused_dv=fused_dv)
+    kw = dict(scale=scale, block=block, npb=npb, fused_dv=fused_dv,
+              rescale=softmax_state.resolve(rescale))
     body = functools.partial(
         _partial_body_fused if fused_dv else _etap_partial_body, **kw)
 
@@ -562,7 +560,8 @@ def _paged_partial_body_quant_fused(length_ref, table_ref, q_ref, k_ref,
 def etap_paged_partial_pallas(q, k_pool, v_pool, table, lengths, *,
                               scale: float, n_splits: int,
                               interpret: bool = True, fused_dv: int = 0,
-                              k_sz=None, v_sz=None):
+                              k_sz=None, v_sz=None,
+                              rescale: str | None = None):
     """Phase-1 split-KV over a PAGED cache: same (b, split, block-walk) grid
     as :func:`etap_partial_pallas`, but each grid step's KV block is pool
     block ``table[b, s*npb + j]`` (scalar-prefetch gather).  Splits are cut
@@ -599,7 +598,8 @@ def etap_paged_partial_pallas(q, k_pool, v_pool, table, lengths, *,
             in_specs.append(split_pool_spec(2))
             operands.append(v_sz)
 
-    kw = dict(scale=scale, block=page, npb=npb, fused_dv=fused_dv)
+    kw = dict(scale=scale, block=page, npb=npb, fused_dv=fused_dv,
+              rescale=softmax_state.resolve(rescale))
     if quant:
         body = functools.partial(
             _paged_partial_body_quant_fused if fused_dv

@@ -1,13 +1,16 @@
 """jit'd public wrappers for the ETAP kernels: shape normalization (pad S to
 a block/split multiple — masked via `length`), dtype checks, MLA-fused and
-split-KV two-phase entry points."""
+split-KV two-phase entry points.
+
+Every entry point takes ``rescale`` (None → the process default mode) and is
+wrapped by :func:`softmax_state.jit_with_rescale`, which resolves the mode
+BEFORE the jit cache — flipping the serve-level default can never serve a
+stale trace, and the resolved string is a static cache key."""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import softmax_state
 from repro.kernels.etap.combine import combine_splits
 from repro.kernels.etap.etap import (etap_decode_mla_paged_pallas,
                                      etap_decode_mla_pallas,
@@ -29,9 +32,10 @@ def _pad_seq(x, multiple: int):
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "block", "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("scale", "block", "interpret"))
 def etap_decode(q, k, v, length=None, *, scale: float, block: int = 512,
-                interpret: bool = True):
+                interpret: bool = True, rescale: str | None = None):
     """ETAP decode attention. q: [BG,H,Dk]; k: [BG,S,Dk]; v: [BG,S,Dv];
     length: [BG] valid-prefix lengths (None = all S). Returns [BG,H,Dv]."""
     BG, _, _ = q.shape
@@ -42,12 +46,14 @@ def etap_decode(q, k, v, length=None, *, scale: float, block: int = 512,
     k = _pad_seq(k, block)     # padded tail is masked out via `length`
     v = _pad_seq(v, block)
     return etap_decode_pallas(q, k, v, length, scale=scale, block=block,
-                              interpret=interpret)
+                              interpret=interpret, rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("dv", "scale", "block", "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("dv", "scale", "block", "interpret"))
 def etap_decode_mla(q, kv, dv: int, length=None, *, scale: float,
-                    block: int = 512, interpret: bool = True):
+                    block: int = 512, interpret: bool = True,
+                    rescale: str | None = None):
     """MLA-fused ETAP: one latent stream [BG,S,latent]; V = kv[..., :dv]."""
     BG = q.shape[0]
     S = kv.shape[1]
@@ -56,11 +62,12 @@ def etap_decode_mla(q, kv, dv: int, length=None, *, scale: float,
     block = min(block, S)
     kv = _pad_seq(kv, block)
     return etap_decode_mla_pallas(q, kv, dv, length, scale=scale, block=block,
-                                  interpret=interpret)
+                                  interpret=interpret, rescale=rescale)
 
 
 # ------------------------------------------------------ split-KV two-phase
-def _partial(q, kv, v, length, *, scale, block, n_splits, interpret, fused_dv):
+def _partial(q, kv, v, length, *, scale, block, n_splits, interpret,
+             fused_dv, rescale):
     """Pad S to a (n_splits · block) multiple and run the phase-1 kernel.
     n_splits is re-derived through the shared geometry, so a request for
     more splits than there are KV blocks degrades to fewer non-empty
@@ -71,40 +78,44 @@ def _partial(q, kv, v, length, *, scale, block, n_splits, interpret, fused_dv):
         v = _pad_seq(v, target)
     return etap_partial_pallas(q, kv, v, length, scale=scale, block=block,
                                n_splits=n_splits, interpret=interpret,
-                               fused_dv=fused_dv)
+                               fused_dv=fused_dv, rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "block", "n_splits",
-                                             "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("scale", "block", "n_splits", "interpret"))
 def etap_partial(q, k, v, length=None, *, scale: float, block: int = 512,
-                 n_splits: int = 2, interpret: bool = True):
+                 n_splits: int = 2, interpret: bool = True,
+                 rescale: str | None = None):
     """Phase-1 split-KV stats. Returns (m, l, accT):
     [BG,n,H], [BG,n,H], [BG,n,Dv,H] (fp32)."""
     BG = q.shape[0]
     if length is None:
         length = jnp.full((BG,), k.shape[1], jnp.int32)
     return _partial(q, k, v, length, scale=scale, block=block,
-                    n_splits=n_splits, interpret=interpret, fused_dv=0)
+                    n_splits=n_splits, interpret=interpret, fused_dv=0,
+                    rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("dv", "scale", "block",
-                                             "n_splits", "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("dv", "scale", "block", "n_splits", "interpret"))
 def etap_partial_mla(q, kv, dv: int, length=None, *, scale: float,
                      block: int = 512, n_splits: int = 2,
-                     interpret: bool = True):
+                     interpret: bool = True, rescale: str | None = None):
     """Phase-1 split-KV stats, MLA-fused (V = kv[..., :dv])."""
     BG = q.shape[0]
     if length is None:
         length = jnp.full((BG,), kv.shape[1], jnp.int32)
     return _partial(q, kv, None, length, scale=scale, block=block,
-                    n_splits=n_splits, interpret=interpret, fused_dv=dv)
+                    n_splits=n_splits, interpret=interpret, fused_dv=dv,
+                    rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "block", "n_splits",
-                                             "combine", "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("scale", "block", "n_splits", "combine", "interpret"))
 def etap_decode_splitkv(q, k, v, length=None, *, scale: float,
                         block: int = 512, n_splits: int = 0,
-                        combine: str = "pallas", interpret: bool = True):
+                        combine: str = "pallas", interpret: bool = True,
+                        rescale: str | None = None):
     """Two-phase split-KV ETAP decode. n_splits = 0 → auto (scheduler);
     n_splits = 1 routes to the single-pass kernel (bit-identical — the
     combine weights degenerate to exp(0) = 1, so the two-phase path computes
@@ -116,13 +127,15 @@ def etap_decode_splitkv(q, k, v, length=None, *, scale: float,
     n_splits = split_geometry(S, block, n_splits)[1]    # effective count
     if n_splits <= 1:
         return etap_decode(q, k, v, length, scale=scale, block=block,
-                           interpret=interpret)
+                           interpret=interpret, rescale=rescale)
     if length is None:
         length = jnp.full((BG,), S, jnp.int32)
     m, l, accT = _partial(q, k, v, length, scale=scale, block=block,
-                          n_splits=n_splits, interpret=interpret, fused_dv=0)
+                          n_splits=n_splits, interpret=interpret, fused_dv=0,
+                          rescale=rescale)
     return combine_splits(m, l, accT, transposed=True, out_dtype=v.dtype,
-                          combine=combine, interpret=interpret)
+                          combine=combine, interpret=interpret,
+                          rescale=rescale)
 
 
 # ------------------------------------------------------------------- paged
@@ -137,9 +150,10 @@ def _pad_table(table, multiple: int):
     return table
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@softmax_state.jit_with_rescale(static_argnames=("scale", "interpret"))
 def etap_decode_paged(q, k_pool, v_pool, table, lengths, *, scale: float,
-                      interpret: bool = True, k_sz=None, v_sz=None):
+                      interpret: bool = True, k_sz=None, v_sz=None,
+                      rescale: str | None = None):
     """Paged ETAP decode. q: [B,H,Dk]; pools: [N,page,D*]; table:
     [B,max_blocks] int32; lengths: [B]. Returns [B,H,Dv].  Bit-identical
     to :func:`etap_decode` at block == page on the same logical rows.
@@ -147,55 +161,59 @@ def etap_decode_paged(q, k_pool, v_pool, table, lengths, *, scale: float,
     int8/fp8 codes (in-register dequant, DESIGN.md §11)."""
     return etap_decode_paged_pallas(q, k_pool, v_pool, table, lengths,
                                     scale=scale, interpret=interpret,
-                                    k_sz=k_sz, v_sz=v_sz)
+                                    k_sz=k_sz, v_sz=v_sz, rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("dv", "scale", "interpret"))
+@softmax_state.jit_with_rescale(static_argnames=("dv", "scale", "interpret"))
 def etap_decode_mla_paged(q, kv_pool, dv: int, table, lengths, *,
-                          scale: float, interpret: bool = True, kv_sz=None):
+                          scale: float, interpret: bool = True, kv_sz=None,
+                          rescale: str | None = None):
     """Paged MLA-fused ETAP: one latent pool, V = pool[..., :dv]."""
     return etap_decode_mla_paged_pallas(q, kv_pool, dv, table, lengths,
                                         scale=scale, interpret=interpret,
-                                        kv_sz=kv_sz)
+                                        kv_sz=kv_sz, rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@softmax_state.jit_with_rescale(static_argnames=("scale", "interpret"))
 def etap_prefill_paged(q, k_pool, v_pool, table, start, *, scale: float,
-                       interpret: bool = True, k_sz=None, v_sz=None):
+                       interpret: bool = True, k_sz=None, v_sz=None,
+                       rescale: str | None = None):
     """Chunked paged ETAP prefill (separate-V). q: [B,Cq,H,Dk]; pools:
     [N,page,D*]; table: [B,max_blocks] int32; start: [B] tokens already in
     the pool before the chunk (whose rows must already be appended).
     Returns [B,Cq,H,Dv] — causal within the chunk, full over the pool."""
     return etap_prefill_paged_pallas(q, k_pool, v_pool, table, start,
                                      scale=scale, interpret=interpret,
-                                     k_sz=k_sz, v_sz=v_sz)
+                                     k_sz=k_sz, v_sz=v_sz, rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("dv", "scale", "interpret"))
+@softmax_state.jit_with_rescale(static_argnames=("dv", "scale", "interpret"))
 def etap_prefill_mla_paged(q, kv_pool, dv: int, table, start, *,
-                           scale: float, interpret: bool = True, kv_sz=None):
+                           scale: float, interpret: bool = True, kv_sz=None,
+                           rescale: str | None = None):
     """Chunked paged MLA-fused ETAP prefill: one latent pool, V = pool[..., :dv]."""
     return etap_prefill_mla_paged_pallas(q, kv_pool, dv, table, start,
                                          scale=scale, interpret=interpret,
-                                         kv_sz=kv_sz)
+                                         kv_sz=kv_sz, rescale=rescale)
 
 
 def _paged_partial(q, k_pool, v_pool, table, lengths, *, scale, n_splits,
-                   interpret, fused_dv, k_sz=None, v_sz=None):
+                   interpret, fused_dv, rescale, k_sz=None, v_sz=None):
     n_splits, npb, padded_nb = paged_split_geometry(table.shape[1], n_splits)
     table = _pad_table(table, padded_nb)
     return etap_paged_partial_pallas(q, k_pool, v_pool, table, lengths,
                                      scale=scale, n_splits=n_splits,
                                      interpret=interpret, fused_dv=fused_dv,
-                                     k_sz=k_sz, v_sz=v_sz)
+                                     k_sz=k_sz, v_sz=v_sz, rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "n_splits", "combine",
-                                             "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("scale", "n_splits", "combine", "interpret"))
 def etap_decode_paged_splitkv(q, k_pool, v_pool, table, lengths, *,
                               scale: float, n_splits: int = 0,
                               combine: str = "pallas",
-                              interpret: bool = True, k_sz=None, v_sz=None):
+                              interpret: bool = True, k_sz=None, v_sz=None,
+                              rescale: str | None = None):
     """Two-phase split-KV ETAP decode over a paged cache. n_splits = 0 →
     auto via the block-granular scheduler; 1 routes to the single-pass
     paged kernel (bit-identical, same argument as the dense path).
@@ -210,23 +228,24 @@ def etap_decode_paged_splitkv(q, k_pool, v_pool, table, lengths, *,
     if n_splits <= 1:
         return etap_decode_paged(q, k_pool, v_pool, table, lengths,
                                  scale=scale, interpret=interpret,
-                                 k_sz=k_sz, v_sz=v_sz)
+                                 k_sz=k_sz, v_sz=v_sz, rescale=rescale)
     m, l, accT = _paged_partial(q, k_pool, v_pool, table, lengths,
                                 scale=scale, n_splits=n_splits,
                                 interpret=interpret, fused_dv=0,
-                                k_sz=k_sz, v_sz=v_sz)
+                                k_sz=k_sz, v_sz=v_sz, rescale=rescale)
     out_dtype = q.dtype if k_sz is not None else v_pool.dtype
     return combine_splits(m, l, accT, transposed=True,
                           out_dtype=out_dtype, combine=combine,
-                          interpret=interpret)
+                          interpret=interpret, rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("dv", "scale", "n_splits",
-                                             "combine", "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("dv", "scale", "n_splits", "combine", "interpret"))
 def etap_decode_mla_paged_splitkv(q, kv_pool, dv: int, table, lengths, *,
                                   scale: float, n_splits: int = 0,
                                   combine: str = "pallas",
-                                  interpret: bool = True, kv_sz=None):
+                                  interpret: bool = True, kv_sz=None,
+                                  rescale: str | None = None):
     """Two-phase split-KV over a paged MLA latent pool (V = pool[..., :dv])."""
     B, H, _ = q.shape
     page = kv_pool.shape[1]
@@ -236,23 +255,24 @@ def etap_decode_mla_paged_splitkv(q, kv_pool, dv: int, table, lengths, *,
     if n_splits <= 1:
         return etap_decode_mla_paged(q, kv_pool, dv, table, lengths,
                                      scale=scale, interpret=interpret,
-                                     kv_sz=kv_sz)
+                                     kv_sz=kv_sz, rescale=rescale)
     m, l, accT = _paged_partial(q, kv_pool, None, table, lengths,
                                 scale=scale, n_splits=n_splits,
                                 interpret=interpret, fused_dv=dv,
-                                k_sz=kv_sz)
+                                k_sz=kv_sz, rescale=rescale)
     out_dtype = q.dtype if kv_sz is not None else kv_pool.dtype
     return combine_splits(m, l, accT, transposed=True,
                           out_dtype=out_dtype, combine=combine,
-                          interpret=interpret)
+                          interpret=interpret, rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("dv", "scale", "block",
-                                             "n_splits", "combine",
-                                             "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("dv", "scale", "block", "n_splits", "combine",
+                     "interpret"))
 def etap_decode_mla_splitkv(q, kv, dv: int, length=None, *, scale: float,
                             block: int = 512, n_splits: int = 0,
-                            combine: str = "pallas", interpret: bool = True):
+                            combine: str = "pallas", interpret: bool = True,
+                            rescale: str | None = None):
     """Two-phase split-KV, MLA-fused single-latent-stream variant."""
     BG, H, _ = q.shape
     S = kv.shape[1]
@@ -261,10 +281,12 @@ def etap_decode_mla_splitkv(q, kv, dv: int, length=None, *, scale: float,
     n_splits = split_geometry(S, block, n_splits)[1]    # effective count
     if n_splits <= 1:
         return etap_decode_mla(q, kv, dv, length, scale=scale, block=block,
-                               interpret=interpret)
+                               interpret=interpret, rescale=rescale)
     if length is None:
         length = jnp.full((BG,), S, jnp.int32)
     m, l, accT = _partial(q, kv, None, length, scale=scale, block=block,
-                          n_splits=n_splits, interpret=interpret, fused_dv=dv)
+                          n_splits=n_splits, interpret=interpret, fused_dv=dv,
+                          rescale=rescale)
     return combine_splits(m, l, accT, transposed=True, out_dtype=kv.dtype,
-                          combine=combine, interpret=interpret)
+                          combine=combine, interpret=interpret,
+                          rescale=rescale)

@@ -32,6 +32,34 @@ def etap_decode_ref(q, k, v, length=None, *, scale: float, dtype=jnp.float32):
     return jnp.swapaxes(oT, 1, 2).astype(v.dtype)             # O = (Oᵀ)ᵀ
 
 
+def etap_decode_state_ref(q, k, v, length=None, *, scale: float,
+                          rescale: str | None = None):
+    """Blockless degenerate of the softmax-state API: one ``init``, ONE
+    ``update`` over the whole context, ``finalize``.  With a single block
+    there is nothing to rescale (corr multiplies the zero-initialised
+    accumulator), so both modes agree with :func:`etap_decode_ref` up to
+    the exp-domain change — this is the anchor the state-API tests use to
+    pin ``update``'s recurrence against the direct definition."""
+    from repro.kernels import softmax_state
+    BG, H, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[2]
+    mode = softmax_state.resolve(rescale)
+    sT = jnp.einsum("bsd,bhd->bsh", k.astype(jnp.float32),
+                    q.astype(jnp.float32)) * scale            # [BG, S, H]
+    if length is not None:
+        pos = jnp.arange(S)
+        sT = jnp.where((pos[None, :] < length[:, None])[:, :, None], sT,
+                       softmax_state.NEG_INF)
+    vf = v.astype(jnp.float32)
+    state = softmax_state.init((BG, H), (BG, Dv, H))
+    state = softmax_state.update(
+        state, sT, lambda p: jnp.einsum("bsv,bsh->bvh", vf, p),
+        axis=1, mode=mode, expand=lambda c: c[:, None, :])
+    oT = softmax_state.finalize(state, expand=lambda l: l[:, None, :])
+    return jnp.swapaxes(oT, 1, 2).astype(v.dtype)
+
+
 # ------------------------------------------------------ quantized twins
 def dequantize(codes, sz):
     """Reference dequant for quantized KV (DESIGN.md §11): codes [..., F]

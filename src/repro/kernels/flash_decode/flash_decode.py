@@ -18,19 +18,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels import softmax_state
 
-NEG_INF = -1e30
+NEG_INF = softmax_state.NEG_INF
 
 
 def _body(length_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-          *, scale: float, block: int, nb: int):
+          *, scale: float, block: int, nb: int, rescale: str):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        softmax_state.init_refs(m_ref, l_ref, acc_ref)
 
     q = q_ref[0]                                        # [H, Dk]
     k_blk = k_ref[0]                                    # [block, Dk]
@@ -42,23 +41,22 @@ def _body(length_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
     pos = j * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(pos < length, s, NEG_INF)
 
-    m_old = m_ref[...]                                  # [H, 1]
-    m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)                              # [H, block]
-    corr = jnp.exp(m_old - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    m_ref[...] = m_new
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        p, v_ref[0], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)             # [H, Dv]
+    v_blk = v_ref[0]
+    m_ref[...], l_ref[...], acc_ref[...] = softmax_state.update(
+        (m_ref[...], l_ref[...], acc_ref[...]), s,
+        lambda p: jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32),        # [H, Dv]
+        axis=1, mode=rescale)
 
     @pl.when(j == nb - 1)
     def _epilogue():
-        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+        o_ref[0] = softmax_state.finalize(
+            (None, l_ref[...], acc_ref[...])).astype(o_ref.dtype)
 
 
 def flash_decode_pallas(q, k, v, length, *, scale: float, block: int = 512,
-                        interpret: bool = True):
+                        interpret: bool = True, rescale: str | None = None):
     """q: [BG,H,Dk]; k: [BG,S,Dk]; v: [BG,S,Dv]; length: [BG]. -> [BG,H,Dv]."""
     BG, H, Dk = q.shape
     S = k.shape[1]
@@ -83,7 +81,8 @@ def flash_decode_pallas(q, k, v, length, *, scale: float, block: int = 512,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_body, scale=scale, block=block, nb=nb),
+        functools.partial(_body, scale=scale, block=block, nb=nb,
+                          rescale=softmax_state.resolve(rescale)),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((BG, H, Dv), v.dtype),
         compiler_params=compat.tpu_compiler_params(
@@ -96,7 +95,7 @@ def flash_decode_pallas(q, k, v, length, *, scale: float, block: int = 512,
 def _partial_body(length_ref, q_ref, k_ref, v_ref,
                   m_out_ref, l_out_ref, acc_out_ref,
                   acc_ref, m_ref, l_ref, *, scale: float, block: int,
-                  npb: int):
+                  npb: int, rescale: str):
     """Split-KV partial for the untransposed baseline: 3-D
     ``(BG, n_splits, nb_per_split)`` grid emitting per-split (m, ℓ, Acc)
     stats in the standard [H, ·] orientation (merged by
@@ -106,9 +105,7 @@ def _partial_body(length_ref, q_ref, k_ref, v_ref,
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        softmax_state.init_refs(m_ref, l_ref, acc_ref)
 
     q = q_ref[0]                                        # [H, Dk]
     k_blk = k_ref[0]                                    # [block, Dk]
@@ -121,15 +118,13 @@ def _partial_body(length_ref, q_ref, k_ref, v_ref,
         jnp.int32, sc.shape, 1)
     sc = jnp.where(pos < length, sc, NEG_INF)
 
-    m_old = m_ref[...]                                  # [H, 1]
-    m_new = jnp.maximum(m_old, jnp.max(sc, axis=1, keepdims=True))
-    p = jnp.exp(sc - m_new)
-    corr = jnp.exp(m_old - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    m_ref[...] = m_new
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        p, v_ref[0], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)             # [H, Dv]
+    v_blk = v_ref[0]
+    m_ref[...], l_ref[...], acc_ref[...] = softmax_state.update(
+        (m_ref[...], l_ref[...], acc_ref[...]), sc,
+        lambda p: jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32),        # [H, Dv]
+        axis=1, mode=rescale)
 
     @pl.when(j == npb - 1)
     def _emit():
@@ -139,7 +134,8 @@ def _partial_body(length_ref, q_ref, k_ref, v_ref,
 
 
 def flash_decode_partial_pallas(q, k, v, length, *, scale: float, block: int,
-                                n_splits: int, interpret: bool = True):
+                                n_splits: int, interpret: bool = True,
+                                rescale: str | None = None):
     """Phase-1 stats for the baseline kernel. S == n·npb·block (pre-padded).
     Returns (m, l, acc): [BG,n,H], [BG,n,H], [BG,n,H,Dv] (fp32)."""
     BG, H, Dk = q.shape
@@ -170,7 +166,8 @@ def flash_decode_partial_pallas(q, k, v, length, *, scale: float, block: int,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_partial_body, scale=scale, block=block, npb=npb),
+        functools.partial(_partial_body, scale=scale, block=block, npb=npb,
+                          rescale=softmax_state.resolve(rescale)),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((BG, n_splits, H), jnp.float32),

@@ -2,20 +2,19 @@
 single-pass and split-KV two-phase entry points."""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import softmax_state
 from repro.kernels.etap.combine import combine_splits
 from repro.kernels.etap.schedule import plan_splits, split_geometry
 from repro.kernels.flash_decode.flash_decode import (
     flash_decode_pallas, flash_decode_partial_pallas)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "block", "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("scale", "block", "interpret"))
 def flash_decode(q, k, v, length=None, *, scale: float, block: int = 512,
-                 interpret: bool = True):
+                 interpret: bool = True, rescale: str | None = None):
     BG = q.shape[0]
     S = k.shape[1]
     if length is None:
@@ -26,14 +25,15 @@ def flash_decode(q, k, v, length=None, *, scale: float, block: int = 512,
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
     return flash_decode_pallas(q, k, v, length, scale=scale, block=block,
-                               interpret=interpret)
+                               interpret=interpret, rescale=rescale)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "block", "n_splits",
-                                             "combine", "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("scale", "block", "n_splits", "combine", "interpret"))
 def flash_decode_splitkv(q, k, v, length=None, *, scale: float,
                          block: int = 512, n_splits: int = 0,
-                         combine: str = "pallas", interpret: bool = True):
+                         combine: str = "pallas", interpret: bool = True,
+                         rescale: str | None = None):
     """Two-phase split-KV baseline decode (same scheduler as the ETAP path;
     n_splits = 0 → auto, 1 → single-pass, bit-identical — see
     kernels/etap/combine.py)."""
@@ -44,7 +44,7 @@ def flash_decode_splitkv(q, k, v, length=None, *, scale: float,
         n_splits = plan_splits(BG, S, H, Dv, block=block).n_splits
     if n_splits <= 1:
         return flash_decode(q, k, v, length, scale=scale, block=block,
-                            interpret=interpret)
+                            interpret=interpret, rescale=rescale)
     if length is None:
         length = jnp.full((BG,), S, jnp.int32)
     # effective split count from the shared geometry (clamped so every
@@ -52,13 +52,15 @@ def flash_decode_splitkv(q, k, v, length=None, *, scale: float,
     block, n_splits, _, target = split_geometry(S, block, n_splits)
     if n_splits <= 1:
         return flash_decode(q, k, v, length, scale=scale, block=block,
-                            interpret=interpret)
+                            interpret=interpret, rescale=rescale)
     pad = target - S
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
     m, l, acc = flash_decode_partial_pallas(q, k, v, length, scale=scale,
                                             block=block, n_splits=n_splits,
-                                            interpret=interpret)
+                                            interpret=interpret,
+                                            rescale=rescale)
     return combine_splits(m, l, acc, transposed=False, out_dtype=v.dtype,
-                          combine=combine, interpret=interpret)
+                          combine=combine, interpret=interpret,
+                          rescale=rescale)

@@ -17,20 +17,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels import softmax_state
 
-NEG_INF = -1e30
+NEG_INF = softmax_state.NEG_INF
 
 
 def _body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-          *, scale: float, bq: int, bkv: int, nkv: int):
+          *, scale: float, bq: int, bkv: int, nkv: int, rescale: str):
     i = pl.program_id(1)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        softmax_state.init_refs(m_ref, l_ref, acc_ref)
 
     # causal block skip in POSITION terms (bq and bkv may differ: kv block j
     # is needed iff its first row j·bkv precedes the q block's last row)
@@ -46,23 +45,23 @@ def _body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
         kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(qpos >= kpos, s, NEG_INF)
 
-        m_old = m_ref[...]
-        m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        corr = jnp.exp(m_old - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        m_ref[...] = m_new
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-            p, v_ref[0], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        v_blk = v_ref[0]
+        m_ref[...], l_ref[...], acc_ref[...] = softmax_state.update(
+            (m_ref[...], l_ref[...], acc_ref[...]), s,
+            lambda p: jax.lax.dot_general(
+                p, v_blk, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32),
+            axis=1, mode=rescale)
 
     @pl.when(j == nkv - 1)
     def _epilogue():
-        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+        o_ref[0] = softmax_state.finalize(
+            (None, l_ref[...], acc_ref[...])).astype(o_ref.dtype)
 
 
 def flash_prefill_pallas(q, k, v, *, scale: float, bq: int = 256,
-                         bkv: int = 256, interpret: bool = True):
+                         bkv: int = 256, interpret: bool = True,
+                         rescale: str | None = None):
     """q: [B,S,H,D]; k,v: [B,S,K,D*] (GQA) -> [B,S,H,Dv]."""
     B, S, H, D = q.shape
     K = k.shape[2]
@@ -77,7 +76,8 @@ def flash_prefill_pallas(q, k, v, *, scale: float, bq: int = 256,
     vh = jnp.swapaxes(v, 1, 2).reshape(B * K, S, Dv)
 
     out = pl.pallas_call(
-        functools.partial(_body, scale=scale, bq=bq, bkv=bkv, nkv=nkv),
+        functools.partial(_body, scale=scale, bq=bq, bkv=bkv, nkv=nkv,
+                          rescale=softmax_state.resolve(rescale)),
         grid=(B * H, nq, nkv),
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),

@@ -1,15 +1,13 @@
 """jit'd wrapper for the causal flash prefill kernel."""
 from __future__ import annotations
 
-import functools
-
-import jax
-
+from repro.kernels import softmax_state
 from repro.kernels.flash_prefill.flash_prefill import flash_prefill_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "bq", "bkv", "interpret"))
+@softmax_state.jit_with_rescale(
+    static_argnames=("scale", "bq", "bkv", "interpret"))
 def flash_prefill(q, k, v, *, scale: float, bq: int = 256, bkv: int = 256,
-                  interpret: bool = True):
+                  interpret: bool = True, rescale: str | None = None):
     return flash_prefill_pallas(q, k, v, scale=scale, bq=bq, bkv=bkv,
-                                interpret=interpret)
+                                interpret=interpret, rescale=rescale)

@@ -1,0 +1,202 @@
+"""THE online-softmax state API (DESIGN.md §13).
+
+Every online-softmax hot loop in the repo — single-pass ETAP decode, the
+split-KV partials, chunked prefill, the flash_decode/flash_prefill
+baselines, the XLA twins in ``core/etap.py``, and both combine backends —
+carries its state as one fp32 triple ``(m, l, acc)`` and advances/merges it
+EXCLUSIVELY through this module (``benchmarks/lint_softmax.py`` rejects any
+new hand-rolled rescale chain outside this file).  The functions are plain
+``jnp`` math on values, so they inline into Pallas kernel bodies and trace
+under XLA from the SAME definition — kernel and reference cannot drift.
+
+Two flag-selectable rescale modes (``--rescale {mul,amla}``):
+
+``mul``  — the textbook FlashAttention recurrence.  ``m`` is the running
+  score max (natural-log domain); each block multiplies ``l``/``acc`` by
+  ``corr = exp(m_old - m_new)``, an inexact transcendental that injects
+  rounding into the accumulator at every max motion.
+
+``amla`` (default) — AMLA-style deferred rescaling ("MUL by ADD in
+  FlashAttention Rescaling", PAPERS.md).  ``m`` holds a power-of-two
+  running bias ``b = ceil(log2 e · max score)`` — an INTEGER-valued fp32 —
+  and probabilities are ``p = exp2(score·log2e − b)``.  Because ``b`` only
+  moves in integer steps, ``corr = 2^(b_old − b_new)`` is an exact power of
+  two: the accumulator rescale is an exponent-field addition in disguise,
+  EXACT in floating point (and the exact multiply-by-one no-op for every
+  block that doesn't raise the ceiling — most of them).  The rescale chain
+  stops being a rounding source entirely; only the ``p``/``l`` additions
+  round, same as ``mul``.  On the WGMMA-adjacent epilogue path the paper
+  identifies as the M-dimension bottleneck this also replaces the FMA
+  rescale traffic with exponent adds.
+
+The state domain differs between modes (natural-log max vs log2 bias), so
+partial stats must be merged in the mode that produced them — every
+producer/consumer pair below threads one ``rescale`` value end to end.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+LOG2E = 1.4426950408889634  # log2(e); exactly representable rounding of it
+
+MODES = ("mul", "amla")
+
+_DEFAULT_MODE = [os.environ.get("REPRO_RESCALE", "amla")]
+
+
+def _check(mode: str) -> str:
+    if mode not in MODES:
+        raise ValueError(f"rescale mode {mode!r} not in {MODES}")
+    return mode
+
+
+def default_mode() -> str:
+    """The process-wide rescale mode (env ``REPRO_RESCALE``, default amla)."""
+    return _check(_DEFAULT_MODE[0])
+
+
+def set_default_mode(mode: str) -> None:
+    """Set the process-wide mode (the serve/bench ``--rescale`` flag).  Must
+    run before the first trace of any consumer — jitted entry points bake
+    the resolved mode into their cache key via :func:`jit_with_rescale`, but
+    closures already traced with the old default are not retraced."""
+    _DEFAULT_MODE[0] = _check(mode)
+
+
+def resolve(mode: str | None = None) -> str:
+    """None → the process default; anything else is validated and passed
+    through.  Every public entry point resolves exactly once, at the top."""
+    return default_mode() if mode is None else _check(mode)
+
+
+def jit_with_rescale(*, static_argnames=()):
+    """``jax.jit`` for kernel entry points carrying a ``rescale`` kwarg:
+    ``rescale=None`` is resolved to the process default BEFORE the jit cache
+    is consulted, so flipping the default between calls can never serve a
+    stale trace (a plain static ``None`` default would)."""
+    def deco(fn):
+        jfn = jax.jit(fn,
+                      static_argnames=tuple(static_argnames) + ("rescale",))
+
+        @functools.wraps(fn)
+        def wrapper(*args, rescale=None, **kw):
+            return jfn(*args, rescale=resolve(rescale), **kw)
+        wrapper.__wrapped_jit__ = jfn
+        return wrapper
+    return deco
+
+
+def _identity(x):
+    return x
+
+
+def _exp(mode: str):
+    return jnp.exp2 if mode == "amla" else jnp.exp
+
+
+# ------------------------------------------------------------------ state
+def init(stats_shape, acc_shape, dtype=jnp.float32):
+    """Fresh ``(m, l, acc)`` — fp32 by contract (DESIGN.md §6/§11)."""
+    return (jnp.full(stats_shape, NEG_INF, dtype),
+            jnp.zeros(stats_shape, dtype),
+            jnp.zeros(acc_shape, dtype))
+
+
+def init_refs(m_ref, l_ref, acc_ref) -> None:
+    """Pallas form of :func:`init`: reset the VMEM scratch refs in place."""
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def update(state, s, pv, *, axis: int, mode: str, expand=_identity):
+    """One online-softmax block update.
+
+    ``s``: fp32 score block, already scaled and masked (``NEG_INF``).
+    ``pv``: the caller's probability-value contraction ``p -> ΔAcc`` (the
+    one thing that differs per kernel orientation); ``p`` is fp32 with
+    ``s``'s shape.  ``axis``: the KV (reduction) axis of ``s``.  ``expand``
+    broadcasts a stats-shaped array against ``acc`` (identity when the
+    stats keep the reduced axis as size 1, as in the Pallas tile layouts).
+
+    Stats keep ``s``'s rank iff the incoming ``m`` does (Pallas keeps the
+    reduced axis; the XLA loops drop it) — the update follows suit, so both
+    forms share this single definition.
+    """
+    m, l, acc = state
+    keep = (jnp.ndim(s) == jnp.ndim(m))
+    if mode == "amla":
+        s = s * LOG2E                       # log2 domain
+        block_m = jnp.ceil(jnp.max(s, axis=axis, keepdims=keep))
+    else:
+        block_m = jnp.max(s, axis=axis, keepdims=keep)
+    exp_fn = _exp(mode)
+    m_new = jnp.maximum(m, block_m)
+    p = exp_fn(s - (m_new if keep else jnp.expand_dims(m_new, axis)))
+    corr = exp_fn(m - m_new)                # amla: exact power of two
+    l_new = l * corr + jnp.sum(p, axis=axis, keepdims=keep)
+    acc_new = acc * expand(corr) + pv(p)
+    return m_new, l_new, acc_new
+
+
+def finalize(state, *, expand=_identity):
+    """Epilogue: ``acc / l`` (the running bias cancels in both modes).
+    Orientation transposes and the output cast stay with the caller."""
+    _, l, acc = state
+    return acc / expand(l)
+
+
+# ------------------------------------------------------------------ merge
+def merge_splits(m, l, acc, *, axis: int, mode: str, expand=_identity):
+    """Merge per-split stats along ``axis`` in the stat domain — one global
+    rescale per split, never a renormalize-then-renormalize chain:
+
+        m* = max_s m_s        w_s = expΔ(m_s − m*)     (amla: exact 2^Δ)
+        l* = Σ_s w_s l_s      acc* = Σ_s w_s acc_s
+
+    A fully-masked split carries ``(m = NEG_INF, l = 0)``; its weight
+    underflows to exactly 0 and it drops out without a branch.  With a
+    single split the weights are expΔ(0) = 1 and the merge is bitwise the
+    identity — the n_splits=1 ↔ single-pass contract rides on this.
+
+    The fp32-on-entry upcast lives HERE and nowhere else (the PR 5
+    bf16-combine-stats guard): callers may hand half-precision stats, the
+    merge math is fp32 regardless; only the caller's final output cast may
+    be narrow.  Returns merged ``(m, l, acc)`` with ``axis`` reduced.
+    """
+    m = m.astype(jnp.float32)
+    l = l.astype(jnp.float32)
+    acc = acc.astype(jnp.float32)
+    m_g = jnp.max(m, axis=axis, keepdims=True)
+    w = _exp(mode)(m - m_g)
+    l_g = jnp.sum(l * w, axis=axis)
+    acc_g = jnp.sum(acc * expand(w), axis=axis)
+    return jnp.squeeze(m_g, axis=axis), l_g, acc_g
+
+
+def merge(a, b, *, mode: str, expand=_identity):
+    """Pairwise stat-domain merge of two states (same math as
+    :func:`merge_splits` over a 2-long axis).  Bitwise commutative in both
+    modes; in amla mode the weights are exact powers of two, so on exact-
+    addition data ANY merge tree finalizes bitwise equal (the property
+    tests pin this).  Upcasts on entry like every merge."""
+    ma, la, acca = (x.astype(jnp.float32) for x in a)
+    mb, lb, accb = (x.astype(jnp.float32) for x in b)
+    exp_fn = _exp(mode)
+    m = jnp.maximum(ma, mb)
+    wa = exp_fn(ma - m)
+    wb = exp_fn(mb - m)
+    return (m, la * wa + lb * wb, acca * expand(wa) + accb * expand(wb))
+
+
+def merge_weights(m, m_global, *, mode: str):
+    """Per-shard combine weight ``w = expΔ(m − m*)`` for the cross-device
+    (pmax/psum) combine — the shard_map twin of :func:`merge_splits`, where
+    the Σ is an all-reduce the caller owns.  fp32 on entry, like every
+    merge."""
+    return _exp(mode)(m.astype(jnp.float32) - m_global.astype(jnp.float32))

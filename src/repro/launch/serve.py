@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced
+from repro.kernels import softmax_state
 from repro.models import model
 from repro.runtime import scheduler
 from repro.runtime.fault_tolerance import (FailureInjector,
@@ -84,6 +85,7 @@ def run_dense(args, cfg) -> dict:
     # match the continuous-batching report.
     tokens_served = int(gen.shape[0] * gen.shape[1])
     print(f"[serve] arch={args.arch} layout=dense mode={args.mode} "
+          f"rescale={softmax_state.default_mode()} "
           f"B={B} prompt={S} gen={args.gen}")
     print(f"[serve] prefill {t_prefill*1e3:.1f}ms; decode "
           f"{t_decode/args.gen*1e3:.2f}ms/token "
@@ -436,6 +438,7 @@ def run_paged(args, cfg) -> dict:
           f"requests={n_requests} page={layout.block_size} "
           f"blocks={layout.num_blocks - 1} host_blocks={host_blocks} "
           f"chunk={chunk} budget={budget} kv_dtype={args.kv_dtype} "
+          f"rescale={softmax_state.default_mode()} "
           f"prefix_cache={'on' if prefix is not None else 'off'} "
           f"preemption={args.preemption}")
     print(f"[serve] {tokens_served} tokens in {steps} decode steps "
@@ -486,6 +489,10 @@ def run_paged(args, cfg) -> dict:
 
 
 def run(args) -> dict:
+    # pin the process-wide rescale mode BEFORE any tracing so every kernel
+    # entry resolves the same mode (jit_with_rescale keys the cache on it)
+    softmax_state.set_default_mode(getattr(args, "rescale",
+                                           softmax_state.default_mode()))
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -587,6 +594,14 @@ def parse_args(argv=None):
                          "codes + (scale, zp) and admit ~2x the sequences "
                          "under the same pool byte budget (env default: "
                          "REPRO_KV_DTYPE — the CI int8 leg's hook)")
+    ap.add_argument("--rescale", default=os.environ.get("REPRO_RESCALE",
+                                                        "amla"),
+                    choices=list(softmax_state.MODES),
+                    help="online-softmax rescaling mode (DESIGN.md §13): "
+                         "amla = deferred power-of-two bias rescaling "
+                         "(exponent-add correction, exact in fp); mul = "
+                         "textbook multiply-rescale referee (env default: "
+                         "REPRO_RESCALE)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reduced", action="store_true")
     return ap.parse_args(argv)

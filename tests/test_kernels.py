@@ -159,21 +159,15 @@ def test_property_length_masking(seed, extra):
     np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5)
 
 
-def test_fp64_oracle_rmse_sanity():
+def test_fp64_oracle_rmse_sanity(fp64_oracle):
     """The fp64 oracle exists and fp32 ETAP is close to it (paper Table 1
-    methodology; the benchmark reports the actual numbers)."""
-    jax.config.update("jax_enable_x64", True)
-    try:
-        q, k, v, L = _mk(2, 16, 576, 512, 512, jnp.float32)
-        ref64 = etap_decode_ref(q.astype(jnp.float64), k.astype(jnp.float64),
-                                v.astype(jnp.float64), L, scale=576 ** -0.5,
-                                dtype=jnp.float64)
-        out = etap_decode_xla(q, k, v, L, scale=576 ** -0.5, block=128)
-        rmse = float(jnp.sqrt(jnp.mean(
-            (out.astype(jnp.float64) - ref64) ** 2)))
-        assert rmse < 1e-6
-    finally:
-        jax.config.update("jax_enable_x64", False)
+    methodology; the benchmark reports the actual numbers).  The x64
+    enable/restore dance lives in the conftest fixture — tests that need
+    the oracle take `fp64_oracle` instead of flipping jax config inline."""
+    q, k, v, L = _mk(2, 16, 576, 512, 512, jnp.float32)
+    ref64 = fp64_oracle.decode_ref(q, k, v, L, scale=576 ** -0.5)
+    out = etap_decode_xla(q, k, v, L, scale=576 ** -0.5, block=128)
+    assert fp64_oracle.rmse(out, ref64) < 1e-6
 
 
 # --------------------------------------------------- selective scan (mamba)

@@ -1,0 +1,281 @@
+"""Properties and acceptance gates for the unified softmax-state API
+(kernels/softmax_state.py, DESIGN.md §13).
+
+The bitwise properties run on an EXACT-ARITHMETIC LATTICE: scores drawn
+from {0, NEG_INF} and values from small integers.  There every probability
+is exactly 1 or 0 in both modes (exp(0) = exp2(0) = 1; the masked branch
+underflows to 0), every l is an exact small-integer count, and every acc
+entry an exact small-integer sum — so fp32 addition is exact and ANY split
+geometry / merge order must finalize BITWISE equal.  A kernel or merge
+that sneaks in an extra rounding step (stat downcast, renormalize chain,
+mode mix-up between producer and consumer) breaks bitwise equality on the
+lattice even when it would pass an allclose on gaussian data.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.kernels import softmax_state as ss
+from repro.kernels.etap import ops as etap_ops
+from repro.kernels.etap.ref import etap_decode_ref, etap_decode_state_ref
+
+MODES = list(ss.MODES)
+RNG = np.random.default_rng(0)
+
+
+def _bits(x):
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+def _assert_bitwise(a, b, msg=""):
+    np.testing.assert_array_equal(_bits(a), _bits(b), err_msg=msg)
+
+
+def _lattice(S, H, Dv, rng):
+    """{0, NEG_INF} scores (row 0 forced live: no fully-masked column) and
+    small-integer values — the exact-arithmetic regime."""
+    mask = rng.random((S, H)) < 0.5
+    mask[0, :] = True
+    s = jnp.where(jnp.asarray(mask), 0.0, ss.NEG_INF).astype(jnp.float32)
+    v = jnp.asarray(rng.integers(-4, 5, size=(S, Dv)), jnp.float32)
+    return s, v
+
+
+def _state_of(s, v, mode):
+    """One whole-context update in the XLA (no-keepdims) orientation:
+    stats [H], acc [Dv, H]."""
+    H = s.shape[1]
+    Dv = v.shape[1]
+    return ss.update(ss.init((H,), (Dv, H)), s,
+                     lambda p: jnp.einsum("sv,sh->vh", v, p),
+                     axis=0, mode=mode)
+
+
+def _chunks(rng, S):
+    """A random contiguous partition of range(S)."""
+    cuts = sorted(rng.choice(np.arange(1, S), size=rng.integers(0, S - 1),
+                             replace=False).tolist())
+    return list(zip([0] + cuts, cuts + [S]))
+
+
+# ------------------------------------------------------------ flag plumbing
+def test_invalid_mode_rejected():
+    with pytest.raises(ValueError):
+        ss.resolve("bogus")
+    with pytest.raises(ValueError):
+        ss.set_default_mode("nope")
+
+
+def test_default_mode_roundtrip():
+    prev = ss.default_mode()
+    try:
+        ss.set_default_mode("mul")
+        assert ss.default_mode() == "mul"
+        assert ss.resolve(None) == "mul"
+        assert ss.resolve("amla") == "amla"   # explicit beats default
+    finally:
+        ss.set_default_mode(prev)
+
+
+def test_jit_with_rescale_no_stale_cache():
+    """Flipping the process default between calls of the SAME jitted entry
+    must retrace: rescale=None resolves before the jit cache, so the
+    post-flip call is bitwise the explicit-mul call, not the cached amla
+    trace."""
+    q = jnp.asarray(RNG.normal(size=(1, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 128, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 128, 16)), jnp.float32)
+    kw = dict(scale=32 ** -0.5, block=32)
+    o_amla = etap_ops.etap_decode(q, k, v, None, rescale="amla", **kw)
+    o_mul = etap_ops.etap_decode(q, k, v, None, rescale="mul", **kw)
+    prev = ss.default_mode()
+    try:
+        ss.set_default_mode("amla")
+        _assert_bitwise(etap_ops.etap_decode(q, k, v, None, **kw), o_amla)
+        ss.set_default_mode("mul")
+        _assert_bitwise(etap_ops.etap_decode(q, k, v, None, **kw), o_mul,
+                        "default flip served a stale trace")
+    finally:
+        ss.set_default_mode(prev)
+
+
+# ------------------------------------------------------- update recurrence
+@pytest.mark.parametrize("mode", MODES)
+def test_state_ref_matches_direct_oracle(mode):
+    """The blockless init→update→finalize degenerate equals the direct
+    softmax definition (both exp domains normalize the bias away)."""
+    q = jnp.asarray(RNG.normal(size=(2, 8, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 96, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 96, 48)), jnp.float32)
+    length = jnp.asarray([51, 96], jnp.int32)
+    ref = etap_decode_ref(q, k, v, length, scale=0.125)
+    out = etap_decode_state_ref(q, k, v, length, scale=0.125, rescale=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_chunked_update_bitwise_on_lattice(mode):
+    """Sequentially chaining update over ANY contiguous chunking finalizes
+    bitwise equal to the one-shot update on the exact lattice — the
+    correction chain (amla: exact 2^Δ; mul: exp(0)/underflow-0 here)
+    injects no rounding."""
+    for trial in range(8):
+        rng = np.random.default_rng(trial)
+        S = int(rng.integers(2, 13))
+        s, v = _lattice(S, 3, 2, rng)
+        whole = _state_of(s, v, mode)
+        state = ss.init((3,), (2, 3))
+        for lo, hi in _chunks(rng, S):
+            vc = v[lo:hi]
+            state = ss.update(state, s[lo:hi],
+                              lambda p, vc=vc: jnp.einsum("sv,sh->vh", vc, p),
+                              axis=0, mode=mode)
+        _assert_bitwise(ss.finalize(state), ss.finalize(whole),
+                        f"mode={mode} trial={trial}")
+
+
+# ----------------------------------------------------------- merge algebra
+@given(data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_merge_split_order_invariant_on_lattice(data):
+    """DESIGN.md §13's headline property: for any split geometry and any
+    merge order — left fold over a permutation, or the stacked
+    merge_splits — the finalized output is BITWISE identical to the
+    single-pass state, in both rescale modes."""
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    mode = data.draw(st.sampled_from(MODES), label="mode")
+    rng = np.random.default_rng(seed)
+    S = int(rng.integers(2, 13))
+    s, v = _lattice(S, 3, 2, rng)
+    want = ss.finalize(_state_of(s, v, mode))
+
+    parts = [_state_of(s[lo:hi], v[lo:hi], mode)
+             for lo, hi in _chunks(rng, S)]
+    order = rng.permutation(len(parts))
+    folded = parts[order[0]]
+    for i in order[1:]:
+        folded = ss.merge(folded, parts[int(i)], mode=mode)
+    _assert_bitwise(ss.finalize(folded), want,
+                    f"fold order {order.tolist()} diverged (mode={mode})")
+
+    stacked = [jnp.stack(x) for x in zip(*parts)]
+    m_g, l_g, acc_g = ss.merge_splits(*stacked, axis=0, mode=mode,
+                                      expand=lambda w: w[:, None, :])
+    _assert_bitwise(ss.finalize((m_g, l_g, acc_g)), want,
+                    f"merge_splits diverged (mode={mode})")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_merge_associative_commutative_on_lattice(mode):
+    for trial in range(8):
+        rng = np.random.default_rng(100 + trial)
+        states = [_state_of(*_lattice(int(rng.integers(1, 9)), 3, 2, rng),
+                            mode) for _ in range(3)]
+        a, b, c = states
+        ab_c = ss.merge(ss.merge(a, b, mode=mode), c, mode=mode)
+        a_bc = ss.merge(a, ss.merge(b, c, mode=mode), mode=mode)
+        for x, y in zip(ab_c, a_bc):
+            _assert_bitwise(x, y, f"associativity, mode={mode}")
+        ba = ss.merge(b, a, mode=mode)
+        for x, y in zip(ss.merge(a, b, mode=mode), ba):
+            _assert_bitwise(x, y, f"commutativity, mode={mode}")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_merge_split_order_allclose_general_floats(mode):
+    """Off the lattice bitwise equality is not promised (p additions round
+    differently per geometry) — but any split geometry must still agree to
+    fp32 roundoff."""
+    rng = np.random.default_rng(7)
+    S, H, Dv = 96, 4, 8
+    s = jnp.asarray(rng.normal(scale=3.0, size=(S, H)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(S, Dv)), jnp.float32)
+    want = np.asarray(ss.finalize(_state_of(s, v, mode)))
+    for trial in range(4):
+        trng = np.random.default_rng(trial)
+        parts = [_state_of(s[lo:hi], v[lo:hi], mode)
+                 for lo, hi in _chunks(trng, S)]
+        folded = parts[0]
+        for p in parts[1:]:
+            folded = ss.merge(folded, p, mode=mode)
+        np.testing.assert_allclose(np.asarray(ss.finalize(folded)), want,
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_masked_split_drops_out(mode):
+    """A fully-masked split (m = NEG_INF) merges as an exact no-op even
+    when its accumulator holds garbage: the weight underflows to 0."""
+    rng = np.random.default_rng(3)
+    real = _state_of(*_lattice(8, 3, 2, rng), mode)
+    junk = (jnp.full((3,), ss.NEG_INF, jnp.float32),
+            jnp.zeros((3,), jnp.float32),
+            jnp.full((2, 3), 1e20, jnp.float32))
+    for merged in (ss.merge(real, junk, mode=mode),
+                   ss.merge(junk, real, mode=mode)):
+        for x, y in zip(merged, real):
+            _assert_bitwise(x, y, f"masked split leaked, mode={mode}")
+
+
+def test_merge_upcasts_half_precision_stats():
+    """The PR 5 bf16-combine-stats guard lives INSIDE the merges: half
+    inputs come out as fp32 math, bitwise the fp32-input result."""
+    rng = np.random.default_rng(4)
+    parts = [_state_of(*_lattice(8, 3, 2, rng), "amla") for _ in range(2)]
+    stacked = [jnp.stack(x) for x in zip(*parts)]
+    want = ss.merge_splits(*stacked, axis=0, mode="amla",
+                           expand=lambda w: w[:, None, :])
+    half = [x.astype(jnp.bfloat16) for x in stacked]
+    got = ss.merge_splits(*half, axis=0, mode="amla",
+                          expand=lambda w: w[:, None, :])
+    for x, y in zip(got, want):
+        assert x.dtype == jnp.float32
+        # lattice stats are small integers: exactly representable in bf16,
+        # so the upcast path must reproduce the fp32 result bitwise
+        _assert_bitwise(x, y, "bf16 stats changed the merge")
+    w = ss.merge_weights(half[0][0], want[0], mode="amla")
+    assert w.dtype == jnp.float32
+
+
+# ------------------------------------------------------- RMSE acceptance
+@pytest.mark.parametrize("mode", MODES)
+def test_rmse_fp32_vs_fp64_oracle(mode, fp64_oracle):
+    """fp32 kernels stay within the paper-methodology RMSE budget vs the
+    fp64 oracle in BOTH rescale modes (amla must not cost accuracy)."""
+    q = jnp.asarray(RNG.normal(size=(2, 16, 576)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 1024, 576)), jnp.float32)
+    v = k[..., :512]
+    length = jnp.asarray([515, 1024], jnp.int32)
+    ref = fp64_oracle.decode_ref(q, k, v, length, scale=576 ** -0.5)
+    out = etap_ops.etap_decode(q, k, v, length, scale=576 ** -0.5,
+                               block=256, rescale=mode)
+    assert fp64_oracle.rmse(out, ref) <= 1e-5
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_rmse_quant_vs_fp64_oracle(mode, fp64_oracle):
+    """Quantized decode holds the PR 5 acceptance values against the fp64
+    oracle in both rescale modes (int8 <= 6.12e-4, fp8 <= 2.22e-3 — the
+    PR 5 BENCH_quant measurements, bench geometry, same seed): deferred
+    rescaling must not cost quantized accuracy."""
+    from repro.runtime import paged_cache as pcache
+    B, H, DIM, DV, S, page = 2, 16, 576, 512, 1024, 64
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, H, DIM)), jnp.float32)
+    kv = jnp.asarray(rng.normal(size=(B, S, DIM)), jnp.float32)
+    lengths = np.asarray([S // 2 + 3, S])
+    layout = pcache.layout_for(B, S, block_size=page)
+    pool, bp = pcache.dense_to_paged(kv, lengths, layout)
+    table, lens = bp.device_views()
+    ref = fp64_oracle.decode_ref(q, kv, kv[..., :DV], jnp.asarray(lengths),
+                                 scale=DIM ** -0.5)
+    budgets = {"int8": 6.12e-4, "fp8": 2.22e-3}
+    for kvd in ["int8"] + (["fp8"] if pcache.HAS_FP8 else []):
+        codes, sz = pcache.quantize_pool(pool, kvd)
+        out = etap_ops.etap_decode_mla_paged(q, codes, DV, table, lens,
+                                             scale=DIM ** -0.5, kv_sz=sz,
+                                             rescale=mode)
+        rmse = fp64_oracle.rmse(out, ref)
+        assert rmse <= budgets[kvd], (kvd, mode, rmse)
