@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.core import attn_spec
 from repro.kernels import softmax_state
 
 NEG_INF = softmax_state.NEG_INF
@@ -263,38 +264,36 @@ def seq_sharded_decode(q, cache, new_row, pos, *, dv: int, scale: float,
     )(q, cache, new_row, pos, shard_ids)
 
 
-def decode_attention(q, k, v, length=None, *, scale: float, mode: str = "etap",
-                     block: int = 512, use_kernels: bool = False,
-                     interpret: bool = True, n_splits=None,
-                     rescale: str | None = None):
-    """Unified decode attention entry point.
+def decode_attention(q, k, v, length=None, *, spec=None, **legacy):
+    """Unified decode attention entry point, driven by one
+    :class:`repro.core.attn_spec.AttnSpec`.
 
-    mode: "etap" (the paper) or "standard" (FlashMLA-like baseline).
-    use_kernels: dispatch to the Pallas implementations (tests/benchmarks run
-    them with interpret=True on CPU; on a real TPU interpret=False).
-    n_splits: KV-split count for the two-phase split-KV pipeline.
+    spec.mode: "etap" (the paper) or "standard" (FlashMLA-like baseline).
+    spec.use_kernels: dispatch to the Pallas implementations (tests and
+    benchmarks run them with spec.interpret=True on CPU; on a real TPU
+    interpret=False).
+    spec.kv_splits: KV-split count for the two-phase split-KV pipeline.
     None → auto via kernels.etap.schedule (resolves to 1 at short contexts /
     large batches, i.e. exactly the old single-pass behaviour) on both the
     kernel and XLA "etap" paths; 1 → force single-pass. The "standard" XLA
     loop streams serially regardless — it is the deliberately unsplit
     baseline.
-    rescale: softmax-state rescale mode, None → the process default
+    spec.rescale: softmax-state rescale mode, None → the process default
     (``--rescale`` / REPRO_RESCALE) — resolved here, before any jit cache.
+    Legacy keywords (scale=..., mode=..., n_splits=...) shim through
+    :func:`attn_spec.coerce` with a DeprecationWarning.
     """
-    rescale = softmax_state.resolve(rescale)
-    if use_kernels:
+    spec = attn_spec.coerce(spec, legacy, where="decode_attention")
+    if spec.use_kernels:
         from repro.kernels.etap import ops as etap_ops
         from repro.kernels.flash_decode import ops as fd_ops
-        if mode == "etap":
-            return etap_ops.etap_decode_splitkv(
-                q, k, v, length, scale=scale, block=block,
-                n_splits=int(n_splits or 0), interpret=interpret,
-                rescale=rescale)
-        return fd_ops.flash_decode_splitkv(
-            q, k, v, length, scale=scale, block=block,
-            n_splits=int(n_splits or 0), interpret=interpret,
-            rescale=rescale)
-    if mode == "etap":
+        if spec.mode == "etap":
+            return etap_ops.etap_decode_splitkv(q, k, v, length, spec=spec)
+        return fd_ops.flash_decode_splitkv(q, k, v, length, spec=spec)
+    scale, block = spec.scale, spec.block
+    rescale = softmax_state.resolve(spec.rescale)
+    n_splits = spec.kv_splits
+    if spec.mode == "etap":
         if n_splits is None:
             from repro.kernels.etap.schedule import plan_splits
             n_splits = plan_splits(q.shape[0], k.shape[1], q.shape[1],
@@ -304,7 +303,7 @@ def decode_attention(q, k, v, length=None, *, scale: float, mode: str = "etap",
                                            block=block,
                                            n_splits=int(n_splits),
                                            rescale=rescale)
-    fn = etap_decode_xla if mode == "etap" else standard_decode_xla
+    fn = etap_decode_xla if spec.mode == "etap" else standard_decode_xla
     return fn(q, k, v, length, scale=scale, block=block, rescale=rescale)
 
 
@@ -348,33 +347,31 @@ def etap_decode_paged_xla(q, k_pool, v_pool, table, lengths, *,
 
 
 def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
-                           scale: float, mode: str = "etap",
-                           use_kernels: bool = False, interpret: bool = True,
-                           n_splits=None, dv: int = 0, k_sz=None, v_sz=None,
-                           rescale: str | None = None):
+                           spec=None, dv: int = 0, k_sz=None, v_sz=None,
+                           **legacy):
     """Paged decode attention entry point (the `cache_layout="paged"`
-    analogue of :func:`decode_attention`).
+    analogue of :func:`decode_attention`), driven by one AttnSpec.
 
     q: [B,H,Dk]; pools: [N,page,D*]; table: [B,max_blocks]; lengths: [B].
     v_pool None → MLA-fused (V = first `dv` pool columns, one HBM stream).
     k_sz/v_sz: (scale, zp) pools when the pools hold int8/fp8 codes — the
     kernel path dequants in registers, the XLA path after the gather.
-    n_splits: None = auto via the block-granular paged scheduler; the
+    spec.kv_splits: None = auto via the block-granular paged scheduler; the
     "standard" baseline runs on the gathered dense layout (it exists for
     comparison, not serving)."""
-    rescale = softmax_state.resolve(rescale)
-    if use_kernels and mode == "etap":
+    spec = attn_spec.coerce(spec, legacy, where="decode_attention_paged")
+    if spec.use_kernels and spec.mode == "etap":
         from repro.kernels.etap import ops as etap_ops
         if v_pool is None:
             return etap_ops.etap_decode_mla_paged_splitkv(
-                q, k_pool, dv, table, lengths, scale=scale,
-                n_splits=int(n_splits or 0), interpret=interpret,
-                kv_sz=k_sz, rescale=rescale)
+                q, k_pool, dv, table, lengths, spec=spec, kv_sz=k_sz)
         return etap_ops.etap_decode_paged_splitkv(
-            q, k_pool, v_pool, table, lengths, scale=scale,
-            n_splits=int(n_splits or 0), interpret=interpret,
-            k_sz=k_sz, v_sz=v_sz, rescale=rescale)
-    if mode == "etap":
+            q, k_pool, v_pool, table, lengths, spec=spec,
+            k_sz=k_sz, v_sz=v_sz)
+    scale = spec.scale
+    rescale = softmax_state.resolve(spec.rescale)
+    n_splits = spec.kv_splits
+    if spec.mode == "etap":
         page = k_pool.shape[1]
         if n_splits is None:
             from repro.kernels.etap.schedule import plan_splits_paged
@@ -391,12 +388,10 @@ def decode_attention_paged(q, k_pool, v_pool, table, lengths, *,
                                      scale=scale, dv=dv, k_sz=k_sz,
                                      v_sz=v_sz, rescale=rescale)
     k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
-    if use_kernels:
+    if spec.use_kernels:
         from repro.kernels.flash_decode import ops as fd_ops
         return fd_ops.flash_decode_splitkv(
-            q, k, v, lengths, scale=scale, block=k_pool.shape[1],
-            n_splits=int(n_splits or 0), interpret=interpret,
-            rescale=rescale)
+            q, k, v, lengths, spec=spec.replace(block=k_pool.shape[1]))
     return standard_decode_xla(q, k, v, lengths, scale=scale,
                                block=k_pool.shape[1], rescale=rescale)
 
@@ -411,6 +406,27 @@ def etap_prefill_xla(q, k, v, start, *, scale: float, block: int = 512,
     k/v by the caller); start: [B].  The Cq*H query tile rides the N side of
     every GEMM while KV blocks stay on M, with a causal mask per column:
     key position p is live for chunk row c iff p <= start + c.
+    Implemented as the linear-chain special case of :func:`etap_verify_xla`
+    (qpos = start + row index) — the two are bitwise identical there.
+    Returns [B, Cq, H, Dv]."""
+    Cq = q.shape[1]
+    qpos = start[:, None] + jnp.arange(Cq, dtype=jnp.int32)[None, :]
+    return etap_verify_xla(q, k, v, qpos, scale=scale, block=block,
+                           rescale=rescale)
+
+
+def etap_verify_xla(q, k, v, qpos, *, scale: float, block: int = 512,
+                    rescale: str | None = None):
+    """Draft-verify ETAP attention: the chunked-prefill loop with an
+    EXPLICIT per-query-row causal horizon (DESIGN.md §14).
+
+    q: [B, Cq, H, Dk] — the Cq draft rows under verification; qpos: [B, Cq]
+    absolute key position row c may attend up to (inclusive; its own pool
+    row included).  For a linear draft chain qpos = start[:, None] +
+    arange(Cq), which makes this function bit-identical to
+    :func:`etap_prefill_xla` — verification IS a chunked prefill.  An
+    explicit vector rather than start + row index is the tree hook:
+    sibling draft rows share a start but not a mask.
     Returns [B, Cq, H, Dv]."""
     B, Cq, H, Dk = q.shape
     S = k.shape[1]
@@ -421,8 +437,8 @@ def etap_prefill_xla(q, k, v, start, *, scale: float, block: int = 512,
     mode = softmax_state.resolve(rescale)
 
     qT = jnp.swapaxes(q.reshape(B, CH, Dk), 1, 2).astype(jnp.float32)
-    # column c of the transposed score tile is query row c // H
-    qpos = start[:, None] + jnp.arange(CH, dtype=jnp.int32)[None, :] // H
+    # column c*H + h of the transposed score tile is query row c
+    qpos = jnp.repeat(qpos.astype(jnp.int32), H, axis=1)       # [B, CH]
 
     def step(j, carry):
         kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=1)
@@ -444,11 +460,8 @@ def etap_prefill_xla(q, k, v, start, *, scale: float, block: int = 512,
     return jnp.swapaxes(oT, 1, 2).reshape(B, Cq, H, Dv).astype(v.dtype)
 
 
-def prefill_attention_paged(q, k_pool, v_pool, table, start, *, scale: float,
-                            mode: str = "etap", use_kernels: bool = False,
-                            interpret: bool = True, dv: int = 0,
-                            k_sz=None, v_sz=None,
-                            rescale: str | None = None):
+def prefill_attention_paged(q, k_pool, v_pool, table, start, *, spec=None,
+                            dv: int = 0, k_sz=None, v_sz=None, **legacy):
     """Chunked paged prefill attention entry point (the prefill analogue of
     :func:`decode_attention_paged`).
 
@@ -462,24 +475,57 @@ def prefill_attention_paged(q, k_pool, v_pool, table, start, *, scale: float,
     offset over donor-computed blocks is the same computation as one that
     resumes over its own, which is why prefix skipping needs no kernel
     changes.  v_pool None → MLA-fused (V = first `dv` pool columns).
-    `mode` is accepted for signature parity with decode; both modes share
-    the transposed loop here — prefill tiles are never thin on M."""
-    del mode
-    rescale = softmax_state.resolve(rescale)
-    if use_kernels:
+    `spec.mode` is accepted for parity with decode but ignored; both modes
+    share the transposed loop here — prefill tiles are never thin on M."""
+    spec = attn_spec.coerce(spec, legacy, where="prefill_attention_paged")
+    if spec.use_kernels:
         from repro.kernels.etap import ops as etap_ops
         if v_pool is None:
             return etap_ops.etap_prefill_mla_paged(
-                q, k_pool, dv, table, start, scale=scale,
-                interpret=interpret, kv_sz=k_sz, rescale=rescale)
+                q, k_pool, dv, table, start, spec=spec, kv_sz=k_sz)
         return etap_ops.etap_prefill_paged(
-            q, k_pool, v_pool, table, start, scale=scale,
-            interpret=interpret, k_sz=k_sz, v_sz=v_sz, rescale=rescale)
+            q, k_pool, v_pool, table, start, spec=spec,
+            k_sz=k_sz, v_sz=v_sz)
     k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
     if k_sz is not None:
         q = q.astype(jnp.float32)          # match the dequantized fp32 rows
-    return etap_prefill_xla(q, k, v, start, scale=scale,
-                            block=k_pool.shape[1], rescale=rescale)
+    return etap_prefill_xla(q, k, v, start, scale=spec.scale,
+                            block=k_pool.shape[1],
+                            rescale=softmax_state.resolve(spec.rescale))
+
+
+def verify_attention_paged(q, k_pool, v_pool, table, start, qpos, *,
+                           spec=None, dv: int = 0, k_sz=None, v_sz=None,
+                           **legacy):
+    """Speculative-decode verification attention over the paged pool
+    (DESIGN.md §14) — the scoring half of draft-then-verify.
+
+    Shaped exactly like :func:`prefill_attention_paged`: the k draft rows
+    must already be appended to the pool (append_chunk / append_chunk_quant)
+    and `start` [B] is the pre-chunk length, so ONE pool stream covers the
+    committed context and the live draft rows.  The only difference is the
+    causal mask: the explicit per-row horizon `qpos` [B, Cq] replaces
+    start + row index.  A linear chain (qpos = start[:, None] + arange(Cq))
+    is bitwise identical to the prefill entry — verification IS a chunked
+    prefill — while tree-shaped drafts feed sibling rows with equal start
+    but disjoint horizons.  v_pool None → MLA-fused (V = first `dv` pool
+    columns); k_sz/v_sz → quantized code pools, dequantized in registers on
+    the kernel path and after the gather on the XLA path."""
+    spec = attn_spec.coerce(spec, legacy, where="verify_attention_paged")
+    if spec.use_kernels:
+        from repro.kernels.etap import ops as etap_ops
+        if v_pool is None:
+            return etap_ops.etap_verify_mla_paged(
+                q, k_pool, dv, table, start, qpos, spec=spec, kv_sz=k_sz)
+        return etap_ops.etap_verify_paged(
+            q, k_pool, v_pool, table, start, qpos, spec=spec,
+            k_sz=k_sz, v_sz=v_sz)
+    k, v = _gather_kv(k_pool, v_pool, table, dv, k_sz, v_sz)
+    if k_sz is not None:
+        q = q.astype(jnp.float32)          # match the dequantized fp32 rows
+    return etap_verify_xla(q, k, v, qpos, scale=spec.scale,
+                           block=k_pool.shape[1],
+                           rescale=softmax_state.resolve(spec.rescale))
 
 
 def gqa_partial_xla(q, k, v, length, *, scale: float, block: int = 512,
@@ -566,19 +612,21 @@ def seq_sharded_gqa_decode(q, k_cache, v_cache, new_k, new_v, pos, *,
     )(q, k_cache, v_cache, new_k, new_v, pos, shard_ids)
 
 
-def gqa_decode_xla(q, k, v, length, *, scale: float, mode: str = "etap",
-                   block: int = 512, rescale: str | None = None):
+def gqa_decode_xla(q, k, v, length, *, spec=None, **legacy):
     """GQA decode attention operating NATIVELY on the [B,S,K,hd] cache layout
     (no transpose/copy of the multi-GiB cache — it is streamed in place with
     dynamic_slice). q: [B,K,G,hd]; k,v: [B,S,K,hd*]; length: [B].
-    Returns [B, K*G, Dv]. ETAP mode keeps the KV block on the long GEMM dim
-    with per-(k,g)-column softmax stats; standard mode is the thin-M baseline."""
+    Returns [B, K*G, Dv]. spec.mode "etap" keeps the KV block on the long
+    GEMM dim with per-(k,g)-column softmax stats; "standard" is the thin-M
+    baseline.  Legacy keywords shim through attn_spec.coerce."""
+    spec = attn_spec.coerce(spec, legacy, where="gqa_decode_xla")
+    scale, mode = spec.scale, spec.mode
     B, K, G, Dk = q.shape
     S = k.shape[1]
     Dv = v.shape[3]
-    block = min(block, S)
+    block = min(spec.block, S)
     nb = _blocks(S, block)
-    rs = softmax_state.resolve(rescale)
+    rs = softmax_state.resolve(spec.rescale)
     qf = q.astype(jnp.float32)
 
     def step_etap(j, carry):

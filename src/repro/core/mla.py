@@ -13,8 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.core import attn_spec
 from repro.core.etap import (decode_attention, decode_attention_paged,
-                             prefill_attention_paged, seq_sharded_decode)
+                             prefill_attention_paged, seq_sharded_decode,
+                             verify_attention_paged)
 from repro.models import layers
 from repro.models.attention import causal_attention
 from repro.runtime import paged_cache
@@ -100,14 +102,15 @@ def _absorbed_out(params, cfg, o_lat, dtype):
     return layers.dense(o.reshape(o.shape[0], -1), params["w_o"])
 
 
-def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
-               n_splits=None):
+def mla_decode(params, cfg, x, cache, pos, *, spec=None, **legacy):
     """Absorbed-form decode. x: [B,D]; cache: {"c": [B,Smax,latent]}.
-    n_splits: split-KV count for the decode kernel (None = auto-scheduled).
+    spec.kv_splits: split-KV count for the decode kernel (None = auto);
+    the per-layer scale and cfg.use_kernels are folded into the spec here.
 
     scores   = q · cᵀ  — via ETAP as  c · qᵀ  with the context on M.
     o_latent = P · c[..., :512]; see :func:`_absorbed_query`/`_absorbed_out`.
     """
+    spec = attn_spec.coerce(spec, legacy, where="mla_decode")
     m = cfg.mla
     B, D = x.shape
     positions = jnp.full((B, 1), pos, jnp.int32)
@@ -127,15 +130,15 @@ def mla_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
         cache_c = jax.lax.dynamic_update_index_in_dim(cache["c"], c_t, pos, 1)
         length = jnp.full((B,), pos + 1, jnp.int32)
         # Single latent stream: K is the full 576 latent, V its first 512 cols.
-        o_lat = decode_attention(q, cache_c, cache_c[..., : m.kv_lora_rank],
-                                 length, scale=scale, mode=mode,
-                                 use_kernels=cfg.use_kernels,
-                                 n_splits=n_splits)            # [B,H,512]
+        o_lat = decode_attention(
+            q, cache_c, cache_c[..., : m.kv_lora_rank], length,
+            spec=spec.replace(scale=scale,
+                              use_kernels=cfg.use_kernels))    # [B,H,512]
     return _absorbed_out(params, cfg, o_lat, x.dtype), {"c": cache_c}
 
 
 def mla_decode_paged(params, cfg, x, cache, table, lengths, *,
-                     mode: str = "etap", n_splits=None):
+                     spec=None, **legacy):
     """Absorbed-form decode against a PAGED latent cache.
 
     x: [B,D]; cache: {"c": pool [num_blocks, page, latent]}; table:
@@ -145,31 +148,71 @@ def mla_decode_paged(params, cfg, x, cache, table, lengths, *,
     latent pool is streamed once through the block table; V is its first
     kv_lora_rank columns (same one-stream argument as the dense MLA path).
     Returns (out [B,D], {"c": updated pool})."""
+    spec = attn_spec.coerce(spec, legacy, where="mla_decode_paged")
     m = cfg.mla
     B, D = x.shape
     positions = lengths[:, None].astype(jnp.int32)            # [B,1]
     q = _absorbed_query(params, cfg, x, positions)
     c_t = _latent(params, cfg, x[:, None, :], positions)[:, 0]  # [B,latent]
-    scale = m.qk_head_dim ** -0.5
+    inner = spec.replace(scale=m.qk_head_dim ** -0.5,
+                         use_kernels=cfg.use_kernels)
     if "c_sz" in cache:        # quantized layout: codes + (scale, zp) pools
         pool, sz = paged_cache.append_rows_quant(
             cache["c"], cache["c_sz"], table, lengths, c_t)
         o_lat = decode_attention_paged(
-            q, pool, None, table, lengths + 1, scale=scale, mode=mode,
-            use_kernels=cfg.use_kernels, n_splits=n_splits,
+            q, pool, None, table, lengths + 1, spec=inner,
             dv=m.kv_lora_rank, k_sz=sz)
         return (_absorbed_out(params, cfg, o_lat, x.dtype),
                 {"c": pool, "c_sz": sz})
     pool = paged_cache.append_rows(cache["c"], table, lengths, c_t)
     o_lat = decode_attention_paged(
-        q, pool, None, table, lengths + 1, scale=scale, mode=mode,
-        use_kernels=cfg.use_kernels, n_splits=n_splits,
+        q, pool, None, table, lengths + 1, spec=inner,
         dv=m.kv_lora_rank)                                    # [B,H,512]
     return _absorbed_out(params, cfg, o_lat, x.dtype), {"c": pool}
 
 
+def _mla_chunk(params, cfg, x, cache, table, lengths, positions, *, spec,
+               qpos=None):
+    """Shared body of chunked prefill and draft verification: append the
+    chunk's latent rows through the table, then run absorbed-form attention
+    over pool positions <= each query row's own horizon.  ``positions``
+    [B,C] drives rope AND (via qpos) the causal mask; qpos None → the
+    prefill entry (horizon = start + row index, implied by the kernel),
+    else the explicit per-row horizon of the verify entry."""
+    m, H = cfg.mla, cfg.num_heads
+    B, C, D = x.shape
+    q_nope, q_rope = _queries(params, cfg, x, positions)      # [B,C,H,*]
+    # absorb W_uk into the chunk queries: [B,C,H,nope] x [kv,H,nope]
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bchd,khd->bchk", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.concatenate([q_c, q_rope], axis=-1)               # [B,C,H,latent]
+    c_rows = _latent(params, cfg, x, positions)               # [B,C,latent]
+    inner = spec.replace(scale=m.qk_head_dim ** -0.5,
+                         use_kernels=cfg.use_kernels)
+    if "c_sz" in cache:        # quantized layout: codes + (scale, zp) pools
+        pool, sz = paged_cache.append_chunk_quant(
+            cache["c"], cache["c_sz"], table, lengths, c_rows)
+        kw = dict(spec=inner, dv=m.kv_lora_rank, k_sz=sz)
+        new_cache = {"c": pool, "c_sz": sz}
+    else:
+        pool = paged_cache.append_chunk(cache["c"], table, lengths, c_rows)
+        kw = dict(spec=inner, dv=m.kv_lora_rank)
+        new_cache = {"c": pool}
+    if qpos is None:
+        o_lat = prefill_attention_paged(q, pool, None, table, lengths, **kw)
+    else:
+        o_lat = verify_attention_paged(q, pool, None, table, lengths, qpos,
+                                       **kw)                  # [B,C,H,kv]
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bchk,khd->bchd", o_lat.astype(jnp.float32),
+                   w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = layers.dense(o.reshape(B, C, H * m.v_head_dim), params["w_o"])
+    return out, new_cache
+
+
 def mla_prefill_chunk(params, cfg, x, cache, table, lengths, *,
-                      mode: str = "etap"):
+                      spec=None, **legacy):
     """Absorbed-form CHUNKED prefill against a paged latent cache
     (DESIGN.md §9).
 
@@ -183,36 +226,29 @@ def mla_prefill_chunk(params, cfg, x, cache, table, lengths, *,
     o = P·(W_uv c_kv) = (P·c_kv)·W_uv, so scores and outputs agree with
     mla_train to float noise while streaming the 576-wide latent once.
     Returns (out [B,C,D], {"c": updated pool})."""
-    m, H = cfg.mla, cfg.num_heads
-    B, C, D = x.shape
+    spec = attn_spec.coerce(spec, legacy, where="mla_prefill_chunk")
+    C = x.shape[1]
     positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
-    q_nope, q_rope = _queries(params, cfg, x, positions)      # [B,C,H,*]
-    # absorb W_uk into the chunk queries: [B,C,H,nope] x [kv,H,nope]
-    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
-    q_c = jnp.einsum("bchd,khd->bchk", q_nope.astype(jnp.float32),
-                     w_uk.astype(jnp.float32)).astype(x.dtype)
-    q = jnp.concatenate([q_c, q_rope], axis=-1)               # [B,C,H,latent]
-    c_rows = _latent(params, cfg, x, positions)               # [B,C,latent]
-    if "c_sz" in cache:        # quantized layout: codes + (scale, zp) pools
-        pool, sz = paged_cache.append_chunk_quant(
-            cache["c"], cache["c_sz"], table, lengths, c_rows)
-        o_lat = prefill_attention_paged(
-            q, pool, None, table, lengths, scale=m.qk_head_dim ** -0.5,
-            mode=mode, use_kernels=cfg.use_kernels,
-            dv=m.kv_lora_rank, k_sz=sz)
-        new_cache = {"c": pool, "c_sz": sz}
-    else:
-        pool = paged_cache.append_chunk(cache["c"], table, lengths, c_rows)
-        o_lat = prefill_attention_paged(
-            q, pool, None, table, lengths, scale=m.qk_head_dim ** -0.5,
-            mode=mode, use_kernels=cfg.use_kernels,
-            dv=m.kv_lora_rank)                                # [B,C,H,kv]
-        new_cache = {"c": pool}
-    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
-    o = jnp.einsum("bchk,khd->bchd", o_lat.astype(jnp.float32),
-                   w_uv.astype(jnp.float32)).astype(x.dtype)
-    out = layers.dense(o.reshape(B, C, H * m.v_head_dim), params["w_o"])
-    return out, new_cache
+    return _mla_chunk(params, cfg, x, cache, table, lengths, positions,
+                      spec=spec)
+
+
+def mla_verify_chunk(params, cfg, x, cache, table, lengths, qpos, *,
+                     spec=None, **legacy):
+    """Absorbed-form DRAFT VERIFICATION against the paged latent cache
+    (DESIGN.md §14): score k draft rows in one chunked-prefill-shaped pass.
+
+    x: [B,k,D] — the draft tokens' embeddings; qpos: [B,k] each draft
+    row's absolute position (a linear chain is lengths[:, None] +
+    arange(k), which makes this bitwise identical to
+    :func:`mla_prefill_chunk`).  The draft latent rows are appended into
+    the pool at lengths — the in-cache half of in-cache verification; the
+    scheduler rewinds rejected rows afterwards with BlockPool.truncate,
+    never a pool rewrite.  Returns (out [B,k,D], updated cache)."""
+    spec = attn_spec.coerce(spec, legacy, where="mla_verify_chunk")
+    qpos = qpos.astype(jnp.int32)
+    return _mla_chunk(params, cfg, x, cache, table, lengths, qpos,
+                      spec=spec, qpos=qpos)
 
 
 def init_mla_cache(cfg, batch: int, max_len: int, dtype):

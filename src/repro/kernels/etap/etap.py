@@ -271,7 +271,7 @@ def etap_decode_mla_paged_pallas(q, kv_pool, dv: int, table, lengths, *,
 def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
                        acc_ref, m_ref, l_ref, *, scale: float, page: int,
                        nb: int, heads: int, fused_dv: int, rescale: str,
-                       k_sz_ref=None, v_sz_ref=None):
+                       k_sz_ref=None, v_sz_ref=None, qpos_ref=None):
     """Chunked paged ETAP prefill (DESIGN.md §9): the decode body with the
     single query row widened to a [Cq, H] tile, flattened to CH = Cq*H
     online-softmax columns.  The KV walk streams the sequence's pool blocks
@@ -280,7 +280,13 @@ def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
     column c iff  r_pos <= start + c // H  (query c//H is the chunk-local
     row, start the tokens already in the pool).  Blocks past the chunk end
     are fully masked and drop out with weight exp(-inf - m) = 0; block 0 of
-    the walk always holds position 0, so no column is ever all-masked."""
+    the walk always holds position 0, so no column is ever all-masked.
+
+    ``qpos_ref`` is the VERIFY generalization (DESIGN.md §14): an explicit
+    per-column absolute query position [1, CH] replaces the derived
+    ``start + c // H`` — the draft-verification mask where each scored
+    chunk row attends to exactly the pool rows at or before its own
+    position, independent of how the chunk maps onto the pool tail."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -296,9 +302,13 @@ def _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
         k_blk, q, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale    # [page, CH]
 
-    start = start_ref[pl.program_id(0)]
     kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, sT.shape, 0)
-    qpos = start + jax.lax.broadcasted_iota(jnp.int32, sT.shape, 1) // heads
+    if qpos_ref is None:
+        start = start_ref[pl.program_id(0)]
+        qpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, sT.shape, 1) // heads
+    else:
+        qpos = qpos_ref[0][None, :]                    # [1, CH] per-column
     sT = jnp.where(kpos <= qpos, sT, NEG_INF)          # causal chunk-vs-pool
 
     v_blk = k_blk[:, :fused_dv] if fused_dv else _dequant(v_ref[0], v_sz_ref)
@@ -333,8 +343,35 @@ def _prefill_body_quant_fused(start_ref, table_ref, q_ref, k_ref, k_sz_ref,
                        acc, m, l, k_sz_ref=k_sz_ref, **kw)
 
 
+# Verify bodies (DESIGN.md §14): the prefill bodies with the per-column
+# query-position operand riding directly after q — same math, explicit mask.
+def _verify_body(start_ref, table_ref, q_ref, qpos_ref, k_ref, v_ref, o_ref,
+                 acc, m, l, **kw):
+    _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                       acc, m, l, qpos_ref=qpos_ref, **kw)
+
+
+def _verify_body_fused(start_ref, table_ref, q_ref, qpos_ref, k_ref, o_ref,
+                       acc, m, l, **kw):
+    _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, None, o_ref,
+                       acc, m, l, qpos_ref=qpos_ref, **kw)
+
+
+def _verify_body_quant(start_ref, table_ref, q_ref, qpos_ref, k_ref,
+                       k_sz_ref, v_ref, v_sz_ref, o_ref, acc, m, l, **kw):
+    _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                       acc, m, l, qpos_ref=qpos_ref, k_sz_ref=k_sz_ref,
+                       v_sz_ref=v_sz_ref, **kw)
+
+
+def _verify_body_quant_fused(start_ref, table_ref, q_ref, qpos_ref, k_ref,
+                             k_sz_ref, o_ref, acc, m, l, **kw):
+    _etap_prefill_body(start_ref, table_ref, q_ref, k_ref, None, o_ref,
+                       acc, m, l, qpos_ref=qpos_ref, k_sz_ref=k_sz_ref, **kw)
+
+
 def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
-                  fused_dv, rescale, k_sz=None, v_sz=None):
+                  fused_dv, rescale, k_sz=None, v_sz=None, qpos=None):
     B, CH, Dk = q.shape
     page = pool.shape[1]
     nb = table.shape[1]
@@ -343,9 +380,15 @@ def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
 
     in_specs = [
         pl.BlockSpec((1, CH, Dk), lambda b, j, *_: (b, 0, 0)),           # q
-        _pool_spec(page, Dk),                                            # pool
     ]
-    operands = [q, pool]
+    operands = [q]
+    if qpos is not None:
+        # per-column absolute query positions: a whole [1, CH] int32 row per
+        # batch step (VMEM vector compare — no SMEM vector indexing)
+        in_specs.append(pl.BlockSpec((1, CH), lambda b, j, *_: (b, 0)))
+        operands.append(qpos.astype(jnp.int32))
+    in_specs.append(_pool_spec(page, Dk))                                # pool
+    operands.append(pool)
     if quant:
         in_specs.append(_pool_spec(page, 2))
         operands.append(k_sz)
@@ -358,7 +401,12 @@ def _prefill_call(q, pool, v_pool, table, start, *, heads, scale, interpret,
 
     kw = dict(scale=scale, page=page, nb=nb, heads=heads, fused_dv=fused_dv,
               rescale=softmax_state.resolve(rescale))
-    if quant:
+    if qpos is not None:
+        body = functools.partial(
+            (_verify_body_quant_fused if fused_dv else _verify_body_quant)
+            if quant else
+            (_verify_body_fused if fused_dv else _verify_body), **kw)
+    elif quant:
         body = functools.partial(
             _prefill_body_quant_fused if fused_dv else _prefill_body_quant,
             **kw)
@@ -413,6 +461,44 @@ def etap_prefill_mla_paged_pallas(q, kv_pool, dv: int, table, start, *,
     o = _prefill_call(q.reshape(B, Cq * H, Dk), kv_pool, None, table, start,
                       heads=H, scale=scale, interpret=interpret, fused_dv=dv,
                       rescale=rescale, k_sz=kv_sz)
+    return o.reshape(B, Cq, H, dv)
+
+
+# -------------------------------------------------- draft verification
+def _expand_qpos(qpos, H):
+    """[B, Cq] absolute query positions -> the [B, Cq*H] per-column row the
+    kernel compares against (column c*H + h belongs to query row c)."""
+    return jnp.repeat(qpos.astype(jnp.int32), H, axis=1)
+
+
+def etap_verify_paged_pallas(q, k_pool, v_pool, table, start, qpos, *,
+                             scale: float, interpret: bool = True,
+                             k_sz=None, v_sz=None,
+                             rescale: str | None = None):
+    """Paged (separate-V) draft-verify attention (DESIGN.md §14): the
+    chunked-prefill kernel with an EXPLICIT per-query position operand.
+    q: [B,Cq,H,Dk] — the Cq drafted rows (already appended to the pool);
+    qpos: [B,Cq] int32 absolute positions — row c attends to pool rows at
+    positions <= qpos[b, c].  A linear draft chain with
+    ``qpos = start + arange(Cq)`` is bit-identical to the prefill kernel;
+    the explicit operand is what tree-shaped position layouts plug into."""
+    B, Cq, H, Dk = q.shape
+    o = _prefill_call(q.reshape(B, Cq * H, Dk), k_pool, v_pool, table, start,
+                      heads=H, scale=scale, interpret=interpret, fused_dv=0,
+                      rescale=rescale, k_sz=k_sz, v_sz=v_sz,
+                      qpos=_expand_qpos(qpos, H))
+    return o.reshape(B, Cq, H, o.shape[-1])
+
+
+def etap_verify_mla_paged_pallas(q, kv_pool, dv: int, table, start, qpos, *,
+                                 scale: float, interpret: bool = True,
+                                 kv_sz=None, rescale: str | None = None):
+    """Paged MLA-fused draft-verify: single latent pool, V = pool[..., :dv],
+    explicit per-query positions (see :func:`etap_verify_paged_pallas`)."""
+    B, Cq, H, Dk = q.shape
+    o = _prefill_call(q.reshape(B, Cq * H, Dk), kv_pool, None, table, start,
+                      heads=H, scale=scale, interpret=interpret, fused_dv=dv,
+                      rescale=rescale, k_sz=kv_sz, qpos=_expand_qpos(qpos, H))
     return o.reshape(B, Cq, H, dv)
 
 

@@ -1,66 +1,66 @@
 """jit'd wrappers for the baseline (untransposed) flash decode kernel:
-single-pass and split-KV two-phase entry points."""
+single-pass and split-KV two-phase entry points.  Entry points take one
+:class:`repro.core.attn_spec.AttnSpec` (legacy keywords shim through with
+a DeprecationWarning — see attn_spec.attn_entry)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels import softmax_state
+from repro.core import attn_spec
 from repro.kernels.etap.combine import combine_splits
 from repro.kernels.etap.schedule import plan_splits, split_geometry
 from repro.kernels.flash_decode.flash_decode import (
     flash_decode_pallas, flash_decode_partial_pallas)
 
 
-@softmax_state.jit_with_rescale(
-    static_argnames=("scale", "block", "interpret"))
-def flash_decode(q, k, v, length=None, *, scale: float, block: int = 512,
-                 interpret: bool = True, rescale: str | None = None):
+@attn_spec.attn_entry(uses=("block", "interpret", "rescale"))
+def flash_decode(q, k, v, length=None, *, spec):
     BG = q.shape[0]
     S = k.shape[1]
     if length is None:
         length = jnp.full((BG,), S, jnp.int32)
-    block = min(block, S)
+    block = min(spec.block, S)
     pad = (-S) % block
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
-    return flash_decode_pallas(q, k, v, length, scale=scale, block=block,
-                               interpret=interpret, rescale=rescale)
+    return flash_decode_pallas(q, k, v, length, scale=spec.scale,
+                               block=block, interpret=spec.interpret,
+                               rescale=spec.rescale)
 
 
-@softmax_state.jit_with_rescale(
-    static_argnames=("scale", "block", "n_splits", "combine", "interpret"))
-def flash_decode_splitkv(q, k, v, length=None, *, scale: float,
-                         block: int = 512, n_splits: int = 0,
-                         combine: str = "pallas", interpret: bool = True,
-                         rescale: str | None = None):
+@attn_spec.attn_entry(uses=("block", "kv_splits", "interpret", "rescale"),
+                      static_argnames=("combine",))
+def flash_decode_splitkv(q, k, v, length=None, *, spec,
+                         combine: str = "pallas"):
     """Two-phase split-KV baseline decode (same scheduler as the ETAP path;
-    n_splits = 0 → auto, 1 → single-pass, bit-identical — see
+    spec.kv_splits None/0 → auto, 1 → single-pass, bit-identical — see
     kernels/etap/combine.py)."""
     BG, H, _ = q.shape
     S = k.shape[1]
     Dv = v.shape[2]
+    n_splits = int(spec.kv_splits or 0)
     if not n_splits:
-        n_splits = plan_splits(BG, S, H, Dv, block=block).n_splits
+        n_splits = plan_splits(BG, S, H, Dv, block=spec.block).n_splits
     if n_splits <= 1:
-        return flash_decode(q, k, v, length, scale=scale, block=block,
-                            interpret=interpret, rescale=rescale)
+        return flash_decode(q, k, v, length, spec=spec)
     if length is None:
         length = jnp.full((BG,), S, jnp.int32)
     # effective split count from the shared geometry (clamped so every
     # split owns >= 1 real KV block — short contexts degrade to fewer)
-    block, n_splits, _, target = split_geometry(S, block, n_splits)
+    block, n_splits, _, target = split_geometry(S, spec.block, n_splits)
     if n_splits <= 1:
-        return flash_decode(q, k, v, length, scale=scale, block=block,
-                            interpret=interpret, rescale=rescale)
+        return flash_decode(q, k, v, length,
+                            spec=spec.replace(block=block))
     pad = target - S
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
-    m, l, acc = flash_decode_partial_pallas(q, k, v, length, scale=scale,
+    m, l, acc = flash_decode_partial_pallas(q, k, v, length,
+                                            scale=spec.scale,
                                             block=block, n_splits=n_splits,
-                                            interpret=interpret,
-                                            rescale=rescale)
+                                            interpret=spec.interpret,
+                                            rescale=spec.rescale)
     return combine_splits(m, l, acc, transposed=False, out_dtype=v.dtype,
-                          combine=combine, interpret=interpret,
-                          rescale=rescale)
+                          combine=combine, interpret=spec.interpret,
+                          rescale=spec.rescale)

@@ -1,13 +1,15 @@
-"""jit'd wrapper for the causal flash prefill kernel."""
+"""jit'd wrapper for the causal flash prefill kernel (AttnSpec entry; the
+bq/bkv tile sizes stay explicit static keywords — they are kernel tiling
+knobs, not attention semantics)."""
 from __future__ import annotations
 
-from repro.kernels import softmax_state
+from repro.core import attn_spec
 from repro.kernels.flash_prefill.flash_prefill import flash_prefill_pallas
 
 
-@softmax_state.jit_with_rescale(
-    static_argnames=("scale", "bq", "bkv", "interpret"))
-def flash_prefill(q, k, v, *, scale: float, bq: int = 256, bkv: int = 256,
-                  interpret: bool = True, rescale: str | None = None):
-    return flash_prefill_pallas(q, k, v, scale=scale, bq=bq, bkv=bkv,
-                                interpret=interpret, rescale=rescale)
+@attn_spec.attn_entry(uses=("interpret", "rescale"),
+                      static_argnames=("bq", "bkv"))
+def flash_prefill(q, k, v, *, spec, bq: int = 256, bkv: int = 256):
+    return flash_prefill_pallas(q, k, v, scale=spec.scale, bq=bq, bkv=bkv,
+                                interpret=spec.interpret,
+                                rescale=spec.rescale)

@@ -35,9 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced
+from repro.core import attn_spec
 from repro.kernels import softmax_state
 from repro.models import model
-from repro.runtime import scheduler
+from repro.runtime import scheduler, spec_decode
 from repro.runtime.fault_tolerance import (FailureInjector,
                                            HeartbeatRegistry, WorkerFailure)
 from repro.runtime.paged_cache import (KV_LAYOUTS, BlockPool,
@@ -59,12 +60,13 @@ def run_dense(args, cfg) -> dict:
     # the whole generation is ONE jitted lax.scan over steps (cache donated
     # through the scan carry): decode timing measures the kernels, not
     # per-token Python dispatch / host-device sync overhead.
+    spec = attn_spec.AttnSpec(mode=args.mode, kv_splits=args.kv_splits)
+
     def generate(params, cache, first_tok, pos0):
         def step(carry, i):
             tok, cache = carry
             logits, cache = model.decode_step(params, cfg, cache, tok,
-                                              pos0 + i, mode=args.mode,
-                                              kv_splits=args.kv_splits)
+                                              pos0 + i, spec=spec)
             return (jnp.argmax(logits, axis=-1), cache), tok
         (_, cache), toks = jax.lax.scan(
             step, (first_tok, cache), jnp.arange(args.gen, dtype=jnp.int32))
@@ -268,9 +270,13 @@ def run_paged(args, cfg) -> dict:
     # path donates through its scan carry): the pool is updated in place
     # instead of copied per call, keeping admission's peak extra memory at
     # one chunk, not a second pool.
+    spec = attn_spec.AttnSpec(mode=args.mode, kv_splits=args.kv_splits,
+                              kv_dtype=args.kv_dtype,
+                              spec_tokens=args.spec_tokens,
+                              spec_draft=args.spec_draft)
     step_fn = jax.jit(lambda p, c, t, table, lengths: model.decode_step(
-        p, cfg, c, t, None, mode=args.mode, kv_splits=args.kv_splits,
-        cache_layout="paged", block_table=table, lengths=lengths),
+        p, cfg, c, t, None, spec=spec, cache_layout="paged",
+        block_table=table, lengths=lengths),
         donate_argnums=(1,))
     # warm the decode step OUTSIDE the timed region (the dense path also
     # compiles before its timer): all slots inactive → the dummy rows land
@@ -284,10 +290,31 @@ def run_paged(args, cfg) -> dict:
 
     # one jitted entry — jax.jit caches per chunk-size shape on its own
     prefill_fn = jax.jit(lambda p, cch, t, table, lens: model.prefill_chunk(
-        p, cfg, cch, t, table, lens, mode=args.mode), donate_argnums=(1,))
+        p, cfg, cch, t, table, lens, spec=spec), donate_argnums=(1,))
+
+    # speculative decode (DESIGN.md §14): a host-side drafter proposes
+    # k-1 tokens per eligible slot and ONE prefill-shaped verify launch
+    # scores all k positions; greedy acceptance keeps the delivered stream
+    # bitwise identical to one-at-a-time decode.
+    k_max = args.spec_tokens
+    verify_fn = drafter = None
+    if k_max > 0:
+        drafter = spec_decode.make_drafter(args.spec_draft, params)
+        verify_fn = jax.jit(lambda p, c, t, table, lengths: model.verify_step(
+            p, cfg, c, t, table, lengths, spec=spec), donate_argnums=(1,))
+        # warm the verify pass outside the timer too, with the same all-
+        # null masked launch as step_fn: the k dummy rows land in the null
+        # block and compile time never lands in t_decode
+        logits0, holder["cache"] = verify_fn(params, holder["cache"],
+                                             jnp.zeros((B, k_max), jnp.int32),
+                                             table0, lengths0)
+        jax.block_until_ready(logits0)
 
     tokens_served = 0
     steps = 0                                 # decode steps
+    spec_steps = 0                            # speculative verify launches
+    spec_proposed = 0                         # draft tokens proposed
+    spec_accepted = 0                         # draft tokens accepted
     prefill_chunks = 0
     interleaved_steps = 0                     # decode step + >=1 chunk
     prefill_tokens = 0                        # prompt tokens actually run
@@ -315,7 +342,16 @@ def run_paged(args, cfg) -> dict:
 
         running = sched.running()
         dec = [r for r in running if r.decoding]
-        spent = len(dec)                      # decode tokens this step
+        # speculation is restricted to slots with at least k_max deliveries
+        # left (uniform-k launches: start + k_max never exceeds the slot's
+        # reserved budget exactly when remaining >= k_max) that are not
+        # teacher-forcing a restore replay; everything else takes the
+        # plain one-token step below
+        spec_dec = [r for r in dec
+                    if k_max > 0 and not r.replay and r.remaining >= k_max]
+        spec_slots = {r.slot for r in spec_dec}
+        # decode tokens this step (each spec slot runs k_max verify rows)
+        spent = len(dec) + max(0, k_max - 1) * len(spec_dec)
         # ITL SLO: shrink the prefill share of the budget when delivered
         # inter-token latency runs hot (no-op at the default budget split)
         budget_eff = spent + sched.prefill_quota(max(0, budget - spent))
@@ -379,48 +415,110 @@ def run_paged(args, cfg) -> dict:
                     sched.fail_running(victim.slot, tick)
                     tick_box[0] += 1
                     continue
-            # mask cold slots to the null block: the decode write for them
-            # must not land inside a half-prefilled prompt
-            dec_slots = {r.slot for r in dec}
-            table_m = bp.table.copy()
-            lens_m = bp.lengths.copy()
-            cur_arr = np.zeros((B,), np.int64)
-            for b in range(B):
-                if b not in dec_slots:
-                    table_m[b] = 0
-                    lens_m[b] = 0
-            for r in dec:
-                cur_arr[r.slot] = r.replay[0] if r.replay else r.cur
-            logits, holder["cache"] = step_fn(
-                params, holder["cache"], jnp.array(cur_arr, jnp.int32),
-                jnp.array(table_m), jnp.array(lens_m))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            steps += 1
-            if pf_tokens:
-                interleaved_steps += 1
+            # mask cold slots (and, for each launch, the OTHER launch's
+            # slots) to the null block: the decode write for them must not
+            # land inside a half-prefilled prompt or a live sequence
+            plain = [r for r in dec if r.slot not in spec_slots]
+            if plain:
+                plain_slots = {r.slot for r in plain}
+                table_m = bp.table.copy()
+                lens_m = bp.lengths.copy()
+                cur_arr = np.zeros((B,), np.int64)
+                for b in range(B):
+                    if b not in plain_slots:
+                        table_m[b] = 0
+                        lens_m[b] = 0
+                for r in plain:
+                    cur_arr[r.slot] = r.replay[0] if r.replay else r.cur
+                logits, holder["cache"] = step_fn(
+                    params, holder["cache"], jnp.array(cur_arr, jnp.int32),
+                    jnp.array(table_m), jnp.array(lens_m))
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                steps += 1
+                if pf_tokens:
+                    interleaved_steps += 1
 
-            # ---- retire / bookkeep (host side)
-            now = time.perf_counter()
-            for r in dec:
-                b = r.slot
-                if r.replay:
-                    # teacher-forced replay: the token was already
-                    # delivered before preemption — rebuild its KV row and
-                    # assert the decode path re-derives the NEXT token
-                    # bit-for-bit (the bitwise-restore guarantee made
-                    # falsifiable at every replayed position)
-                    fed = r.replay.popleft()
-                    bp.append(b)
-                    expect = r.replay[0] if r.replay else r.cur
-                    assert int(nxt[b]) == int(expect), \
-                        f"request {r.id}: replay diverged after token " \
-                        f"{fed} (got {int(nxt[b])}, expected {int(expect)})"
-                    replayed_tokens += 1
-                else:
-                    sched.deliver(r, r.cur, now)
-                    tokens_served += 1
-                    bp.append(b)
-                    r.cur = int(nxt[b])
+                # ---- retire / bookkeep (host side)
+                now = time.perf_counter()
+                for r in plain:
+                    b = r.slot
+                    if r.replay:
+                        # teacher-forced replay: the token was already
+                        # delivered before preemption — rebuild its KV row
+                        # and assert the decode path re-derives the NEXT
+                        # token bit-for-bit (the bitwise-restore guarantee
+                        # made falsifiable at every replayed position)
+                        fed = r.replay.popleft()
+                        bp.append(b)
+                        expect = r.replay[0] if r.replay else r.cur
+                        assert int(nxt[b]) == int(expect), \
+                            f"request {r.id}: replay diverged after token " \
+                            f"{fed} (got {int(nxt[b])}, " \
+                            f"expected {int(expect)})"
+                        replayed_tokens += 1
+                    else:
+                        sched.deliver(r, r.cur, now)
+                        tokens_served += 1
+                        bp.append(b)
+                        r.cur = int(nxt[b])
+                        if r.remaining == 0:
+                            sched.finish(r)
+
+            if spec_dec:
+                # ---- speculative verify (DESIGN.md §14): draft k-1
+                # tokens per slot from the committed stream, score
+                # [cur, d_1, .., d_{k-1}] in ONE prefill-shaped launch
+                # against the paged pool, accept the longest draft prefix
+                # matching the model's own argmax chain.  Greedy
+                # acceptance makes the delivered stream bitwise identical
+                # to one-at-a-time decode whatever the drafter proposes.
+                table_m = bp.table.copy()
+                lens_m = bp.lengths.copy()
+                tok_arr = np.zeros((B, k_max), np.int64)
+                drafts_by_slot = {}
+                for b in range(B):
+                    if b not in spec_slots:
+                        table_m[b] = 0
+                        lens_m[b] = 0
+                for r in spec_dec:
+                    b = r.slot
+                    history = np.concatenate([np.asarray(r.prompt),
+                                              np.asarray(r.out + [r.cur],
+                                                         np.int64)])
+                    ds = (list(drafter(history, k_max - 1))
+                          if k_max > 1 else [])
+                    drafts_by_slot[b] = ds
+                    tok_arr[b] = [r.cur] + ds
+                logits, holder["cache"] = verify_fn(
+                    params, holder["cache"], jnp.array(tok_arr, jnp.int32),
+                    jnp.array(table_m), jnp.array(lens_m))
+                preds = np.asarray(jnp.argmax(logits, axis=-1))  # [B, k]
+                steps += 1
+                spec_steps += 1
+                if pf_tokens:
+                    interleaved_steps += 1
+
+                # ---- commit / rewind / deliver (host side)
+                now = time.perf_counter()
+                for r in spec_dec:
+                    b = r.slot
+                    start = int(bp.lengths[b])
+                    # the verify pass appended k_max KV rows on device;
+                    # commit them on the host, then rewind the rejected
+                    # tail IN PLACE (free_blocks=False — the slot keeps
+                    # its full reservation, and the garbage rows sit past
+                    # the committed length where no mask ever reads them
+                    # until the next launch overwrites them)
+                    bp.extend(b, k_max)
+                    accepted, nxt_tok = spec_decode.accept_greedy(
+                        drafts_by_slot[b], preds[b])
+                    bp.truncate(b, start + 1 + accepted, free_blocks=False)
+                    for t in [r.cur] + drafts_by_slot[b][:accepted]:
+                        sched.deliver(r, int(t), now)
+                        tokens_served += 1
+                    spec_proposed += len(drafts_by_slot[b])
+                    spec_accepted += accepted
+                    r.cur = int(nxt_tok)
                     if r.remaining == 0:
                         sched.finish(r)
         hb.beat(WORKER)
@@ -440,7 +538,7 @@ def run_paged(args, cfg) -> dict:
           f"chunk={chunk} budget={budget} kv_dtype={args.kv_dtype} "
           f"rescale={softmax_state.default_mode()} "
           f"prefix_cache={'on' if prefix is not None else 'off'} "
-          f"preemption={args.preemption}")
+          f"preemption={args.preemption} spec_tokens={k_max}")
     print(f"[serve] {tokens_served} tokens in {steps} decode steps "
           f"({tokens_served / max(steps, 1):.2f} tokens/step occupancy); "
           f"{prefill_chunks} prefill chunks, {interleaved_steps} steps "
@@ -469,6 +567,11 @@ def run_paged(args, cfg) -> dict:
                   f"ttft p50/p99 {st['ttft_p50_ms']:.1f}/"
                   f"{st['ttft_p99_ms']:.1f}ms itl p50/p99 "
                   f"{st['itl_p50_ms']:.2f}/{st['itl_p99_ms']:.2f}ms")
+    if k_max > 0:
+        print(f"[serve] speculation: k={k_max} draft={args.spec_draft}; "
+              f"{spec_steps} verify launches, {spec_accepted}/"
+              f"{spec_proposed} drafts accepted "
+              f"({spec_accepted / max(spec_proposed, 1):.0%})")
     first = outputs[0][:16] if outputs.get(0) else []
     print(f"[serve] sample generation (request 0): {first}")
     return {"outputs": outputs, "tokens_served": tokens_served,
@@ -485,6 +588,12 @@ def run_paged(args, cfg) -> dict:
             "worker_restarts": worker_restarts,
             "prefix": pstats, "sched": sstats,
             "classes": sched.class_stats(),
+            "spec": ({"k": k_max, "draft": args.spec_draft,
+                      "steps": spec_steps, "proposed": spec_proposed,
+                      "accepted": spec_accepted,
+                      "acceptance_rate":
+                          spec_accepted / max(spec_proposed, 1)}
+                     if k_max > 0 else None),
             "t_prefill": t_prefill, "t_decode": t_decode}
 
 
@@ -583,6 +692,20 @@ def parse_args(argv=None):
                          "over-admission bursts of --burst-size requests")
     ap.add_argument("--burst-size", type=int, default=4,
                     help="requests per burst for --trace burst")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="speculative decode window k (DESIGN.md §14): "
+                         "draft k-1 tokens per eligible decode slot and "
+                         "score all k positions in ONE prefill-shaped "
+                         "verify launch; greedy acceptance keeps outputs "
+                         "bitwise identical to one-at-a-time decode "
+                         "(0 = off; paged layout only)")
+    ap.add_argument("--spec-draft", default="ngram",
+                    choices=list(spec_decode.DRAFT_KINDS),
+                    help="draft proposer for --spec-tokens: ngram = "
+                         "longest-suffix match over the committed stream "
+                         "(free, strong on repetitive traces); head = "
+                         "embedding-similarity self-draft chain (not "
+                         "supported on fp8 pools)")
     ap.add_argument("--kv-splits", type=int, default=None,
                     help="split-KV count for decode attention "
                          "(default: auto-scheduled)")
@@ -604,7 +727,19 @@ def parse_args(argv=None):
                          "REPRO_RESCALE)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reduced", action="store_true")
-    return ap.parse_args(argv)
+    args = ap.parse_args(argv)
+    # flag-combo validation: refuse inconsistent speculation configs with
+    # a clear CLI error instead of a deep stack trace mid-serve
+    if args.spec_tokens < 0:
+        ap.error("--spec-tokens must be >= 0")
+    if args.spec_tokens > 0 and args.cache_layout == "dense":
+        ap.error("--spec-tokens requires --cache-layout paged: the dense "
+                 "scan has no block pool to rewind rejected drafts in")
+    if args.spec_tokens > 0 and args.spec_draft == "head" \
+            and args.kv_dtype == "fp8":
+        ap.error("--spec-draft head is not supported with --kv-dtype fp8; "
+                 "use --spec-draft ngram")
+    return args
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.core import attn_spec
 from repro.models import model
 from repro.optim import optimizers as opt
 
@@ -65,8 +66,10 @@ def make_train_step(cfg, tcfg: TrainConfig):
 def make_serve_step(cfg, *, mode: str = "etap"):
     """serve_step(params, cache, tokens, pos) -> (logits, cache): one decode
     token against the existing KV/state cache (the paper's workload)."""
+    spec = attn_spec.AttnSpec(mode=mode)
+
     def serve_step(params, cache, tokens, pos):
-        return model.decode_step(params, cfg, cache, tokens, pos, mode=mode)
+        return model.decode_step(params, cfg, cache, tokens, pos, spec=spec)
     return serve_step
 
 

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import attn_spec
 from repro.core.etap import (decode_attention, gqa_decode_xla, gqa_to_grouped,
                              seq_sharded_gqa_decode)
 from repro.models import layers
@@ -127,30 +128,28 @@ def local_attention(q, k, v, *, window: int, scale: float):
 
 
 # ------------------------------------------------------------------- decode
-def gqa_decode(q, k_cache, v_cache, length, *, scale: float, mode: str,
-               use_kernels: bool = False, block: int = 512, n_splits=None):
+def gqa_decode(q, k_cache, v_cache, length, *, spec=None, **legacy):
     """One-token decode against a [B,S,K,D] cache. q: [B,H,D] -> [B,H,Dv].
-    `mode` selects ETAP (paper) vs standard (baseline) pipelines.
+    `spec.mode` selects ETAP (paper) vs standard (baseline) pipelines.
     The XLA path streams the cache in its native layout (no reshuffle copy);
     the Pallas path (tests/benchmarks) uses the grouped [BG,...] form.
-    n_splits: split-KV count (None = auto-scheduled on the kernel path).
-    An EXPLICIT n_splits > 1 on the XLA etap path is honoured through the
-    grouped form — that costs the cache reshuffle copy, so it is opt-in
-    rather than auto there."""
+    spec.kv_splits: split-KV count (None = auto-scheduled on the kernel
+    path).  An EXPLICIT kv_splits > 1 on the XLA etap path is honoured
+    through the grouped form — that costs the cache reshuffle copy, so it
+    is opt-in rather than auto there."""
+    spec = attn_spec.coerce(spec, legacy, where="gqa_decode")
     B, H, D = q.shape
     K = k_cache.shape[2]
-    want_xla_split = (not use_kernels and mode == "etap"
-                     and n_splits is not None and n_splits > 1)
-    if use_kernels or want_xla_split:
+    n_splits = spec.kv_splits
+    want_xla_split = (not spec.use_kernels and spec.mode == "etap"
+                      and n_splits is not None and n_splits > 1)
+    if spec.use_kernels or want_xla_split:
         qg, kg, vg, restore = gqa_to_grouped(q, k_cache, v_cache)
         lg = jnp.repeat(length, K) if length.ndim else jnp.full((B * K,), length)
-        o = decode_attention(qg, kg, vg, lg, scale=scale, mode=mode,
-                             use_kernels=use_kernels, block=block,
-                             n_splits=n_splits)
+        o = decode_attention(qg, kg, vg, lg, spec=spec)
         return restore(o)
     q4 = q.reshape(B, K, H // K, D)
-    return gqa_decode_xla(q4, k_cache, v_cache, length, scale=scale,
-                          mode=mode, block=block)
+    return gqa_decode_xla(q4, k_cache, v_cache, length, spec=spec)
 
 
 # --------------------------------------------------------- attention module
@@ -197,11 +196,12 @@ def attention_train(params, cfg, x, positions, *, return_cache: bool = False):
     return out
 
 
-def attention_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
-                     n_splits=None):
+def attention_decode(params, cfg, x, cache, pos, *, spec=None, **legacy):
     """x: [B,D] one token; cache: {"k","v"}: [B,S,K,hd] (ring buffer of size
     window for local attention). Returns (out [B,D], new cache).
-    n_splits: split-KV count for the kernel decode path (None = auto)."""
+    spec.kv_splits: split-KV count for the kernel decode path (None = auto);
+    the per-layer scale and cfg.use_kernels are folded into the spec here."""
+    spec = attn_spec.coerce(spec, legacy, where="attention_decode")
     B, D = x.shape
     positions = jnp.full((B, 1), pos, jnp.int32)
     q, k, v = _project_qkv(params, cfg, x[:, None, :], positions)
@@ -224,8 +224,8 @@ def attention_decode(params, cfg, x, cache, pos, *, mode: str = "etap",
         vc = jax.lax.dynamic_update_index_in_dim(cache["v"], v, slot, 1)
         length = jnp.minimum(pos + 1, Smax)
         o = gqa_decode(q, kc, vc, jnp.full((B,), length, jnp.int32),
-                       scale=scale, mode=mode, use_kernels=cfg.use_kernels,
-                       n_splits=n_splits)
+                       spec=spec.replace(scale=scale,
+                                         use_kernels=cfg.use_kernels))
     out = layers.dense(o.reshape(B, -1), params["w_o"])
     return out, {"k": kc, "v": vc}
 
@@ -261,7 +261,7 @@ def _gather_paged_kv(cache, table):
 
 
 def attention_decode_paged(params, cfg, x, cache, table, lengths, *,
-                           mode: str = "etap", n_splits=None):
+                           spec=None, **legacy):
     """One-token GQA decode against a PAGED cache: {"k","v"} pools of shape
     [num_blocks, page, K, hd], a shared block table and per-sequence
     lengths (ragged — each new token lands at its own `lengths[b]`).
@@ -272,6 +272,7 @@ def attention_decode_paged(params, cfg, x, cache, table, lengths, *,
     axis the grouped paged kernels don't stride over (yet), so only MLA
     (the paper's serving path) streams its pool in place.  Local-window
     attention keeps its dense ring buffer (a window never pages)."""
+    spec = attn_spec.coerce(spec, legacy, where="attention_decode_paged")
     assert cfg.attention_kind == "full", \
         "paged cache supports full attention (local windows stay dense)"
     B, D = x.shape
@@ -283,9 +284,9 @@ def attention_decode_paged(params, cfg, x, cache, table, lengths, *,
     if "k_sz" in cache:
         q = q.astype(jnp.float32)         # match the dequantized fp32 rows
     o = gqa_decode(q, kd, vd, lengths + 1,
-                   scale=cfg.resolved_head_dim ** -0.5, mode=mode,
-                   use_kernels=cfg.use_kernels,
-                   block=cache["k"].shape[1], n_splits=n_splits)
+                   spec=spec.replace(scale=cfg.resolved_head_dim ** -0.5,
+                                     use_kernels=cfg.use_kernels,
+                                     block=cache["k"].shape[1]))
     # back to the model dtype: under a quantized layout the dequantized
     # rows (and hence gqa_decode's output) are fp32 — without the cast
     # every decode step's residual stream would silently promote
@@ -293,23 +294,14 @@ def attention_decode_paged(params, cfg, x, cache, table, lengths, *,
     return out, new_cache
 
 
-def attention_prefill_chunk(params, cfg, x, cache, table, lengths, *,
-                            mode: str = "etap"):
-    """CHUNKED prefill of C prompt tokens against a PAGED GQA cache.
-
-    x: [B,C,D]; cache: {"k","v"} pools [num_blocks, page, K, hd]; table:
-    [B,max_blocks]; lengths: [B] tokens already written (the chunk start).
-    The chunk's K/V rows are appended through the table first; attention
-    then gathers the pool into the native dense [B,S,K,hd] layout and runs
-    a causally-masked chunk-vs-context product — same correctness-first
-    gather route as :func:`attention_decode_paged` (the GQA pool carries a
-    kv-head axis the paged kernels don't stride over; MLA, the paper's
-    serving path, streams its pool in place via core.etap)."""
-    assert cfg.attention_kind == "full", \
-        "paged cache supports full attention (local windows stay dense)"
-    del mode
+def _attention_chunk(params, cfg, x, cache, table, lengths, positions):
+    """Shared body of chunked prefill and draft verification over the paged
+    GQA cache: append the chunk's K/V rows, gather, run the masked
+    chunk-vs-context product.  ``positions`` [B,C] drives rope AND the
+    per-row causal horizon (key position p live for row c iff
+    p <= positions[b, c]) — prefill passes start + row index, verification
+    passes the explicit draft-row horizons (identical on linear chains)."""
     B, C, D = x.shape
-    positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     q, k, v = _project_qkv(params, cfg, x, positions)  # [B,C,H,hd],[B,C,K,hd]
     new_cache = _append_paged_kv(cache, table, lengths, k, v)
     kd, vd = _gather_paged_kv(new_cache, table)               # [B,S,K,hd]
@@ -329,6 +321,41 @@ def attention_prefill_chunk(params, cfg, x, cache, table, lengths, *,
                    preferred_element_type=jnp.float32).astype(v.dtype)
     out = layers.dense(o.reshape(B, C, -1), params["w_o"])
     return out, new_cache
+
+
+def attention_prefill_chunk(params, cfg, x, cache, table, lengths, *,
+                            spec=None, **legacy):
+    """CHUNKED prefill of C prompt tokens against a PAGED GQA cache.
+
+    x: [B,C,D]; cache: {"k","v"} pools [num_blocks, page, K, hd]; table:
+    [B,max_blocks]; lengths: [B] tokens already written (the chunk start).
+    The chunk's K/V rows are appended through the table first; attention
+    then gathers the pool into the native dense [B,S,K,hd] layout and runs
+    a causally-masked chunk-vs-context product — same correctness-first
+    gather route as :func:`attention_decode_paged` (the GQA pool carries a
+    kv-head axis the paged kernels don't stride over; MLA, the paper's
+    serving path, streams its pool in place via core.etap).  The spec is
+    accepted for entry-point parity; this dense-mask route has no knobs."""
+    assert cfg.attention_kind == "full", \
+        "paged cache supports full attention (local windows stay dense)"
+    attn_spec.coerce(spec, legacy, where="attention_prefill_chunk")
+    C = x.shape[1]
+    positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    return _attention_chunk(params, cfg, x, cache, table, lengths, positions)
+
+
+def attention_verify_chunk(params, cfg, x, cache, table, lengths, qpos, *,
+                           spec=None, **legacy):
+    """DRAFT VERIFICATION over the paged GQA cache (DESIGN.md §14): score k
+    draft rows in one chunked-prefill-shaped pass.  qpos: [B,k] each draft
+    row's absolute position; a linear chain (lengths[:, None] + arange(k))
+    makes this bitwise identical to :func:`attention_prefill_chunk`.
+    Rejected rows are rewound by the scheduler via BlockPool.truncate."""
+    assert cfg.attention_kind == "full", \
+        "paged cache supports full attention (local windows stay dense)"
+    attn_spec.coerce(spec, legacy, where="attention_verify_chunk")
+    return _attention_chunk(params, cfg, x, cache, table, lengths,
+                            qpos.astype(jnp.int32))
 
 
 def init_attention_cache(cfg, batch: int, max_len: int, dtype):

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import attn_spec
 from repro.core import mla as mla_mod
 from repro.models import attention, frontend, layers, mamba, moe, rglru
 from repro.sharding.rules import BATCH, constrain
@@ -114,7 +115,7 @@ def _block_seq(params, cfg, sig, x, positions, collect_cache: bool):
     return x + f, aux, cache
 
 
-def _block_decode(params, cfg, sig, x, cache, pos, mode, kv_splits=None,
+def _block_decode(params, cfg, sig, x, cache, pos, spec,
                   cache_layout="dense", block_table=None, lengths=None):
     """One block, one token. x: [B,D]. Returns (x, new_cache).
     cache_layout "paged": the attention cache is a block pool; `pos` is
@@ -126,14 +127,13 @@ def _block_decode(params, cfg, sig, x, cache, pos, mode, kv_splits=None,
             fn = (mla_mod.mla_decode_paged if cfg.attention_kind == "mla"
                   else attention.attention_decode_paged)
             mixed, cache = fn(params["mix"], cfg, h, cache, block_table,
-                              lengths, mode=mode, n_splits=kv_splits)
+                              lengths, spec=spec)
         elif cfg.attention_kind == "mla":
-            mixed, cache = mla_mod.mla_decode(params["mix"], cfg, h, cache, pos,
-                                              mode=mode, n_splits=kv_splits)
+            mixed, cache = mla_mod.mla_decode(params["mix"], cfg, h, cache,
+                                              pos, spec=spec)
         else:
-            mixed, cache = attention.attention_decode(params["mix"], cfg, h, cache,
-                                                      pos, mode=mode,
-                                                      n_splits=kv_splits)
+            mixed, cache = attention.attention_decode(params["mix"], cfg, h,
+                                                      cache, pos, spec=spec)
     elif kind == "rglru":
         mixed, cache = rglru.rglru_decode(params["mix"], cfg, h, cache)
     else:
@@ -357,16 +357,26 @@ def write_paged_blocks(cache, ids, rows):
         cache, rows)
 
 
-def _block_prefill_chunk(params, cfg, sig, x, cache, table, lengths, mode):
+def _block_prefill_chunk(params, cfg, sig, x, cache, table, lengths, spec,
+                         qpos=None):
     """One block over a C-token prompt chunk against the paged cache.
     x: [B,C,D].  Paged caches are attention-only (init_paged_cache), so
-    the recurrent/SSM kinds never reach here."""
+    the recurrent/SSM kinds never reach here.  qpos [B,C] switches the
+    attention layer to its draft-verification twin (explicit per-row
+    causal horizon — DESIGN.md §14); everything else is identical."""
     kind, is_moe = sig
     assert kind == "attn", kind
     h = layers.rms_norm(x, params["norm1"], cfg.norm_eps)
-    fn = (mla_mod.mla_prefill_chunk if cfg.attention_kind == "mla"
-          else attention.attention_prefill_chunk)
-    mixed, cache = fn(params["mix"], cfg, h, cache, table, lengths, mode=mode)
+    if qpos is None:
+        fn = (mla_mod.mla_prefill_chunk if cfg.attention_kind == "mla"
+              else attention.attention_prefill_chunk)
+        mixed, cache = fn(params["mix"], cfg, h, cache, table, lengths,
+                          spec=spec)
+    else:
+        fn = (mla_mod.mla_verify_chunk if cfg.attention_kind == "mla"
+              else attention.attention_verify_chunk)
+        mixed, cache = fn(params["mix"], cfg, h, cache, table, lengths,
+                          qpos, spec=spec)
     x = x + mixed
     h2 = layers.rms_norm(x, params["norm2"], cfg.norm_eps)
     if is_moe:
@@ -385,7 +395,7 @@ def _block_prefill_chunk(params, cfg, sig, x, cache, table, lengths, mode):
 
 
 def prefill_chunk(params, cfg, cache, tokens, block_table, lengths, *,
-                  mode: str = "etap"):
+                  spec=None, **legacy):
     """CHUNKED paged prefill: run C prompt tokens per sequence directly
     against the block-pool serving cache (DESIGN.md §9).
 
@@ -404,6 +414,14 @@ def prefill_chunk(params, cfg, cache, tokens, block_table, lengths, *,
     the match length, and only the unmatched prompt TAIL ever runs through
     here.  Returns (logits [B,C,V], new cache); the final chunk's
     last-position logits seed the first decode token."""
+    spec = attn_spec.coerce(spec, legacy, where="prefill_chunk")
+    return _chunk_forward(params, cfg, cache, tokens, block_table, lengths,
+                          spec)
+
+
+def _chunk_forward(params, cfg, cache, tokens, block_table, lengths, spec,
+                   qpos=None):
+    """Shared chunk-shaped forward of prefill_chunk and verify_step."""
     x = constrain(layers.embed(params["embed"], tokens), P(BATCH, None, None))
     groups = layer_groups(cfg)
     new_caches = []
@@ -414,7 +432,7 @@ def prefill_chunk(params, cfg, cache, tokens, block_table, lengths, *,
             for j, sig in enumerate(g["sigs"]):
                 x, nc = _block_prefill_chunk(lp[f"b{j}"], cfg, sig, x,
                                              lc[f"b{j}"], block_table,
-                                             lengths, mode)
+                                             lengths, spec, qpos)
                 ncs[f"b{j}"] = nc
             return x, ncs
         x, gc_new = jax.lax.scan(body, x, (gparams, gcache))
@@ -422,6 +440,29 @@ def prefill_chunk(params, cfg, cache, tokens, block_table, lengths, *,
     x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = layers.unembed(params["embed"], x)
     return logits, new_caches
+
+
+def verify_step(params, cfg, cache, tokens, block_table, lengths, *,
+                spec=None, qpos=None, **legacy):
+    """Score k draft tokens per sequence in ONE chunked-prefill-shaped pass
+    (DESIGN.md §14) — the verification half of draft-then-verify decoding.
+
+    tokens: [B,k] — row 0 is each sequence's last committed token, rows
+    1..k-1 the draft continuation; the pass both APPENDS their KV rows into
+    the paged pool at `lengths` (in-cache verification — the accepted
+    prefix's rows are already where decode needs them) and returns logits
+    for every draft position.  qpos: [B,k] per-row absolute positions; None
+    → the linear chain lengths[:, None] + arange(k), under which this is
+    bitwise identical to :func:`prefill_chunk` on the same tokens.  The
+    caller pre-extends the block budget (BlockPool.extend) and rewinds the
+    rejected tail afterwards (BlockPool.truncate(..., free_blocks=False)).
+    Returns (logits [B,k,V], new cache)."""
+    spec = attn_spec.coerce(spec, legacy, where="verify_step")
+    if qpos is None:
+        k = tokens.shape[1]
+        qpos = lengths[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    return _chunk_forward(params, cfg, cache, tokens, block_table, lengths,
+                          spec, qpos.astype(jnp.int32))
 
 
 def _pad_cache_rows(cfg, sig, cache_rows, max_len, batch_s):
@@ -458,20 +499,23 @@ def prefill(params, cfg, batch, max_len: int):
     return logits[:, -1, :], padded, S
 
 
-def decode_step(params, cfg, cache, tokens, pos, *, mode: str = "etap",
-                kv_splits=None, cache_layout: str = "dense",
-                block_table=None, lengths=None):
+def decode_step(params, cfg, cache, tokens, pos, *, spec=None,
+                cache_layout: str = "dense",
+                block_table=None, lengths=None, **legacy):
     """One serving step. tokens: [B] int32; pos: scalar index of the new token.
-    Returns (logits [B,V], new_cache). kv_splits: split-KV count for decode
-    attention (None = auto-scheduled per layer geometry — serving picks up
-    split-KV with zero caller changes; exception: the native-layout GQA XLA
-    path only splits on an explicit count, since splitting there costs a
-    cache reshuffle copy — see models/attention.gqa_decode).
+    Returns (logits [B,V], new_cache). spec: one AttnSpec carrying mode /
+    kv_splits / rescale for every attention layer (legacy mode=/kv_splits=
+    keywords shim through attn_spec.coerce).  spec.kv_splits None =
+    auto-scheduled per layer geometry — serving picks up split-KV with zero
+    caller changes; exception: the native-layout GQA XLA path only splits
+    on an explicit count, since splitting there costs a cache reshuffle
+    copy — see models/attention.gqa_decode.
 
     cache_layout "paged" (the serving default in launch/serve.py): `cache`
     is the pool pytree from :func:`init_paged_cache`, and `block_table`
     [B, max_blocks] + per-sequence `lengths` [B] replace the shared scalar
     `pos` — ragged sequences decode in one batch (continuous batching)."""
+    spec = attn_spec.coerce(spec, legacy, where="decode_step")
     assert cache_layout in ("dense", "paged"), cache_layout
     if cache_layout == "paged":
         assert block_table is not None and lengths is not None
@@ -484,7 +528,7 @@ def decode_step(params, cfg, cache, tokens, pos, *, mode: str = "etap",
             ncs = {}
             for j, sig in enumerate(g["sigs"]):
                 x, nc = _block_decode(lp[f"b{j}"], cfg, sig, x, lc[f"b{j}"],
-                                      pos, mode, kv_splits,
+                                      pos, spec,
                                       cache_layout=cache_layout,
                                       block_table=block_table,
                                       lengths=lengths)

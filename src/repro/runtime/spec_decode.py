@@ -1,0 +1,107 @@
+"""Draft proposers + greedy acceptance for speculative decoding
+(DESIGN.md §14).
+
+The serve loop's draft-then-verify step is split in three:
+
+  1. a cheap host-side DRAFT proposer (this module) guesses k-1 tokens
+     continuing the committed stream;
+  2. ONE chunked-prefill-shaped verify pass (model.verify_step) scores
+     [cur, d_1, .., d_{k-1}] against the paged pool in a single launch;
+  3. greedy ACCEPTANCE (:func:`accept_greedy`, this module) keeps the
+     longest prefix of drafts that match the model's own argmax chain,
+     and the scheduler rewinds the rejected tail with
+     BlockPool.truncate(..., free_blocks=False).
+
+Proposers are deliberately model-free or near-free: speculation only pays
+when drafting is much cheaper than a decode step, and greedy acceptance
+makes ANY proposer output-safe — a bad draft costs wasted verify columns,
+never a wrong token (the accepted stream is exactly the one-at-a-time
+greedy stream, which tests/test_spec_decode.py pins bitwise).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+DRAFT_KINDS = ("ngram", "head")
+
+
+def ngram_propose(history, k: int, max_n: int = 4) -> list:
+    """Propose ``k`` tokens continuing ``history`` by longest-suffix n-gram
+    match: for n = max_n..1, find the MOST RECENT earlier occurrence of the
+    length-n suffix and propose the tokens that followed it (repetitive
+    decode traces — loops, boilerplate — make this accurate and free).
+    Falls back to repeating the last token.  O(n · L) per candidate n via
+    a vectorized window compare; history lengths here are serve-loop
+    transcripts, not corpora."""
+    h = np.asarray(history, dtype=np.int64).ravel()
+    L = int(h.size)
+    assert L >= 1 and k >= 1
+    for n in range(min(max_n, L - 1), 0, -1):
+        suf = h[L - n:]
+        # windows[i] == h[i:i+n]; candidate starts exclude the suffix itself
+        windows = np.lib.stride_tricks.sliding_window_view(h, n)[: L - n]
+        hits = np.nonzero((windows == suf[None, :]).all(axis=1))[0]
+        if hits.size:
+            j = int(hits[-1]) + n             # continuation of latest match
+            cont = h[j: j + k]
+            if cont.size:
+                out = cont.tolist()
+                while len(out) < k:           # match ran into the suffix
+                    out.append(out[-1])
+                return [int(t) for t in out]
+    return [int(h[-1])] * k
+
+
+class HeadDraft:
+    """Self-draft "head" proposer stand-in: a greedy next-token table from
+    embedding similarity, ``next(t) = argmax_{t' != t} E[t] · E[t']``,
+    chained k times.  It is the shape of a learned draft head (one matmul
+    per token, no KV cache) without training machinery; fp8 pools are
+    declared unsupported (launch/serve.py validates the flag combo) to
+    exercise the CLI combo-validation path."""
+
+    def __init__(self, embed):
+        e = np.asarray(embed, np.float32)
+        sim = e @ e.T
+        np.fill_diagonal(sim, -np.inf)        # a real chain, not cur repeated
+        self.table = np.argmax(sim, axis=1).astype(np.int64)
+
+    def propose(self, history, k: int, **_) -> list:
+        t = int(np.asarray(history).ravel()[-1])
+        out = []
+        for _ in range(k):
+            t = int(self.table[t])
+            out.append(t)
+        return out
+
+
+def make_drafter(kind: str, params):
+    """Proposer factory for the serve loop: ``propose(history, k) -> [k]``.
+    ``params`` is the model param pytree (the head drafter reads the
+    embedding table; ngram needs nothing)."""
+    if kind == "ngram":
+        return ngram_propose
+    if kind == "head":
+        return HeadDraft(params["embed"]).propose
+    raise ValueError(f"unknown draft kind {kind!r} (want one of {DRAFT_KINDS})")
+
+
+def accept_greedy(drafts, preds) -> tuple:
+    """Greedy acceptance rule (DESIGN.md §14).
+
+    ``drafts``: the k-1 proposed tokens d_1..d_{k-1}; ``preds``: the k
+    verify-pass argmaxes n_0..n_{k-1}, where n_i is the model's greedy
+    next token after verify row i (row 0 is the committed token ``cur``).
+    Draft d_{i+1} is correct iff it equals n_i AND every earlier draft was
+    accepted (a later match after a miss scored against a wrong context).
+    Returns ``(accepted, next_token)``: the accepted draft count and the
+    model's continuation after the last accepted row — exactly the tokens
+    one-at-a-time greedy decode would have produced."""
+    preds = [int(p) for p in np.asarray(preds).ravel()]
+    a = 0
+    for d in drafts:
+        if int(d) == preds[a]:
+            a += 1
+        else:
+            break
+    return a, preds[a]

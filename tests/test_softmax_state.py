@@ -279,3 +279,63 @@ def test_rmse_quant_vs_fp64_oracle(mode, fp64_oracle):
                                              rescale=mode)
         rmse = fp64_oracle.rmse(out, ref)
         assert rmse <= budgets[kvd], (kvd, mode, rmse)
+
+
+# ------------------------------------------------------- AttnSpec API
+def test_attn_spec_shim_bitwise_equals_spec():
+    """The legacy-keyword shim and the AttnSpec call are the SAME call:
+    bitwise-equal outputs, with the shim announcing its deprecation."""
+    from repro.core import attn_spec
+    q = jnp.asarray(RNG.normal(size=(1, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 128, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 128, 16)), jnp.float32)
+    with pytest.warns(DeprecationWarning):
+        legacy = etap_ops.etap_decode(q, k, v, None, scale=32 ** -0.5,
+                                      block=32, rescale="mul")
+    spec = etap_ops.etap_decode(
+        q, k, v, None,
+        spec=attn_spec.AttnSpec(scale=32 ** -0.5, block=32, rescale="mul"))
+    _assert_bitwise(spec, legacy, "shim and spec paths diverged")
+    # the n_splits -> kv_splits alias maps through the same shim
+    with pytest.warns(DeprecationWarning):
+        leg2 = etap_ops.etap_decode_splitkv(q, k, v, None, scale=32 ** -0.5,
+                                            block=32, n_splits=2)
+    spec2 = etap_ops.etap_decode_splitkv(
+        q, k, v, None,
+        spec=attn_spec.AttnSpec(scale=32 ** -0.5, block=32, kv_splits=2))
+    _assert_bitwise(spec2, leg2, "n_splits alias diverged")
+
+
+def test_attn_spec_rejects_spec_plus_legacy():
+    from repro.core import attn_spec
+    q = jnp.asarray(RNG.normal(size=(1, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 16, 32)), jnp.float32)
+    with pytest.raises(TypeError):
+        etap_ops.etap_decode(q, k, k[..., :16], None,
+                             spec=attn_spec.AttnSpec(scale=32 ** -0.5),
+                             block=16)
+
+
+def test_attn_spec_unused_field_flip_does_not_retrace():
+    """Extends the stale-cache flip test above to the WHOLE spec: fields a
+    jitted entry does not use (spec_tokens, spec_draft, kv_dtype for a
+    dense decode) are projected to defaults BEFORE the jit cache, so
+    flipping them is a cache hit — while flipping a field the trace DOES
+    depend on (block) retraces."""
+    from repro.core import attn_spec
+    q = jnp.asarray(RNG.normal(size=(1, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 128, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 128, 16)), jnp.float32)
+    jfn = etap_ops.etap_decode.__wrapped_jit__
+    assert "spec_tokens" not in etap_ops.etap_decode.__attn_uses__
+    base = attn_spec.AttnSpec(scale=32 ** -0.5, block=32, rescale="mul")
+    etap_ops.etap_decode(q, k, v, None, spec=base)
+    n0 = jfn._cache_size()
+    for flip in (base.replace(spec_tokens=4),
+                 base.replace(spec_draft="head"),
+                 base.replace(kv_dtype="int8"),
+                 base.replace(kv_splits=8)):   # also unused by etap_decode
+        etap_ops.etap_decode(q, k, v, None, spec=flip)
+    assert jfn._cache_size() == n0, "unused spec field forced a retrace"
+    etap_ops.etap_decode(q, k, v, None, spec=base.replace(block=64))
+    assert jfn._cache_size() == n0 + 1, "used field must retrace"
