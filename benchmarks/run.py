@@ -3,9 +3,10 @@ Prints ``name,us_per_call,derived`` CSV rows (derived = the artifact's
 headline metric).  ``--kv-splits`` runs the split-KV decode sweep instead
 and records per-split-count results to BENCH_splitkv.json.  ``--smoke``
 runs the fast CI subset (kernel interpret paths + paged cache + prefix
-cache + the multi-tenant scheduler + a tiny split-KV sweep) and records
-BENCH_smoke.json + BENCH_prefix.json + BENCH_serve.json + BENCH_spec.json
-+ BENCH_smoke_splitkv.json — the per-PR perf-trajectory artifacts the CI
+cache + the multi-tenant scheduler + speculation + the telemetry layer +
+a tiny split-KV sweep) and records BENCH_smoke.json + BENCH_prefix.json
++ BENCH_serve.json + BENCH_spec.json + BENCH_obs.json +
+BENCH_smoke_splitkv.json — the per-PR perf-trajectory artifacts the CI
 smoke job uploads."""
 from __future__ import annotations
 
@@ -634,6 +635,149 @@ def bench_spec():
     return rows
 
 
+def bench_obs():
+    """Telemetry overhead (DESIGN.md §15) → BENCH_obs.json.
+
+    Same row split as bench_serve: the GATED timings are the host-side
+    telemetry primitives at serving scale (counter incs, log-bucket
+    histogram records, trace ring-buffer events, registry snapshot and
+    histogram merge) — pure Python, no device dispatch, each sized past
+    the 1000us noise floor.  The serve rows are informational (us=0) and
+    carry the overhead accounting.  HARD-asserted before the artifact is
+    written: a ``--trace-out``/``--metrics-out`` serve run is BITWISE
+    output-identical to a plain run on the fp AND int8+prefix-cache legs;
+    the trace validates as Chrome trace-event JSON; the metrics file
+    round-trips with its schema stamp; and the measured per-op cost times
+    the telemetry ops the instrumented run actually performed stays under
+    2% of its decode time — the CI budget for always-on telemetry."""
+    import dataclasses
+    import tempfile
+
+    from repro.configs import get_config, reduced
+    from repro.launch import serve
+    from repro.runtime import telemetry
+
+    rows = []
+    # --- gated: primitive costs at serving scale
+    NC, NH = 200_000, 20_000
+    reg = telemetry.MetricsRegistry()
+    c = reg.counter("bench/ticks")
+    h = reg.histogram("bench/lat_ms")
+    rng = np.random.default_rng(0)
+    vals = np.exp(rng.normal(size=NH)).tolist()
+
+    def inc_xn():
+        for _ in range(NC):
+            c.inc()
+
+    us = _best_of(inc_xn)
+    rows.append((f"obs/counter_inc_x{NC // 1000}k", us,
+                 f"{us * 1e3 / NC:.0f}ns/op"))
+    inc_ns = us * 1e3 / NC
+
+    def record_xn():
+        for v in vals:
+            h.record(v)
+
+    us = _best_of(record_xn)
+    rows.append((f"obs/hist_record_x{NH // 1000}k", us,
+                 f"{us * 1e3 / NH:.0f}ns/op"))
+    rec_ns = us * 1e3 / NH
+
+    tr = telemetry.Tracer(capacity=4096)
+
+    def event_xn():
+        for i in range(NH):
+            tr.instant("tick", tid=i & 7)
+
+    us = _best_of(event_xn)
+    rows.append((f"obs/trace_event_x{NH // 1000}k", us,
+                 f"{us * 1e3 / NH:.0f}ns/op;cap=4096"))
+    evt_ns = us * 1e3 / NH
+
+    full = telemetry.MetricsRegistry()
+    for i in range(64):
+        full.counter(f"bench/c{i}").inc(i)
+    hists = []
+    for i in range(8):
+        hh = full.histogram(f"bench/h{i}")
+        for v in vals[:1000]:
+            hh.record(v * (1 + i))
+        hists.append(hh)
+
+    def snapshot_x100():
+        for _ in range(100):
+            full.snapshot()
+
+    rows.append(("obs/snapshot_x100", _best_of(snapshot_x100),
+                 "64 counters + 8 hists"))
+
+    def merge_x100():
+        for _ in range(100):
+            m = hists[0]
+            for hh in hists[1:]:
+                m = m.merge(hh)
+
+    rows.append(("obs/hist_merge_x100", _best_of(merge_x100),
+                 "8-way merge chain, 1k values each"))
+
+    # --- informational + hard asserts: telemetry-on vs -off serve runs
+    cfg = dataclasses.replace(reduced(get_config("deepseek_r1_671b")),
+                              moe=None)
+    base = ["--reduced", "--batch", "2", "--prompt", "16", "--gen", "8",
+            "--requests", "3", "--page-size", "8", "--prefill-chunk", "8",
+            "--cache-layout", "paged", "--seed", "0"]
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    per_op_ns = max(inc_ns, rec_ns, evt_ns)
+    for leg, extra in (("fp", []),
+                       ("int8", ["--kv-dtype", "int8",
+                                 "--shared-prefix", "2"])):
+        plain = serve.run_paged(serve.parse_args(base + extra), cfg)
+        tpath = os.path.join(tmp, f"trace_{leg}.json")
+        mpath = os.path.join(tmp, f"metrics_{leg}.json")
+        inst = serve.run_paged(serve.parse_args(
+            base + extra + ["--trace-out", tpath, "--metrics-out", mpath]),
+            cfg)
+        assert inst["outputs"] == plain["outputs"], \
+            f"{leg}: telemetry-on outputs diverged from telemetry-off"
+        with open(tpath) as f:
+            trace = json.load(f)
+        evs = trace["traceEvents"]
+        assert evs and all(k in e for e in evs
+                           for k in ("ph", "ts", "pid", "tid", "name"))
+        names = {e["name"] for e in evs}
+        assert {"prefill_chunk", "decode_step"} <= names, names
+        with open(mpath) as f:
+            met = json.load(f)
+        assert met["meta"]["schema_version"] == telemetry.OBS_SCHEMA_VERSION
+        snap = met["metrics"]
+        assert snap["counters"]["serve/decode_tokens"] \
+            == inst["decode_tokens"]
+        # analytic overhead: every op the run performed, priced at the
+        # WORST measured per-op cost, against its decode wall time
+        ops = (sum(snap["counters"].values())
+               + sum(hh["count"] for hh in snap["histograms"].values())
+               + 8 * snap["counters"].get("serve/ticks", 0)  # gauge sets
+               + len(evs))
+        frac = ops * per_op_ns * 1e-9 / max(plain["t_decode"], 1e-9)
+        assert frac <= 0.02, \
+            f"{leg}: modeled telemetry overhead {frac:.2%} > 2% budget"
+        rows.append((f"obs/serve/{leg}", 0.0,
+                     f"ops={ops};overhead={frac:.3%};"
+                     f"tok_s_on={inst['decode_tokens'] / inst['t_decode']:.1f};"
+                     f"tok_s_off="
+                     f"{plain['decode_tokens'] / plain['t_decode']:.1f}"))
+
+    with open("BENCH_obs.json", "w") as f:
+        json.dump({"meta": bench_meta("obs"),
+                   "geometry": {"counter_incs": NC, "hist_records": NH,
+                                "trace_events": NH},
+                   "rows": [{"name": n, "us": us, "derived": str(d)}
+                            for n, us, d in rows]}, f, indent=2)
+    rows.append(("obs/json", 0.0, "BENCH_obs.json"))
+    return rows
+
+
 def bench_splitkv(full: bool = False):
     """Split-KV ETAP decode sweep → CSV rows + BENCH_splitkv.json."""
     from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
@@ -654,12 +798,13 @@ def bench_smoke():
     quantized KV layouts (timings + hard RMSE/capacity asserts), the
     prefix cache, the multi-tenant scheduler (timings + hard bitwise /
     zero-permanent-refusal asserts), speculative decoding (timings + hard
-    bitwise / >1.5x-speedup asserts), and a tiny split-KV sweep.  Writes
-    BENCH_smoke.json (this aggregate) plus the BENCH_paged.json /
-    BENCH_quant.json / BENCH_prefix.json / BENCH_serve.json /
-    BENCH_spec.json / BENCH_smoke_splitkv.json the sub-benches emit (the
-    committed full-sweep BENCH_splitkv.json is only written by
-    --kv-splits)."""
+    bitwise / >1.5x-speedup asserts), the telemetry layer (primitive
+    timings + hard bitwise-identity / ≤2%-overhead asserts), and a tiny
+    split-KV sweep.  Writes BENCH_smoke.json (this aggregate) plus the
+    BENCH_paged.json / BENCH_quant.json / BENCH_prefix.json /
+    BENCH_serve.json / BENCH_spec.json / BENCH_obs.json /
+    BENCH_smoke_splitkv.json the sub-benches emit (the committed
+    full-sweep BENCH_splitkv.json is only written by --kv-splits)."""
     rows = []
     rows += bench_kernels_interpret()
     rows += bench_paged()
@@ -667,6 +812,7 @@ def bench_smoke():
     rows += bench_prefix()
     rows += bench_serve()
     rows += bench_spec()
+    rows += bench_obs()
     from benchmarks.fig1_throughput import run_splitkv, write_splitkv_json
     sk = run_splitkv(full=False, splits=(1, 4))
     # own path: never clobber the committed full-sweep BENCH_splitkv.json
@@ -691,7 +837,8 @@ def main(argv=None) -> None:
                     help="fast CI subset; writes BENCH_smoke.json, "
                          "BENCH_paged.json, BENCH_quant.json, "
                          "BENCH_prefix.json, BENCH_serve.json, "
-                         "BENCH_spec.json and BENCH_smoke_splitkv.json")
+                         "BENCH_spec.json, BENCH_obs.json and "
+                         "BENCH_smoke_splitkv.json")
     ap.add_argument("--full", action="store_true",
                     help="wider sweep geometry")
     ap.add_argument("--rescale", default=os.environ.get("REPRO_RESCALE",

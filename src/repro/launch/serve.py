@@ -19,13 +19,24 @@ Two cache layouts:
       sequence runs every step (useful as the single-request-shape baseline
       and for seq-sharded meshes, which the paged path doesn't cover yet).
 
+Observability (DESIGN.md §15): every stat a run reports is recorded into
+one per-run MetricsRegistry (runtime/telemetry.py) and the ``[serve]``
+summary renders from its snapshot (launch/obs.py) — ``--metrics-out``
+archives the same snapshot as JSON.  ``--trace-out`` records the request
+lifecycle + engine spans into a bounded ring buffer and exports Chrome
+trace-event JSON; ``--profile-kernels N`` times every N-th attention
+launch at the ``attn_entry`` choke point.  Telemetry never touches token
+streams: telemetry-on output is bitwise identical to telemetry-off at
+default sampling (tests/test_telemetry.py + BENCH_obs.json gate it).
+
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek_r1_671b \
         --reduced --batch 4 --prompt 64 --gen 32 --mode etap \
-        --cache-layout paged --requests 8
+        --cache-layout paged --requests 8 --trace-out /tmp/trace.json
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
 from collections import deque
@@ -37,8 +48,9 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.core import attn_spec
 from repro.kernels import softmax_state
+from repro.launch import obs
 from repro.models import model
-from repro.runtime import scheduler, spec_decode
+from repro.runtime import scheduler, spec_decode, telemetry
 from repro.runtime.fault_tolerance import (FailureInjector,
                                            HeartbeatRegistry, WorkerFailure)
 from repro.runtime.paged_cache import (KV_LAYOUTS, BlockPool,
@@ -47,6 +59,7 @@ from repro.runtime.prefix_cache import PrefixCache
 
 
 def run_dense(args, cfg) -> dict:
+    reg = telemetry.MetricsRegistry()
     rng = jax.random.PRNGKey(args.seed)
     params = model.init(rng, cfg)
     B, S = args.batch, args.prompt
@@ -86,15 +99,22 @@ def run_dense(args, cfg) -> dict:
     # tokens served == B * gen here — but it is counted, not assumed, to
     # match the continuous-batching report.
     tokens_served = int(gen.shape[0] * gen.shape[1])
-    print(f"[serve] arch={args.arch} layout=dense mode={args.mode} "
-          f"rescale={softmax_state.default_mode()} "
-          f"B={B} prompt={S} gen={args.gen}")
-    print(f"[serve] prefill {t_prefill*1e3:.1f}ms; decode "
-          f"{t_decode/args.gen*1e3:.2f}ms/token "
-          f"({tokens_served/t_decode:.1f} tok/s, {tokens_served} tokens)")
-    print(f"[serve] sample generation (seq 0): {gen[0][:16].tolist()}")
+    reg.counter("serve/decode_tokens").inc(tokens_served)
+    reg.counter("serve/decode_steps").inc(int(args.gen))
+    snap = reg.snapshot()
+    if args.metrics_out:
+        obs.write_metrics(args.metrics_out, snap,
+                          config=f"serve:{args.arch}:dense")
+    for line in obs.summarize_dense(snap, {
+            "arch": args.arch, "mode": args.mode,
+            "rescale": softmax_state.default_mode(),
+            "batch": B, "prompt": S, "gen": args.gen,
+            "t_prefill": t_prefill, "t_decode": t_decode,
+            "metrics_path": args.metrics_out,
+            "sample": gen[0][:16].tolist()}):
+        obs.emit(line)
     return {"tokens": gen, "t_prefill": t_prefill, "t_decode": t_decode,
-            "tokens_served": tokens_served}
+            "tokens_served": tokens_served, "metrics": snap}
 
 
 def _make_requests(args, vocab: int):
@@ -207,6 +227,12 @@ def run_paged(args, cfg) -> dict:
     Re-tracing is bounded: prefill_chunk compiles once per distinct chunk
     size, and chunk sizes are min(--prefill-chunk, remaining prompt) over
     the quantized prompt buckets of :func:`_make_requests`."""
+    # one fresh registry per run — back-to-back runs in one process
+    # (tests, benchmarks) must never mix counters.  Every subsystem below
+    # (pool, scheduler, heartbeats, injector, drafter) writes into it.
+    reg = telemetry.MetricsRegistry()
+    tracer = (telemetry.Tracer(capacity=args.trace_buffer)
+              if args.trace_out else None)
     params = model.init(jax.random.PRNGKey(args.seed), cfg)
     B = args.batch
     max_total = args.prompt + args.gen
@@ -226,7 +252,7 @@ def run_paged(args, cfg) -> dict:
     host_blocks = args.host_blocks
     if args.preemption == "swap" and host_blocks == 0:
         host_blocks = layout.num_blocks - 1   # host tier mirrors the pool
-    bp = BlockPool(layout, B, host_blocks=host_blocks)
+    bp = BlockPool(layout, B, host_blocks=host_blocks, metrics=reg)
     prefix = PrefixCache(layout.block_size) if args.prefix_cache else None
     cache = model.init_paged_cache(cfg, layout, kv_dtype=args.kv_dtype)
     pending = deque(sorted(_make_requests(args, cfg.vocab_size),
@@ -257,13 +283,15 @@ def run_paged(args, cfg) -> dict:
         scheduler.SchedulerConfig(
             preemption=args.preemption, slo_ttft_ms=args.slo_ttft,
             slo_itl_ms=args.slo_itl,
-            backoff_cap=max(1, args.retry_backoff)))
-    injector = (FailureInjector.from_rate(args.fault_rate)
+            backoff_cap=max(1, args.retry_backoff)),
+        metrics=reg, tracer=tracer)
+    injector = (FailureInjector.from_rate(args.fault_rate, metrics=reg)
                 if args.fault_rate > 0 else None)
     tick_box = [0]
     # heartbeats on the TICK clock: a beat every tick is alive (gap 1 <=
     # 1.5); the skipped beat of a failure tick (gap 2) trips dead()
-    hb = HeartbeatRegistry(timeout_s=1.5, clock=lambda: float(tick_box[0]))
+    hb = HeartbeatRegistry(timeout_s=1.5, clock=lambda: float(tick_box[0]),
+                           metrics=reg)
     WORKER = "decode-worker-0"
 
     # the cache pytree is DONATED through both jitted entries (as the dense
@@ -274,10 +302,36 @@ def run_paged(args, cfg) -> dict:
                               kv_dtype=args.kv_dtype,
                               spec_tokens=args.spec_tokens,
                               spec_draft=args.spec_draft)
-    step_fn = jax.jit(lambda p, c, t, table, lengths: model.decode_step(
-        p, cfg, c, t, None, spec=spec, cache_layout="paged",
-        block_table=table, lengths=lengths),
-        donate_argnums=(1,))
+    profile_every = args.profile_kernels
+    if profile_every:
+        # --profile-kernels: (a) route attention through the Pallas kernel
+        # entries — the attn_entry choke point wraps THOSE; the XLA
+        # reference path is plain functions with nothing to hook — and
+        # (b) run the outer step/prefill/verify callables UNJITTED.  Under
+        # the default outer jit the attention entries are inlined at trace
+        # time (tracer args — the profiler hook must and does skip them);
+        # unjitted, every attn_entry still jits and runs its own compiled
+        # launch, which the choke-point hook can time with
+        # block_until_ready.  Both moves change compilation (not the
+        # math), so the bitwise-identity guarantee is stated for DEFAULT
+        # sampling (profiling off) only.
+        cfg = dataclasses.replace(cfg, use_kernels=True)
+        def step_fn(p, c, t, table, lengths):
+            return model.decode_step(p, cfg, c, t, None, spec=spec,
+                                     cache_layout="paged",
+                                     block_table=table, lengths=lengths)
+
+        def prefill_fn(p, cch, t, table, lens):
+            return model.prefill_chunk(p, cfg, cch, t, table, lens,
+                                       spec=spec)
+    else:
+        step_fn = jax.jit(lambda p, c, t, table, lengths: model.decode_step(
+            p, cfg, c, t, None, spec=spec, cache_layout="paged",
+            block_table=table, lengths=lengths),
+            donate_argnums=(1,))
+        prefill_fn = jax.jit(
+            lambda p, cch, t, table, lens: model.prefill_chunk(
+                p, cfg, cch, t, table, lens, spec=spec), donate_argnums=(1,))
     # warm the decode step OUTSIDE the timed region (the dense path also
     # compiles before its timer): all slots inactive → the dummy rows land
     # in the reserved null block, so rebinding the returned cache (the
@@ -288,10 +342,6 @@ def run_paged(args, cfg) -> dict:
                                        table0, lengths0)
     jax.block_until_ready(logits0)
 
-    # one jitted entry — jax.jit caches per chunk-size shape on its own
-    prefill_fn = jax.jit(lambda p, cch, t, table, lens: model.prefill_chunk(
-        p, cfg, cch, t, table, lens, spec=spec), donate_argnums=(1,))
-
     # speculative decode (DESIGN.md §14): a host-side drafter proposes
     # k-1 tokens per eligible slot and ONE prefill-shaped verify launch
     # scores all k positions; greedy acceptance keeps the delivered stream
@@ -299,9 +349,17 @@ def run_paged(args, cfg) -> dict:
     k_max = args.spec_tokens
     verify_fn = drafter = None
     if k_max > 0:
-        drafter = spec_decode.make_drafter(args.spec_draft, params)
-        verify_fn = jax.jit(lambda p, c, t, table, lengths: model.verify_step(
-            p, cfg, c, t, table, lengths, spec=spec), donate_argnums=(1,))
+        drafter = spec_decode.make_drafter(args.spec_draft, params,
+                                           metrics=reg)
+        if profile_every:
+            def verify_fn(p, c, t, table, lengths):
+                return model.verify_step(p, cfg, c, t, table, lengths,
+                                         spec=spec)
+        else:
+            verify_fn = jax.jit(
+                lambda p, c, t, table, lengths: model.verify_step(
+                    p, cfg, c, t, table, lengths, spec=spec),
+                donate_argnums=(1,))
         # warm the verify pass outside the timer too, with the same all-
         # null masked launch as step_fn: the k dummy rows land in the null
         # block and compile time never lands in t_decode
@@ -310,219 +368,264 @@ def run_paged(args, cfg) -> dict:
                                              table0, lengths0)
         jax.block_until_ready(logits0)
 
-    tokens_served = 0
-    steps = 0                                 # decode steps
-    spec_steps = 0                            # speculative verify launches
-    spec_proposed = 0                         # draft tokens proposed
-    spec_accepted = 0                         # draft tokens accepted
-    prefill_chunks = 0
-    interleaved_steps = 0                     # decode step + >=1 chunk
-    prefill_tokens = 0                        # prompt tokens actually run
-    replayed_tokens = 0                       # teacher-forced after restore
-    worker_restarts = 0
+    # hot-loop instrument handles: one attribute write per event, no
+    # registry lookup inside the tick loop
+    c_tokens = reg.counter("serve/decode_tokens")
+    c_steps = reg.counter("serve/decode_steps")
+    c_spec_steps = reg.counter("serve/spec_verify_steps")
+    c_spec_prop = reg.counter("serve/spec_proposed")
+    c_spec_acc = reg.counter("serve/spec_accepted")
+    c_chunks = reg.counter("serve/prefill_chunks")
+    c_inter = reg.counter("serve/interleaved_steps")
+    c_pf = reg.counter("serve/prefill_tokens")
+    c_replay = reg.counter("serve/replayed_tokens")
+    c_restarts = reg.counter("serve/worker_restarts")
+    c_ticks = reg.counter("serve/ticks")
+    g_queued = reg.gauge("sched/queued")
+    g_running = reg.gauge("sched/running")
     t_prefill = 0.0
 
+    # profiler installed AFTER warmup: compile-time launches never land in
+    # the records; cleared in the finally so one run can't leak its
+    # profiler into the next
+    prof = None
+    if profile_every:
+        prof = telemetry.KernelProfiler(profile_every)
+        telemetry.set_profiler(prof)
     t0 = time.perf_counter()
-    while pending or sched.queue or sched.by_slot:
-        tick = tick_box[0]
-        now = time.perf_counter()
-        # ---- (0) arrivals + paranoia sweep + heartbeat bookkeeping
-        while pending and pending[0]["arrival"] <= tick:
-            req = pending.popleft()
-            sched.add(scheduler.Request(
-                id=req["id"], prompt=req["prompt"], gen=req["gen"],
-                priority=req["priority"], arrival=req["arrival"]), now)
-        if args.paranoia and tick % args.paranoia == 0:
-            bp.audit()
-        if hb.dead():                         # missed beat = failure tick
-            worker_restarts += 1              # ...worker comes back below
+    try:
+        while pending or sched.queue or sched.by_slot:
+            tick = tick_box[0]
+            now = time.perf_counter()
+            # ---- (0) arrivals + paranoia sweep + heartbeat bookkeeping
+            while pending and pending[0]["arrival"] <= tick:
+                req = pending.popleft()
+                sched.add(scheduler.Request(
+                    id=req["id"], prompt=req["prompt"], gen=req["gen"],
+                    priority=req["priority"], arrival=req["arrival"]), now)
+            if args.paranoia and tick % args.paranoia == 0:
+                bp.audit()
+            if hb.dead():                     # missed beat = failure tick
+                c_restarts.inc()              # ...worker comes back below
+                if tracer is not None:
+                    tracer.instant("worker_restart", args={"tick": tick})
 
-        # ---- (1) admission / restore / preemption (scheduler policy)
-        sched.admit(tick, now)
+            # ---- (1) admission / restore / preemption (scheduler policy)
+            sched.admit(tick, now)
 
-        running = sched.running()
-        dec = [r for r in running if r.decoding]
-        # speculation is restricted to slots with at least k_max deliveries
-        # left (uniform-k launches: start + k_max never exceeds the slot's
-        # reserved budget exactly when remaining >= k_max) that are not
-        # teacher-forcing a restore replay; everything else takes the
-        # plain one-token step below
-        spec_dec = [r for r in dec
-                    if k_max > 0 and not r.replay and r.remaining >= k_max]
-        spec_slots = {r.slot for r in spec_dec}
-        # decode tokens this step (each spec slot runs k_max verify rows)
-        spent = len(dec) + max(0, k_max - 1) * len(spec_dec)
-        # ITL SLO: shrink the prefill share of the budget when delivered
-        # inter-token latency runs hot (no-op at the default budget split)
-        budget_eff = spent + sched.prefill_quota(max(0, budget - spent))
+            running = sched.running()
+            dec = [r for r in running if r.decoding]
+            # speculation is restricted to slots with at least k_max
+            # deliveries left (uniform-k launches: start + k_max never
+            # exceeds the slot's reserved budget exactly when remaining >=
+            # k_max) that are not teacher-forcing a restore replay;
+            # everything else takes the plain one-token step below
+            spec_dec = [r for r in dec
+                        if k_max > 0 and not r.replay and r.remaining >= k_max]
+            spec_slots = {r.slot for r in spec_dec}
+            # decode tokens this step (each spec slot runs k_max verify rows)
+            spent = len(dec) + max(0, k_max - 1) * len(spec_dec)
+            # ITL SLO: shrink the prefill share of the budget when delivered
+            # inter-token latency runs hot (no-op at the default budget split)
+            budget_eff = spent + sched.prefill_quota(max(0, budget - spent))
 
-        # ---- (2) prefill chunks from cold slots under the budget
-        pf_tokens = 0
-        cold = sorted((r for r in running if not r.decoding),
-                      key=lambda r: r.admit_seq)
-        for r in cold:
-            b = r.slot
-            plen = r.plen
-            # trim the first tail chunk onto the global chunk grid: after a
-            # prefix-cache hit (or a restore) at a non-chunk-multiple
-            # offset, the next chunk ends at the grid point, so every later
-            # chunk has the exact shape the uncached run would have used
-            # (bitwise-equal decode, DESIGN.md §10).  Uncached
-            # (pf_pos % chunk == 0) this is the plain min(chunk, remaining).
-            c = min(chunk - r.pf_pos % chunk, plen - r.pf_pos)
-            if spent + c > budget_eff and spent > 0:
-                break                         # budget spent — defer chunk
-            tp = time.perf_counter()
-            toks_c = r.prompt[None, r.pf_pos:r.pf_pos + c]
-            trow = jnp.array(bp.table[b:b + 1])
-            lrow = jnp.array(bp.lengths[b:b + 1])
-            logits, holder["cache"] = prefill_fn(params, holder["cache"],
-                                                 toks_c, trow, lrow)
-            jax.block_until_ready(logits)
-            t_prefill += time.perf_counter() - tp
-            bp.extend(b, c)
-            r.pf_pos += c
-            spent += c
-            pf_tokens += c
-            prefill_tokens += c
-            prefill_chunks += 1
-            if r.pf_pos == plen:              # prompt done -> start decoding
-                seed = int(jnp.argmax(logits[0, -1]))
-                if r.replay:
-                    # restored victim: the re-prefill must re-derive the
-                    # first delivered token bit-for-bit (grid invariant)
-                    assert seed == r.replay[0], \
-                        f"request {r.id}: restore diverged at prefill " \
-                        f"(got {seed}, delivered {r.replay[0]})"
-                else:
-                    r.cur = seed
-                r.decoding = True
-                if prefix is not None:
-                    # cache the prompt's full blocks NOW (not at release):
-                    # queued requests share them while this one decodes
-                    prefix.insert(np.asarray(r.prompt), bp.block_ids(b), bp)
-
-        # ---- (3) one ragged decode step over the decoding slots
-        if dec:
-            if injector is not None:
-                try:
-                    injector.check(tick)
-                except WorkerFailure:
-                    # the decode worker died mid-step: its outputs never
-                    # land — requeue the victim through the recompute
-                    # path and skip the step (no beat → dead() next tick)
-                    victim = max(dec, key=lambda r: r.slot)
-                    sched.fail_running(victim.slot, tick)
-                    tick_box[0] += 1
-                    continue
-            # mask cold slots (and, for each launch, the OTHER launch's
-            # slots) to the null block: the decode write for them must not
-            # land inside a half-prefilled prompt or a live sequence
-            plain = [r for r in dec if r.slot not in spec_slots]
-            if plain:
-                plain_slots = {r.slot for r in plain}
-                table_m = bp.table.copy()
-                lens_m = bp.lengths.copy()
-                cur_arr = np.zeros((B,), np.int64)
-                for b in range(B):
-                    if b not in plain_slots:
-                        table_m[b] = 0
-                        lens_m[b] = 0
-                for r in plain:
-                    cur_arr[r.slot] = r.replay[0] if r.replay else r.cur
-                logits, holder["cache"] = step_fn(
-                    params, holder["cache"], jnp.array(cur_arr, jnp.int32),
-                    jnp.array(table_m), jnp.array(lens_m))
-                nxt = np.asarray(jnp.argmax(logits, axis=-1))
-                steps += 1
-                if pf_tokens:
-                    interleaved_steps += 1
-
-                # ---- retire / bookkeep (host side)
-                now = time.perf_counter()
-                for r in plain:
-                    b = r.slot
+            # ---- (2) prefill chunks from cold slots under the budget
+            pf_tokens = 0
+            cold = sorted((r for r in running if not r.decoding),
+                          key=lambda r: r.admit_seq)
+            for r in cold:
+                b = r.slot
+                plen = r.plen
+                # trim the first tail chunk onto the global chunk grid:
+                # after a prefix-cache hit (or a restore) at a non-chunk-
+                # multiple offset, the next chunk ends at the grid point,
+                # so every later chunk has the exact shape the uncached run
+                # would have used (bitwise-equal decode, DESIGN.md §10).
+                # Uncached (pf_pos % chunk == 0) this is the plain
+                # min(chunk, remaining).
+                c = min(chunk - r.pf_pos % chunk, plen - r.pf_pos)
+                if spent + c > budget_eff and spent > 0:
+                    break                     # budget spent — defer chunk
+                tp = time.perf_counter()
+                ts = tracer.now_us() if tracer is not None else 0.0
+                toks_c = r.prompt[None, r.pf_pos:r.pf_pos + c]
+                trow = jnp.array(bp.table[b:b + 1])
+                lrow = jnp.array(bp.lengths[b:b + 1])
+                logits, holder["cache"] = prefill_fn(params, holder["cache"],
+                                                     toks_c, trow, lrow)
+                jax.block_until_ready(logits)
+                t_prefill += time.perf_counter() - tp
+                if tracer is not None:
+                    tracer.complete("prefill_chunk", ts,
+                                    args={"req": r.id, "tokens": c,
+                                          "pf_pos": r.pf_pos})
+                bp.extend(b, c)
+                r.pf_pos += c
+                spent += c
+                pf_tokens += c
+                c_pf.inc(c)
+                c_chunks.inc()
+                if r.pf_pos == plen:          # prompt done -> start decoding
+                    seed = int(jnp.argmax(logits[0, -1]))
                     if r.replay:
-                        # teacher-forced replay: the token was already
-                        # delivered before preemption — rebuild its KV row
-                        # and assert the decode path re-derives the NEXT
-                        # token bit-for-bit (the bitwise-restore guarantee
-                        # made falsifiable at every replayed position)
-                        fed = r.replay.popleft()
-                        bp.append(b)
-                        expect = r.replay[0] if r.replay else r.cur
-                        assert int(nxt[b]) == int(expect), \
-                            f"request {r.id}: replay diverged after token " \
-                            f"{fed} (got {int(nxt[b])}, " \
-                            f"expected {int(expect)})"
-                        replayed_tokens += 1
+                        # restored victim: the re-prefill must re-derive the
+                        # first delivered token bit-for-bit (grid invariant)
+                        assert seed == r.replay[0], \
+                            f"request {r.id}: restore diverged at prefill " \
+                            f"(got {seed}, delivered {r.replay[0]})"
                     else:
-                        sched.deliver(r, r.cur, now)
-                        tokens_served += 1
-                        bp.append(b)
-                        r.cur = int(nxt[b])
+                        r.cur = seed
+                    r.decoding = True
+                    if prefix is not None:
+                        # cache the prompt's full blocks NOW (not at
+                        # release): queued requests share them while this
+                        # one decodes
+                        prefix.insert(np.asarray(r.prompt), bp.block_ids(b),
+                                      bp)
+
+            # ---- (3) one ragged decode step over the decoding slots
+            if dec:
+                if injector is not None:
+                    try:
+                        injector.check(tick)
+                    except WorkerFailure:
+                        # the decode worker died mid-step: its outputs
+                        # never land — requeue the victim through the
+                        # recompute path and skip the step (no beat →
+                        # dead() next tick)
+                        victim = max(dec, key=lambda r: r.slot)
+                        sched.fail_running(victim.slot, tick)
+                        tick_box[0] += 1
+                        continue
+                # mask cold slots (and, for each launch, the OTHER
+                # launch's slots) to the null block: the decode write for
+                # them must not land inside a half-prefilled prompt or a
+                # live sequence
+                plain = [r for r in dec if r.slot not in spec_slots]
+                if plain:
+                    plain_slots = {r.slot for r in plain}
+                    table_m = bp.table.copy()
+                    lens_m = bp.lengths.copy()
+                    cur_arr = np.zeros((B,), np.int64)
+                    for b in range(B):
+                        if b not in plain_slots:
+                            table_m[b] = 0
+                            lens_m[b] = 0
+                    for r in plain:
+                        cur_arr[r.slot] = r.replay[0] if r.replay else r.cur
+                    ts = tracer.now_us() if tracer is not None else 0.0
+                    logits, holder["cache"] = step_fn(
+                        params, holder["cache"], jnp.array(cur_arr, jnp.int32),
+                        jnp.array(table_m), jnp.array(lens_m))
+                    nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                    if tracer is not None:
+                        tracer.complete("decode_step", ts,
+                                        args={"slots": len(plain)})
+                    c_steps.inc()
+                    if pf_tokens:
+                        c_inter.inc()
+
+                    # ---- retire / bookkeep (host side)
+                    now = time.perf_counter()
+                    for r in plain:
+                        b = r.slot
+                        if r.replay:
+                            # teacher-forced replay: the token was already
+                            # delivered before preemption — rebuild its KV
+                            # row and assert the decode path re-derives the
+                            # NEXT token bit-for-bit (the bitwise-restore
+                            # guarantee made falsifiable at every replayed
+                            # position)
+                            fed = r.replay.popleft()
+                            bp.append(b)
+                            expect = r.replay[0] if r.replay else r.cur
+                            assert int(nxt[b]) == int(expect), \
+                                f"request {r.id}: replay diverged after " \
+                                f"token {fed} (got {int(nxt[b])}, " \
+                                f"expected {int(expect)})"
+                            c_replay.inc()
+                        else:
+                            sched.deliver(r, r.cur, now)
+                            c_tokens.inc()
+                            bp.append(b)
+                            r.cur = int(nxt[b])
+                            if r.remaining == 0:
+                                sched.finish(r)
+
+                if spec_dec:
+                    # ---- speculative verify (DESIGN.md §14): draft k-1
+                    # tokens per slot from the committed stream, score
+                    # [cur, d_1, .., d_{k-1}] in ONE prefill-shaped launch
+                    # against the paged pool, accept the longest draft
+                    # prefix matching the model's own argmax chain.
+                    # Greedy acceptance makes the delivered stream bitwise
+                    # identical to one-at-a-time decode whatever the
+                    # drafter proposes.
+                    table_m = bp.table.copy()
+                    lens_m = bp.lengths.copy()
+                    tok_arr = np.zeros((B, k_max), np.int64)
+                    drafts_by_slot = {}
+                    for b in range(B):
+                        if b not in spec_slots:
+                            table_m[b] = 0
+                            lens_m[b] = 0
+                    for r in spec_dec:
+                        b = r.slot
+                        history = np.concatenate([np.asarray(r.prompt),
+                                                  np.asarray(r.out + [r.cur],
+                                                             np.int64)])
+                        ds = (list(drafter(history, k_max - 1))
+                              if k_max > 1 else [])
+                        drafts_by_slot[b] = ds
+                        tok_arr[b] = [r.cur] + ds
+                    ts = tracer.now_us() if tracer is not None else 0.0
+                    logits, holder["cache"] = verify_fn(
+                        params, holder["cache"], jnp.array(tok_arr, jnp.int32),
+                        jnp.array(table_m), jnp.array(lens_m))
+                    preds = np.asarray(jnp.argmax(logits, axis=-1))  # [B, k]
+                    if tracer is not None:
+                        tracer.complete("verify_step", ts,
+                                        args={"slots": len(spec_dec),
+                                              "k": k_max})
+                    c_steps.inc()
+                    c_spec_steps.inc()
+                    if pf_tokens:
+                        c_inter.inc()
+
+                    # ---- commit / rewind / deliver (host side)
+                    now = time.perf_counter()
+                    for r in spec_dec:
+                        b = r.slot
+                        start = int(bp.lengths[b])
+                        # the verify pass appended k_max KV rows on device;
+                        # commit them on the host, then rewind the rejected
+                        # tail IN PLACE (free_blocks=False — the slot keeps
+                        # its full reservation, and the garbage rows sit
+                        # past the committed length where no mask ever
+                        # reads them until the next launch overwrites them)
+                        bp.extend(b, k_max)
+                        accepted, nxt_tok = spec_decode.accept_greedy(
+                            drafts_by_slot[b], preds[b])
+                        bp.truncate(b, start + 1 + accepted,
+                                    free_blocks=False)
+                        for t in [r.cur] + drafts_by_slot[b][:accepted]:
+                            sched.deliver(r, int(t), now)
+                            c_tokens.inc()
+                        c_spec_prop.inc(len(drafts_by_slot[b]))
+                        c_spec_acc.inc(accepted)
+                        r.cur = int(nxt_tok)
                         if r.remaining == 0:
                             sched.finish(r)
-
-            if spec_dec:
-                # ---- speculative verify (DESIGN.md §14): draft k-1
-                # tokens per slot from the committed stream, score
-                # [cur, d_1, .., d_{k-1}] in ONE prefill-shaped launch
-                # against the paged pool, accept the longest draft prefix
-                # matching the model's own argmax chain.  Greedy
-                # acceptance makes the delivered stream bitwise identical
-                # to one-at-a-time decode whatever the drafter proposes.
-                table_m = bp.table.copy()
-                lens_m = bp.lengths.copy()
-                tok_arr = np.zeros((B, k_max), np.int64)
-                drafts_by_slot = {}
-                for b in range(B):
-                    if b not in spec_slots:
-                        table_m[b] = 0
-                        lens_m[b] = 0
-                for r in spec_dec:
-                    b = r.slot
-                    history = np.concatenate([np.asarray(r.prompt),
-                                              np.asarray(r.out + [r.cur],
-                                                         np.int64)])
-                    ds = (list(drafter(history, k_max - 1))
-                          if k_max > 1 else [])
-                    drafts_by_slot[b] = ds
-                    tok_arr[b] = [r.cur] + ds
-                logits, holder["cache"] = verify_fn(
-                    params, holder["cache"], jnp.array(tok_arr, jnp.int32),
-                    jnp.array(table_m), jnp.array(lens_m))
-                preds = np.asarray(jnp.argmax(logits, axis=-1))  # [B, k]
-                steps += 1
-                spec_steps += 1
-                if pf_tokens:
-                    interleaved_steps += 1
-
-                # ---- commit / rewind / deliver (host side)
-                now = time.perf_counter()
-                for r in spec_dec:
-                    b = r.slot
-                    start = int(bp.lengths[b])
-                    # the verify pass appended k_max KV rows on device;
-                    # commit them on the host, then rewind the rejected
-                    # tail IN PLACE (free_blocks=False — the slot keeps
-                    # its full reservation, and the garbage rows sit past
-                    # the committed length where no mask ever reads them
-                    # until the next launch overwrites them)
-                    bp.extend(b, k_max)
-                    accepted, nxt_tok = spec_decode.accept_greedy(
-                        drafts_by_slot[b], preds[b])
-                    bp.truncate(b, start + 1 + accepted, free_blocks=False)
-                    for t in [r.cur] + drafts_by_slot[b][:accepted]:
-                        sched.deliver(r, int(t), now)
-                        tokens_served += 1
-                    spec_proposed += len(drafts_by_slot[b])
-                    spec_accepted += accepted
-                    r.cur = int(nxt_tok)
-                    if r.remaining == 0:
-                        sched.finish(r)
-        hb.beat(WORKER)
-        tick_box[0] += 1
+            # per-tick occupancy gauges: pure reads of pool/scheduler state
+            c_ticks.inc()
+            bp.observe(reg)
+            g_queued.set(len(sched.queue))
+            g_running.set(len(sched.by_slot))
+            hb.beat(WORKER)
+            tick_box[0] += 1
+    finally:
+        if prof is not None:
+            telemetry.set_profiler(None)
     t_total = time.perf_counter() - t0
     t_decode = t_total - t_prefill
 
@@ -531,69 +634,58 @@ def run_paged(args, cfg) -> dict:
     prefill_tokens_saved = sched.prefill_tokens_saved
     sstats = sched.stats()
     pstats = prefix.stats() if prefix is not None else None
-    # true tokens served (NOT batch * gen: sequences join/leave mid-stream)
-    print(f"[serve] arch={args.arch} layout=paged mode={args.mode} B={B} "
-          f"requests={n_requests} page={layout.block_size} "
-          f"blocks={layout.num_blocks - 1} host_blocks={host_blocks} "
-          f"chunk={chunk} budget={budget} kv_dtype={args.kv_dtype} "
-          f"rescale={softmax_state.default_mode()} "
-          f"prefix_cache={'on' if prefix is not None else 'off'} "
-          f"preemption={args.preemption} spec_tokens={k_max}")
-    print(f"[serve] {tokens_served} tokens in {steps} decode steps "
-          f"({tokens_served / max(steps, 1):.2f} tokens/step occupancy); "
-          f"{prefill_chunks} prefill chunks, {interleaved_steps} steps "
-          f"interleaved prefill+decode; prefill {t_prefill*1e3:.1f}ms; "
-          f"decode {t_decode*1e3:.1f}ms "
-          f"({tokens_served/max(t_decode, 1e-9):.1f} tok/s); "
-          f"requests refused at least once: {len(refused_ids)}")
-    print(f"[serve] token split: {prefill_tokens} prefill + {tokens_served} "
-          f"decode run, {prefill_tokens_saved} prefill skipped"
-          + (f"; prefix cache: {pstats['hits']}/{pstats['lookups']} hits "
-             f"({pstats['hit_rate']:.0%}), {pstats['cached_blocks']} blocks "
-             f"cached, {pstats['evictions']} evicted" if pstats else ""))
-    if (sstats["preemptions"] or sstats["failures"]
-            or sstats["refusals"]):
-        print(f"[serve] pressure: {sstats['preemptions']} preemptions "
-              f"({sstats['preempts_swap']} swap / "
-              f"{sstats['preempts_recompute']} recompute), "
-              f"{sstats['restores_swap']}+{sstats['restores_recompute']} "
-              f"restores, {replayed_tokens} tokens replayed, "
-              f"{sstats['refusals']} transient refusals, "
-              f"{sstats['failures']} injected failures "
-              f"({worker_restarts} worker restarts)")
-        for cls, st in sched.class_stats().items():
-            print(f"[serve]   class {cls}: n={st['n']} "
-                  f"preempt={st['preemptions']} "
-                  f"ttft p50/p99 {st['ttft_p50_ms']:.1f}/"
-                  f"{st['ttft_p99_ms']:.1f}ms itl p50/p99 "
-                  f"{st['itl_p50_ms']:.2f}/{st['itl_p99_ms']:.2f}ms")
-    if k_max > 0:
-        print(f"[serve] speculation: k={k_max} draft={args.spec_draft}; "
-              f"{spec_steps} verify launches, {spec_accepted}/"
-              f"{spec_proposed} drafts accepted "
-              f"({spec_accepted / max(spec_proposed, 1):.0%})")
+    snap = reg.snapshot()
+    krep = (obs.kernel_report(prof)
+            if prof is not None and prof.records else None)
+    trace_stats = (obs.write_trace(tracer, args.trace_out)
+                   if tracer is not None else None)
+    if args.metrics_out:
+        obs.write_metrics(
+            args.metrics_out, snap,
+            config=f"serve:{args.arch}:paged:{args.kv_dtype}")
+    tokens_served = c_tokens.value
     first = outputs[0][:16] if outputs.get(0) else []
-    print(f"[serve] sample generation (request 0): {first}")
+    for line in obs.summarize_paged(snap, {
+            "arch": args.arch, "mode": args.mode, "batch_slots": B,
+            "n_requests": n_requests, "page_size": layout.block_size,
+            "pool_blocks": layout.num_blocks - 1,
+            "host_blocks": host_blocks, "chunk": chunk, "budget": budget,
+            "kv_dtype": args.kv_dtype,
+            "rescale": softmax_state.default_mode(),
+            "prefix": pstats, "preemption": args.preemption,
+            "spec_tokens": k_max, "spec_draft": args.spec_draft,
+            "t_prefill": t_prefill, "t_decode": t_decode,
+            "refusals": len(refused_ids),
+            "prefill_tokens_saved": prefill_tokens_saved,
+            "sched": sstats, "classes": sched.class_stats(),
+            "kernel_report": krep,
+            "profile_sampled": prof.sampled if prof is not None else 0,
+            "profile_every": profile_every,
+            "trace_stats": trace_stats, "metrics_path": args.metrics_out,
+            "sample": first}):
+        obs.emit(line)
     return {"outputs": outputs, "tokens_served": tokens_served,
             "batch_slots": B, "kv_dtype": args.kv_dtype,
             "pool_blocks": layout.num_blocks - 1,
             "host_blocks": host_blocks,
-            "steps": steps, "refusals": len(refused_ids),
-            "prefill_chunks": prefill_chunks,
-            "interleaved_steps": interleaved_steps,
-            "prefill_tokens": prefill_tokens,
+            "steps": c_steps.value, "refusals": len(refused_ids),
+            "prefill_chunks": c_chunks.value,
+            "interleaved_steps": c_inter.value,
+            "prefill_tokens": c_pf.value,
             "decode_tokens": tokens_served,
             "prefill_tokens_saved": prefill_tokens_saved,
-            "replayed_tokens": replayed_tokens,
-            "worker_restarts": worker_restarts,
+            "replayed_tokens": c_replay.value,
+            "worker_restarts": c_restarts.value,
             "prefix": pstats, "sched": sstats,
             "classes": sched.class_stats(),
             "spec": ({"k": k_max, "draft": args.spec_draft,
-                      "steps": spec_steps, "proposed": spec_proposed,
-                      "accepted": spec_accepted,
+                      "steps": c_spec_steps.value,
+                      "proposed": c_spec_prop.value,
+                      "accepted": c_spec_acc.value,
                       "acceptance_rate":
-                          spec_accepted / max(spec_proposed, 1)}
+                          c_spec_acc.value / max(c_spec_prop.value, 1)}
                      if k_max > 0 else None),
+            "metrics": snap, "kernel_report": krep,
             "t_prefill": t_prefill, "t_decode": t_decode}
 
 
@@ -706,6 +798,28 @@ def parse_args(argv=None):
                          "(free, strong on repetitive traces); head = "
                          "embedding-similarity self-draft chain (not "
                          "supported on fp8 pools)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the request-lifecycle + engine-span trace "
+                         "as Chrome trace-event JSON (open in "
+                         "ui.perfetto.dev or chrome://tracing; DESIGN.md "
+                         "§15; paged layout only; outputs stay bitwise)")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="trace ring-buffer capacity in events: overflow "
+                         "drops the OLDEST events (counted in the export) "
+                         "instead of growing — bounded memory under any "
+                         "run length")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the full metrics-registry snapshot as "
+                         "schema-versioned JSON (counters/gauges/histogram "
+                         "tails + git sha and jax version provenance)")
+    ap.add_argument("--profile-kernels", type=int, default=0, metavar="N",
+                    help="time every N-th attention-kernel launch at the "
+                         "attn_entry choke point (block_until_ready; "
+                         "tagged with AttnSpec + geometry, joined against "
+                         "the HBM roofline in the summary).  0 = off, the "
+                         "default — profiling runs the outer step "
+                         "UNJITTED, so use it for kernel attribution, not "
+                         "end-to-end throughput (paged layout only)")
     ap.add_argument("--kv-splits", type=int, default=None,
                     help="split-KV count for decode attention "
                          "(default: auto-scheduled)")
@@ -739,6 +853,15 @@ def parse_args(argv=None):
             and args.kv_dtype == "fp8":
         ap.error("--spec-draft head is not supported with --kv-dtype fp8; "
                  "use --spec-draft ngram")
+    if args.trace_buffer < 1:
+        ap.error("--trace-buffer must be >= 1")
+    if args.profile_kernels < 0:
+        ap.error("--profile-kernels must be >= 0")
+    if args.cache_layout == "dense" and (args.trace_out
+                                         or args.profile_kernels):
+        ap.error("--trace-out/--profile-kernels require --cache-layout "
+                 "paged: the dense scan is one opaque jitted launch with "
+                 "no per-request lifecycle or per-launch entries to record")
     return args
 
 

@@ -8,6 +8,14 @@ exercised by tests/test_runtime.py — the *state machines* are what matters:
   · StragglerDetector: per-host step-time z-score (robust MAD) => slow host
   · FailureInjector  : deterministic fault schedule for drills
   · plan_remesh      : failed hosts => next viable (data, model) mesh shape
+
+Each state machine takes an optional ``metrics`` MetricsRegistry
+(runtime/telemetry.py) and emits ``ft/*`` counters — heartbeats, straggler
+flags, injected faults — so ``--fault-rate`` drills show up in the serve
+metrics snapshot.  The StragglerDetector wiring is the DESIGN.md §15
+hand-off point for multi-device serving (ROADMAP item 1): per-worker step
+gauges are already published here; only the per-device record() calls are
+missing.  Telemetry never changes any decision these classes make.
 """
 from __future__ import annotations
 
@@ -19,13 +27,17 @@ import numpy as np
 
 
 class HeartbeatRegistry:
-    def __init__(self, timeout_s: float = 30.0, clock=time.monotonic):
+    def __init__(self, timeout_s: float = 30.0, clock=time.monotonic, *,
+                 metrics=None):
         self.timeout_s = timeout_s
         self._clock = clock
         self._last: Dict[str, float] = {}
+        self.metrics = metrics
 
     def beat(self, worker: str):
         self._last[worker] = self._clock()
+        if self.metrics is not None:
+            self.metrics.inc("ft/heartbeats")
 
     def alive(self) -> List[str]:
         now = self._clock()
@@ -39,16 +51,21 @@ class HeartbeatRegistry:
 class StragglerDetector:
     """Flags hosts whose step time exceeds median + z·MAD over a window."""
 
-    def __init__(self, window: int = 16, z: float = 4.0):
+    def __init__(self, window: int = 16, z: float = 4.0, *, metrics=None):
         self.window = window
         self.z = z
         self._times: Dict[str, List[float]] = {}
+        self.metrics = metrics
 
     def record(self, worker: str, step_time_s: float):
         buf = self._times.setdefault(worker, [])
         buf.append(step_time_s)
         if len(buf) > self.window:
             buf.pop(0)
+        if self.metrics is not None:
+            self.metrics.inc("ft/step_samples")
+            self.metrics.observe(f"ft/step_ms/{worker}",
+                                 step_time_s * 1e3)
 
     def stragglers(self) -> List[str]:
         if len(self._times) < 2:
@@ -60,20 +77,28 @@ class StragglerDetector:
         meds = np.array(list(med_per.values()))
         med = float(np.median(meds))
         mad = float(np.median(np.abs(meds - med))) + 1e-9
-        return [w for w, m in med_per.items() if (m - med) / (1.4826 * mad) > self.z]
+        out = [w for w, m in med_per.items()
+               if (m - med) / (1.4826 * mad) > self.z]
+        if self.metrics is not None and out:
+            self.metrics.inc("ft/straggler_flags", len(out))
+        return out
 
 
 @dataclass
 class FailureInjector:
     """Deterministic fault schedule: raise WorkerFailure at given steps."""
     fail_at_steps: Sequence[int] = field(default_factory=tuple)
+    metrics: object = None
 
     def check(self, step: int):
         if step in self.fail_at_steps:
+            if self.metrics is not None:
+                self.metrics.inc("ft/injected_faults")
             raise WorkerFailure(f"injected failure at step {step}")
 
     @classmethod
-    def from_rate(cls, rate: float, horizon: int = 100_000):
+    def from_rate(cls, rate: float, horizon: int = 100_000, *,
+                  metrics=None):
         """Schedule matching a mean failure RATE (failures per step): one
         failure every round(1/rate) steps out to `horizon`.  Periodic, not
         sampled — the serve loop's --fault-rate drills must be replayable
@@ -81,7 +106,8 @@ class FailureInjector:
         assert the faulted run's outputs against the unfaulted run's."""
         assert 0 < rate <= 1, f"rate must be in (0, 1], got {rate}"
         period = max(1, round(1.0 / rate))
-        return cls(fail_at_steps=frozenset(range(period, horizon, period)))
+        return cls(fail_at_steps=frozenset(range(period, horizon, period)),
+                   metrics=metrics)
 
 
 class WorkerFailure(RuntimeError):

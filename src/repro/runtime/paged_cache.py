@@ -145,9 +145,13 @@ class BlockPool:
     ``host_blocks`` > 0 adds the host swap tier (DESIGN.md §12)."""
 
     def __init__(self, layout: PagedLayout, batch_slots: int,
-                 host_blocks: int = 0):
+                 host_blocks: int = 0, *, metrics=None):
         self.layout = layout
         self.batch_slots = batch_slots
+        # optional MetricsRegistry (runtime/telemetry.py): swap-tier
+        # traffic counters at swap_out/swap_in; occupancy gauges go
+        # through :meth:`observe` (accounting only — never control flow)
+        self.metrics = metrics
         # pop order low→high keeps tables human-readable in tests/logs
         self._free = deque(range(1, layout.num_blocks))      # 0 = null block
         self.table = np.zeros((batch_slots, layout.max_blocks), np.int32)
@@ -412,6 +416,8 @@ class BlockPool:
                          budget=int(self._budget[slot]))
         self.swapped[key] = rec
         self.release(slot)
+        if self.metrics is not None and nb:
+            self.metrics.inc("pool/swap_out_blocks", nb)
         return rec
 
     def swap_in(self, key, shared_ids=(), matched: int = 0):
@@ -438,6 +444,8 @@ class BlockPool:
         n_eff = max(matched, rec.n_tokens)
         if n_eff > matched:
             self.extend(slot, n_eff - matched)
+        if self.metrics is not None and rec.host_ids:
+            self.metrics.inc("pool/swap_in_blocks", len(rec.host_ids))
         self.swap_free(key)
         return slot, cow, rec
 
@@ -451,6 +459,21 @@ class BlockPool:
         rec = self.swapped.pop(key)
         self._host_free.extend(rec.host_ids)
         return rec
+
+    def observe(self, metrics=None) -> None:
+        """Publish pool occupancy gauges into a MetricsRegistry (the one
+        given, else the pool's own).  Pure read — safe at any point the
+        pool is consistent (serve calls it once per tick)."""
+        m = metrics if metrics is not None else self.metrics
+        if m is None:
+            return
+        m.gauge("pool/free_blocks").set(self.num_free)
+        m.gauge("pool/used_blocks").set(
+            self.layout.num_blocks - 1 - self.num_free)
+        m.gauge("pool/active_slots").set(int(self.active.sum()))
+        m.gauge("pool/shared_blocks").set(int((self.ref > 1).sum()))
+        m.gauge("pool/host_free_blocks").set(self.host_free)
+        m.gauge("pool/swapped_seqs").set(len(self.swapped))
 
     def check_conservation(self) -> None:
         """Refcount conservation (DESIGN.md §10): refcounts never negative,

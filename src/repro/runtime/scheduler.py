@@ -63,6 +63,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.runtime import telemetry
+
 WAITING = "WAITING"
 RUNNING = "RUNNING"
 PREEMPTED = "PREEMPTED"
@@ -135,7 +137,6 @@ class Request:
     t_first: Optional[float] = None
     t_last: Optional[float] = None
     ttft_ms: Optional[float] = None
-    itl_ms: list = dataclasses.field(default_factory=list)
 
     @property
     def plen(self) -> int:
@@ -146,8 +147,9 @@ class Request:
         return self.plen + int(self.gen)
 
 
-def _pct(xs, q) -> float:
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+_COUNTER_NAMES = ("admissions", "refusals", "idle_kicks", "preempts_swap",
+                  "preempts_recompute", "restores_swap",
+                  "restores_recompute", "failures", "slo_boosts")
 
 
 class Scheduler:
@@ -160,7 +162,9 @@ class Scheduler:
     worker failures, ``cancel`` to drop a request in any state."""
 
     def __init__(self, pool, prefix, kv: Optional[KVOps] = None,
-                 cfg: Optional[SchedulerConfig] = None):
+                 cfg: Optional[SchedulerConfig] = None, *,
+                 metrics: Optional[telemetry.MetricsRegistry] = None,
+                 tracer=None):
         self.pool = pool
         self.prefix = prefix
         self.kv = kv if kv is not None else null_kv_ops()
@@ -176,10 +180,35 @@ class Scheduler:
         self.refused_ids: set = set()
         self.n_admitted = 0
         self.prefill_tokens_saved = 0
-        self.counters = {"admissions": 0, "refusals": 0, "idle_kicks": 0,
-                         "preempts_swap": 0, "preempts_recompute": 0,
-                         "restores_swap": 0, "restores_recompute": 0,
-                         "failures": 0, "slo_boosts": 0}
+        # all stats live in a MetricsRegistry (a private one when the
+        # caller didn't wire telemetry in — the counters/class_stats APIs
+        # then behave exactly as before).  `tracer`, when given, gets one
+        # lifecycle instant per request state transition.
+        self.metrics = metrics if metrics is not None \
+            else telemetry.MetricsRegistry()
+        self.tracer = tracer
+        self._c = {n: self.metrics.counter(f"sched/{n}")
+                   for n in _COUNTER_NAMES}
+        self._classes: set[int] = set()
+
+    @property
+    def counters(self) -> dict:
+        """Counter name -> value (the pre-registry dict shape; tests and
+        the serve summary read this)."""
+        return {n: c.value for n, c in self._c.items()}
+
+    # -------------------------------------------------------- telemetry
+    def _instant(self, name: str, r: Request, args: Optional[dict] = None
+                 ) -> None:
+        """One lifecycle instant on the request's trace thread
+        (tid 1000+id; tid 0 is the engine timeline)."""
+        if self.tracer is not None:
+            self.tracer.instant(name, tid=1000 + r.id, args=args)
+
+    def _class_hist(self, r: Request, kind: str) -> telemetry.Histogram:
+        self._classes.add(r.priority)
+        return self.metrics.histogram(
+            f"sched/class{r.priority}/{kind}_ms")
 
     # ------------------------------------------------------------ lifecycle
     def add(self, req: Request, now: float = 0.0) -> None:
@@ -187,6 +216,9 @@ class Scheduler:
         req.t_arrival = now
         req.remaining = int(req.gen)
         self.queue.append(req)
+        self._instant("enqueued", req,
+                      {"priority": req.priority, "plen": req.plen,
+                       "gen": int(req.gen)})
 
     def running(self) -> list:
         """RUNNING requests in slot order (the per-step iteration order)."""
@@ -201,9 +233,10 @@ class Scheduler:
         if r.t_first is None:
             r.t_first = now
             r.ttft_ms = (now - r.t_arrival) * 1e3
+            self._class_hist(r, "ttft").record(r.ttft_ms)
         else:
             itl = (now - r.t_last) * 1e3
-            r.itl_ms.append(itl)
+            self._class_hist(r, "itl").record(itl)
             self._itl_recent.append(itl)
         r.t_last = now
 
@@ -213,6 +246,9 @@ class Scheduler:
         del self.by_slot[r.slot]
         r.slot, r.decoding, r.state = None, False, DONE
         self.done[r.id] = r
+        self._classes.add(r.priority)
+        self.metrics.inc(f"sched/class{r.priority}/done")
+        self._instant("finished", r, {"tokens": len(r.out)})
 
     def cancel(self, r: Request) -> None:
         """Drop a request in any live state.  The PREEMPTED-with-swap case
@@ -270,7 +306,7 @@ class Scheduler:
                 # nothing runs — clear the backoffs rather than idle
                 for r in arrived:
                     r.next_try = tick
-                self.counters["idle_kicks"] += 1
+                self._c["idle_kicks"].inc()
                 elig = arrived
             else:
                 return None
@@ -278,7 +314,7 @@ class Scheduler:
                                         0 if r.state == PREEMPTED else 1,
                                         r.arrival, r.id))
         if self._eff_priority(best, now) < best.priority:
-            self.counters["slo_boosts"] += 1
+            self._c["slo_boosts"].inc()
         return best
 
     def _evict_to_fit(self, total: int, chain, matched: int) -> None:
@@ -327,9 +363,12 @@ class Scheduler:
         r.replay = deque(r.out)
         r.cur = -1 if not restored else r.cur   # re-seeded at prompt end
         if restored:
-            self.counters["restores_recompute"] += 1
+            self._c["restores_recompute"].inc()
+            self._instant("restored", r, {"mode": "recompute",
+                                          "matched": matched})
         else:
-            self.counters["admissions"] += 1
+            self._c["admissions"].inc()
+            self._instant("admitted", r, {"slot": slot, "matched": matched})
             if self.prefix is not None:
                 self.prefix.record(matched)     # one lookup per admission
         return True
@@ -363,7 +402,8 @@ class Scheduler:
             r.pf_pos = r.plen
         else:
             r.pf_pos = max(matched, rec.n_tokens)   # mid-prefill victim
-        self.counters["restores_swap"] += 1
+        self._c["restores_swap"].inc()
+        self._instant("restored", r, {"mode": "swap", "matched": matched})
         return True
 
     def _place(self, r: Request, slot: int, matched: int, now: float) -> None:
@@ -394,7 +434,9 @@ class Scheduler:
             self.cfg.backoff_base << min(r.attempts - 1, 5),
             self.cfg.backoff_cap)
         self.refused_ids.add(r.id)
-        self.counters["refusals"] += 1
+        self._c["refusals"].inc()
+        self._instant("refused", r, {"attempts": r.attempts,
+                                     "next_try": r.next_try})
 
     # ----------------------------------------------------------- preemption
     def _preempt_for(self, r: Request, tick: int) -> bool:
@@ -439,7 +481,10 @@ class Scheduler:
                     self.prefix.pin_chain(chain)
                     v.pinned = list(chain)
             self.pool.release(slot)
-        self.counters[f"preempts_{used}"] += 1
+        self._c[f"preempts_{used}"].inc()
+        self._classes.add(v.priority)
+        self.metrics.inc(f"sched/class{v.priority}/preemptions")
+        self._instant("preempted", v, {"mode": used})
         v.preemptions += 1
         v.state = PREEMPTED
         v.slot = None
@@ -455,7 +500,8 @@ class Scheduler:
         replays, bitwise-identical to the unfailed run."""
         v = self.by_slot[slot]
         self.preempt(v, tick, mode="recompute")
-        self.counters["failures"] += 1
+        self._c["failures"].inc()
+        self._instant("failed", v, {"slot": slot, "tick": tick})
         return v
 
     def _unpin(self, r: Request) -> None:
@@ -480,25 +526,30 @@ class Scheduler:
 
     # ------------------------------------------------------------ reporting
     def class_stats(self) -> dict:
-        """Per-priority-class latency tails over DONE requests:
+        """Per-priority-class latency tails:
         {class: {n, preemptions, ttft_p50_ms, ttft_p99_ms, itl_p50_ms,
-        itl_p99_ms}} — the BENCH_serve.json payload."""
-        acc: dict[int, dict] = {}
-        for r in self.done.values():
-            c = acc.setdefault(r.priority,
-                               {"n": 0, "preemptions": 0,
-                                "ttft": [], "itl": []})
-            c["n"] += 1
-            c["preemptions"] += r.preemptions
-            if r.ttft_ms is not None:
-                c["ttft"].append(r.ttft_ms)
-            c["itl"].extend(r.itl_ms)
-        return {cls: {"n": c["n"], "preemptions": c["preemptions"],
-                      "ttft_p50_ms": _pct(c["ttft"], 50),
-                      "ttft_p99_ms": _pct(c["ttft"], 99),
-                      "itl_p50_ms": _pct(c["itl"], 50),
-                      "itl_p99_ms": _pct(c["itl"], 99)}
-                for cls, c in sorted(acc.items())}
+        itl_p99_ms}} — the BENCH_serve.json payload.
+
+        Read straight from the registry's per-class histograms — the same
+        instruments ``--metrics-out`` exports (sched/class{c}/ttft_ms,
+        .../itl_ms), so the summary's tails and the archived snapshot can
+        never disagree.  Resolution is the histogram contract: exact
+        nearest-rank percentile of values quantized within ~1%
+        (tests/test_telemetry.py pins it against exact percentiles)."""
+        out = {}
+        for cls in sorted(self._classes):
+            ttft = self.metrics.histogram(f"sched/class{cls}/ttft_ms")
+            itl = self.metrics.histogram(f"sched/class{cls}/itl_ms")
+            out[cls] = {
+                "n": self.metrics.counter(f"sched/class{cls}/done").value,
+                "preemptions": self.metrics.counter(
+                    f"sched/class{cls}/preemptions").value,
+                "ttft_p50_ms": ttft.percentile(50),
+                "ttft_p99_ms": ttft.percentile(99),
+                "itl_p50_ms": itl.percentile(50),
+                "itl_p99_ms": itl.percentile(99),
+            }
+        return out
 
     def stats(self) -> dict:
         out = dict(self.counters)

@@ -75,15 +75,31 @@ class HeadDraft:
         return out
 
 
-def make_drafter(kind: str, params):
+def make_drafter(kind: str, params, *, metrics=None):
     """Proposer factory for the serve loop: ``propose(history, k) -> [k]``.
     ``params`` is the model param pytree (the head drafter reads the
-    embedding table; ngram needs nothing)."""
+    embedding table; ngram needs nothing).  With a ``metrics`` registry
+    the proposer is wrapped to count draft calls and histogram proposal
+    lengths (``spec/draft_calls`` / ``spec/draft_len``) — the proposals
+    themselves are untouched."""
     if kind == "ngram":
-        return ngram_propose
-    if kind == "head":
-        return HeadDraft(params["embed"]).propose
-    raise ValueError(f"unknown draft kind {kind!r} (want one of {DRAFT_KINDS})")
+        fn = ngram_propose
+    elif kind == "head":
+        fn = HeadDraft(params["embed"]).propose
+    else:
+        raise ValueError(
+            f"unknown draft kind {kind!r} (want one of {DRAFT_KINDS})")
+    if metrics is None:
+        return fn
+    calls = metrics.counter("spec/draft_calls")
+    lens = metrics.histogram("spec/draft_len")
+
+    def counted(history, k, **kw):
+        out = fn(history, k, **kw)
+        calls.inc()
+        lens.record(len(out))
+        return out
+    return counted
 
 
 def accept_greedy(drafts, preds) -> tuple:

@@ -1,0 +1,289 @@
+"""Telemetry layer (DESIGN.md §15): histogram algebra, ring-buffer
+bounds, Chrome trace-event schema, the attn_entry profiling hook, and the
+serve-loop acceptance criteria — telemetry-on is BITWISE output-identical
+to telemetry-off (fp and int8+prefix-cache legs) and the exported trace
+covers the full request lifecycle under a contended burst."""
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.runtime import telemetry
+
+
+# ------------------------------------------------------------- histogram
+def _exact_nearest_rank(vals, q):
+    s = sorted(vals)
+    return s[max(1, math.ceil(q / 100.0 * len(s))) - 1]
+
+
+def test_histogram_resolution_pin():
+    """Quantization contract: every percentile of a positive sample is
+    within ~rel_err of the EXACT nearest-rank percentile — the
+    equal-or-better-than-raw-lists resolution the scheduler's class_stats
+    migration relies on (the old _pct helper interpolated over raw
+    lists; the histogram must not be meaningfully coarser)."""
+    rng = np.random.default_rng(0)
+    vals = np.exp(rng.normal(size=2000)).tolist()          # lognormal > 0
+    h = telemetry.Histogram.from_values(vals, rel_err=0.01)
+    for q in (10, 50, 90, 99, 99.9):
+        exact = _exact_nearest_rank(vals, q)
+        assert abs(h.percentile(q) - exact) <= 0.015 * exact, q
+    assert h.count == 2000
+    assert abs(h.mean - np.mean(vals)) <= 0.015 * np.mean(vals)
+    assert h.vmin == min(vals) and h.vmax == max(vals)
+
+
+def test_histogram_zero_and_negative():
+    h = telemetry.Histogram.from_values([-1.0, 0.0, 5.0])
+    assert h.zero == 2 and h.count == 3
+    assert h.percentile(50) == 0.0                 # rank 2 of 3 → zero bucket
+    assert abs(h.percentile(100) - 5.0) <= 0.015 * 5.0
+    assert telemetry.Histogram(0.01).percentile(50) == 0.0   # empty → 0
+
+
+def _hist_state(h):
+    return (dict(h.counts), h.zero, h.vmin, h.vmax, h.to_dict())
+
+
+def _check_merge(a, b, c):
+    ha = telemetry.Histogram.from_values(a)
+    hb = telemetry.Histogram.from_values(b)
+    hc = telemetry.Histogram.from_values(c)
+    frozen = (_hist_state(ha), _hist_state(hb))
+    # commutative + associative, exactly (integer bucket counts)
+    assert _hist_state(ha.merge(hb)) == _hist_state(hb.merge(ha))
+    assert _hist_state(ha.merge(hb).merge(hc)) \
+        == _hist_state(ha.merge(hb.merge(hc)))
+    # merge of split streams == single-pass over the concatenation
+    assert _hist_state(ha.merge(hb)) \
+        == _hist_state(telemetry.Histogram.from_values(list(a) + list(b)))
+    # operands untouched
+    assert (_hist_state(ha), _hist_state(hb)) == frozen
+
+
+def _rand_lists(seed):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(3):
+        n = int(rng.integers(0, 50))
+        out.append((rng.standard_normal(n) * 10.0 ** rng.integers(-3, 4))
+                   .tolist())
+    return out
+
+
+if HAVE_HYPOTHESIS:
+    _floats = st.lists(
+        st.floats(min_value=-1e9, max_value=1e9,
+                  allow_nan=False, allow_infinity=False), max_size=60)
+
+    @settings(max_examples=60, deadline=None)
+    @given(_floats, _floats, _floats)
+    def test_histogram_merge_property(a, b, c):
+        _check_merge(a, b, c)
+else:
+    def test_histogram_merge_property():
+        """Deterministic stand-in for the hypothesis property (keeps the
+        tier-1 skip count flat when hypothesis is absent)."""
+        for seed in range(60):
+            _check_merge(*_rand_lists(seed))
+
+
+def test_histogram_merge_resolution_mismatch():
+    with pytest.raises(AssertionError):
+        telemetry.Histogram(0.01).merge(telemetry.Histogram(0.05))
+
+
+# -------------------------------------------------------------- registry
+def test_registry_kinds_and_snapshot():
+    reg = telemetry.MetricsRegistry()
+    reg.counter("a/n").inc(3)
+    reg.inc("a/n", 2)
+    reg.gauge("a/g").set(7)
+    reg.observe("a/h", 1.0)
+    assert reg.counter("a/n").value == 5         # create-or-get, one object
+    assert reg.value("a/n") == 5 and reg.value("a/g") == 7.0
+    with pytest.raises(AssertionError):          # one name, one kind
+        reg.gauge("a/n")
+    snap = reg.snapshot()
+    json.dumps(snap)                             # plain JSON types only
+    assert snap["schema_version"] == telemetry.OBS_SCHEMA_VERSION
+    assert snap["counters"] == {"a/n": 5}
+    assert snap["gauges"] == {"a/g": 7.0}
+    assert snap["histograms"]["a/h"]["count"] == 1
+    assert reg.op_count() == 2 + 1 + 1           # incs + sets + records
+
+
+# --------------------------------------------------------------- tracing
+def test_tracer_ring_bounded():
+    tr = telemetry.Tracer(capacity=8, clock=iter(range(10 ** 6)).__next__)
+    for i in range(100):
+        tr.instant(f"e{i}")
+    assert tr.recorded == 100 and tr.dropped == 92
+    evs = tr.to_events()
+    assert len(evs) == 8 + 1                     # ring + process_name meta
+    assert evs[-1]["name"] == "e99"              # newest survive
+
+
+def test_trace_export_schema(tmp_path):
+    tr = telemetry.Tracer(capacity=64)
+    tr.instant("enqueued", tid=1001, args={"req": 1})
+    with tr.span("prefill_chunk", args={"tokens": 8}):
+        pass
+    t0 = tr.now_us()
+    tr.complete("decode_step", t0)
+    path = str(tmp_path / "trace.json")
+    stats = tr.export(path)
+    assert stats["recorded"] == 3 and stats["dropped"] == 0
+    doc = json.load(open(path))
+    evs = doc["traceEvents"]
+    assert doc["otherData"]["schema_version"] == telemetry.OBS_SCHEMA_VERSION
+    for e in evs:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e), e
+        assert e["ph"] in ("X", "i", "M")
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+        if e["ph"] == "i":
+            assert e["s"] == "t"
+    ts = [e["ts"] for e in evs]
+    assert ts == sorted(ts)                      # monotonic after sort
+
+
+# ------------------------------------------------------ kernel profiling
+def test_profiler_sampling_pattern():
+    p = telemetry.KernelProfiler(sample_every=3)
+    assert [p.want() for _ in range(7)] \
+        == [True, False, False, True, False, False, True]
+
+
+def test_profiler_hooks_attn_entry():
+    """attn_entry times concrete launches under an installed profiler and
+    tags them with entry name + spec; under an outer trace (args are
+    tracers, block_until_ready would be invalid) the hook must skip,
+    not crash."""
+    from repro.kernels.etap import ops as etap_ops
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 64)), jnp.float32)
+    v = k[..., :32]
+    prev = telemetry.set_profiler(telemetry.KernelProfiler(1))
+    try:
+        prof = telemetry.profiler()
+        ref = etap_ops.etap_decode(q, k, v, None, scale=64 ** -0.5, block=64)
+        assert prof.sampled == 1
+        ((name, tag, geom),) = prof.records
+        cnt, tot = prof.records[(name, tag, geom)]
+        assert name == "etap_decode" and "mode=" in tag
+        assert cnt == 1 and tot >= 0.0 and geom     # geometry captured
+        jitted = jax.jit(lambda q: etap_ops.etap_decode(
+            q, k, v, None, scale=64 ** -0.5, block=64))
+        out = jitted(q)
+        assert prof.sampled == 1                    # guard skipped the hook
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+    finally:
+        telemetry.set_profiler(prev)
+
+
+# ------------------------------------------------------------ end to end
+def _serve(argv, cfg):
+    from repro.launch import serve
+    return serve.run_paged(serve.parse_args(argv), cfg)
+
+
+def _no_moe_cfg():
+    from repro.configs import get_config, reduced
+    return dataclasses.replace(reduced(get_config("deepseek_r1_671b")),
+                               moe=None)
+
+
+BURST = ["--reduced", "--batch", "2", "--prompt", "24", "--gen", "8",
+         "--requests", "6", "--page-size", "8", "--prefill-chunk", "8",
+         "--cache-layout", "paged", "--priority-classes", "3",
+         "--arrival-rate", "0.25", "--trace", "burst", "--burst-size", "3",
+         "--retry-backoff", "4", "--preemption", "recompute",
+         "--spec-tokens", "2", "--seed", "0"]
+
+
+def test_serve_trace_bitwise_and_lifecycle(tmp_path):
+    """ACCEPTANCE: under a multi-tenant burst with speculation, a
+    --trace-out/--metrics-out run is bitwise output-identical to a plain
+    run, and the exported trace covers prefill / decode / verify spans
+    plus the lifecycle instants (preemption/restore on the contended fp
+    leg).  Also pins that class_stats() percentiles and the registry
+    snapshot read the SAME histograms — one percentile code path."""
+    cfg = _no_moe_cfg()
+    plain = _serve(BURST, cfg)
+    tpath, mpath = str(tmp_path / "t.json"), str(tmp_path / "m.json")
+    inst = _serve(BURST + ["--trace-out", tpath, "--metrics-out", mpath],
+                  cfg)
+    assert inst["outputs"] == plain["outputs"]
+    assert inst["tokens_served"] == plain["tokens_served"]
+
+    doc = json.load(open(tpath))
+    evs = doc["traceEvents"]
+    for e in evs:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e), e
+    ts = [e["ts"] for e in evs]
+    assert ts == sorted(ts)
+    names = {e["name"] for e in evs}
+    need = {"enqueued", "admitted", "finished",
+            "prefill_chunk", "decode_step", "verify_step"}
+    if inst["kv_dtype"] == "fp":       # quantized legs widen slots and may
+        assert inst["sched"]["preempts_recompute"] > 0   # never contend
+        need |= {"preempted", "restored"}
+    assert need <= names, names - need
+
+    met = json.load(open(mpath))
+    assert met["meta"]["schema_version"] == telemetry.OBS_SCHEMA_VERSION
+    snap = inst["metrics"]
+    assert met["metrics"] == snap
+    assert snap["counters"]["serve/decode_tokens"] == inst["decode_tokens"]
+    # class_stats() and the snapshot render from the same histograms
+    for cls, cstats in inst["classes"].items():
+        hd = snap["histograms"][f"sched/class{cls}/ttft_ms"]
+        assert cstats["ttft_p50_ms"] == hd["p50"]
+        assert cstats["ttft_p99_ms"] == hd["p99"]
+        assert cstats["n"] == snap["counters"][f"sched/class{cls}/done"]
+
+
+def test_serve_bitwise_int8_prefix(tmp_path):
+    """ACCEPTANCE: the bitwise telemetry-on == telemetry-off identity
+    holds on the int8 + prefix-cache path too."""
+    cfg = _no_moe_cfg()
+    base = ["--reduced", "--batch", "2", "--prompt", "16", "--gen", "8",
+            "--requests", "3", "--page-size", "8", "--prefill-chunk", "8",
+            "--cache-layout", "paged", "--kv-dtype", "int8",
+            "--shared-prefix", "2", "--seed", "0"]
+    plain = _serve(base, cfg)
+    tpath, mpath = str(tmp_path / "t.json"), str(tmp_path / "m.json")
+    inst = _serve(base + ["--trace-out", tpath, "--metrics-out", mpath],
+                  cfg)
+    assert inst["outputs"] == plain["outputs"]
+    assert {"prefill_chunk", "decode_step"} \
+        <= {e["name"] for e in json.load(open(tpath))["traceEvents"]}
+    assert json.load(open(mpath))["metrics"]["counters"][
+        "serve/decode_tokens"] == inst["decode_tokens"]
+
+
+def test_fault_injection_counters_pinned():
+    """Satellite: one --fault-rate drill's counter totals line up across
+    subsystems — every injected fault is one scheduler failure and one
+    observed worker restart, all flowing through the one registry."""
+    cfg = _no_moe_cfg()
+    res = _serve(["--reduced", "--batch", "2", "--prompt", "16", "--gen",
+                  "8", "--requests", "3", "--page-size", "8",
+                  "--prefill-chunk", "8", "--cache-layout", "paged",
+                  "--fault-rate", "0.2", "--seed", "0"], cfg)
+    c = res["metrics"]["counters"]
+    assert c["ft/injected_faults"] > 0
+    assert c["ft/injected_faults"] == c["sched/failures"]
+    assert c["ft/injected_faults"] == c["serve/worker_restarts"]
+    assert c["serve/worker_restarts"] == res["worker_restarts"]
+    assert c["ft/heartbeats"] == c["serve/ticks"]
+    assert c["serve/replayed_tokens"] == res["replayed_tokens"]
