@@ -1,71 +1,22 @@
 #!/usr/bin/env python
-"""AST lint: attention entry points take ONE AttnSpec, not keyword soup.
+"""DEPRECATED shim — this lint is now ``repro.analysis`` rule REPRO006.
 
-Before the AttnSpec redesign every attention entry grew the same six
-knobs (``mode=``, ``rescale=``, ``kv_splits=``, ...) one keyword at a
-time, and call sites drifted — a caller could thread ``mode`` but forget
-``rescale`` and silently run a mixed configuration.  The one true bundle
-now lives in ``src/repro/core/attn_spec.py``; entry points take
-``spec=`` (with a deprecation shim for the old keywords).
+The keyword-soup-signature check (no function outside ``core/attn_spec.py``
+declaring both ``mode=`` and ``rescale=``) moved into the unified
+invariant analyzer (DESIGN.md §16) with the rest of the AST lints.  This
+file is kept so local scripts and docs pointing at the old path keep
+working; it just runs the analyzer restricted to the ported rule:
 
-This lint fails (exit 1) on any FUNCTION outside that module whose own
-parameter list declares BOTH ``mode`` and ``rescale`` — the signature of
-a re-introduced pre-AttnSpec entry point.  Either knob alone is fine
-(``softmax_state.resolve(rescale)`` helpers take ``rescale``; CLI
-builders take ``mode``); both on one signature is an attention entry that
-belongs behind the spec.  stdlib-only: runs in the CI lint job before any
-heavyweight deps are installed.
+    python -m repro.analysis --select REPRO006
 """
-from __future__ import annotations
-
-import ast
 import pathlib
 import sys
 
-REPO = pathlib.Path(__file__).resolve().parent.parent
-SCAN_ROOTS = ("src/repro", "benchmarks")
-ALLOWED = {REPO / "src" / "repro" / "core" / "attn_spec.py"}
-PAIR = {"mode", "rescale"}
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
-
-def _param_names(node: ast.FunctionDef | ast.AsyncFunctionDef) -> set:
-    a = node.args
-    return {p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)}
-
-
-def _check_file(path: pathlib.Path) -> list[str]:
-    tree = ast.parse(path.read_text(), filename=str(path))
-    errors = []
-    for node in ast.walk(tree):
-        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            continue
-        if PAIR <= _param_names(node):
-            rel = (path.relative_to(REPO) if path.is_relative_to(REPO)
-                   else path)
-            errors.append(
-                f"{rel}:{node.lineno}: function `{node.name}` declares "
-                f"both `mode=` and `rescale=` — a pre-AttnSpec attention "
-                f"entry point; take a single `spec: AttnSpec` instead "
-                f"(core/attn_spec.py, DESIGN.md §14)")
-    return errors
-
-
-def main() -> int:
-    errors = []
-    for root in SCAN_ROOTS:
-        for path in sorted((REPO / root).rglob("*.py")):
-            if path in ALLOWED:
-                continue
-            errors.extend(_check_file(path))
-    if errors:
-        print("\n".join(errors))
-        print(f"\nlint_attn_spec: {len(errors)} keyword-soup attention "
-              f"entry point(s); the one true bundle is core/attn_spec.py")
-        return 1
-    print("lint_attn_spec: ok — no mode+rescale signatures outside "
-          "attn_spec.py")
-    return 0
-
+from repro.analysis import cli  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    print("benchmarks/lint_attn_spec.py is deprecated; running "
+          "`python -m repro.analysis --select REPRO006`", file=sys.stderr)
+    sys.exit(cli.main(["--select", "REPRO006"]))

@@ -1,67 +1,22 @@
 #!/usr/bin/env python
-"""AST lint: runtime/serving code reports through telemetry, not print().
+"""DEPRECATED shim — this lint is now ``repro.analysis`` rule REPRO009.
 
-The observability layer (src/repro/runtime/telemetry.py +
-src/repro/launch/obs.py, DESIGN.md §15) exists so every number the serving
-stack emits flows through ONE snapshot: counters/gauges/histograms land in
-the MetricsRegistry, human-readable summaries render from that snapshot via
-``obs.summarize_*`` and print through ``obs.emit``.  A bare ``print(`` in
-the runtime or the serve loop is a stat that escaped the registry — it
-can't be exported by ``--metrics-out``, can't be asserted by tests, and
-drifts from the summary the next time someone edits one but not the other.
+The bare-print check (runtime/serving numbers flow through the telemetry
+registry, DESIGN.md §15) moved into the unified invariant analyzer
+(DESIGN.md §16) with the rest of the AST lints.  This file is kept so
+local scripts and docs pointing at the old path keep working; it just
+runs the analyzer restricted to the ported rule:
 
-This lint fails (exit 1) on any ``print(...)`` call in
-``src/repro/runtime/`` or ``src/repro/launch/serve.py``.  The sanctioned
-sinks are allow-listed: telemetry.py itself (it owns no stats — but keep
-the door open for a debug dump) and launch/obs.py's ``emit``.  stdlib-only:
-runs in the CI lint job before any heavyweight deps are installed.
+    python -m repro.analysis --select REPRO009
 """
-from __future__ import annotations
-
-import ast
 import pathlib
 import sys
 
-REPO = pathlib.Path(__file__).resolve().parent.parent
-SCAN = [REPO / "src" / "repro" / "runtime",
-        REPO / "src" / "repro" / "launch" / "serve.py"]
-ALLOWED = {REPO / "src" / "repro" / "runtime" / "telemetry.py"}
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
-
-def _check_file(path: pathlib.Path) -> list[str]:
-    tree = ast.parse(path.read_text(), filename=str(path))
-    errors = []
-    for node in ast.walk(tree):
-        if (isinstance(node, ast.Call)
-                and isinstance(node.func, ast.Name)
-                and node.func.id == "print"):
-            rel = (path.relative_to(REPO) if path.is_relative_to(REPO)
-                   else path)
-            errors.append(
-                f"{rel}:{node.lineno}: bare print() in runtime/serving "
-                f"code — record the number in the MetricsRegistry and "
-                f"render it via launch/obs.summarize_* / obs.emit "
-                f"(DESIGN.md §15)")
-    return errors
-
-
-def main() -> int:
-    errors = []
-    for root in SCAN:
-        paths = sorted(root.rglob("*.py")) if root.is_dir() else [root]
-        for path in paths:
-            if path in ALLOWED:
-                continue
-            errors.extend(_check_file(path))
-    if errors:
-        print("\n".join(errors))
-        print(f"\nlint_prints: {len(errors)} stray print(s); runtime stats "
-              f"belong in runtime/telemetry.py's registry")
-        return 1
-    print("lint_prints: ok — no bare print() in src/repro/runtime/ or "
-          "launch/serve.py")
-    return 0
-
+from repro.analysis import cli  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    print("benchmarks/lint_prints.py is deprecated; running "
+          "`python -m repro.analysis --select REPRO009`", file=sys.stderr)
+    sys.exit(cli.main(["--select", "REPRO009"]))

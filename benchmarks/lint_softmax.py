@@ -1,103 +1,22 @@
 #!/usr/bin/env python
-"""AST lint: exactly ONE online-softmax rescale definition in the tree.
+"""DEPRECATED shim — this lint is now ``repro.analysis`` rule REPRO002.
 
-Before DESIGN.md §13 the ``(m, l, acc)`` rescale chain — ``exp(x - m_new)``
-correction weights feeding an ``acc * corr + update`` accumulate — was
-hand-copied across five kernel bodies, their XLA twins, and two split
-combiners, and the copies drifted (the PR 5 bf16-stat bug lived in exactly
-one of them).  The one true definition now lives in
-``src/repro/kernels/softmax_state.py``; every kernel calls it.
+The softmax-rescale-chain check (no exp-of-difference + mul-add
+accumulate outside ``kernels/softmax_state.py``) moved into the unified
+invariant analyzer (DESIGN.md §16) with the rest of the AST lints.  This
+file is kept so local scripts and docs pointing at the old path keep
+working; it just runs the analyzer restricted to the ported rule:
 
-This lint fails (exit 1) on any FUNCTION outside that module whose body
-contains BOTH halves of the chain:
-
-  1. an ``exp``/``exp2`` call whose argument subtracts something — the
-     rescale correction / shifted-softmax weight ``exp(x - m)``; and
-  2. an assignment of the form ``y = a * b + c`` (or ``y += a * b``) — the
-     rescaled accumulate.
-
-Either half alone is fine (oracles call ``jax.nn.softmax``; rooflines do
-mul-adds); both in one function is an online-softmax recurrence that
-belongs behind the shared API.  stdlib-only: runs in the CI lint job
-before any heavyweight deps are installed.
+    python -m repro.analysis --select REPRO002
 """
-from __future__ import annotations
-
-import ast
 import pathlib
 import sys
 
-REPO = pathlib.Path(__file__).resolve().parent.parent
-SCAN_ROOTS = ("src/repro", "benchmarks")
-ALLOWED = {REPO / "src" / "repro" / "kernels" / "softmax_state.py"}
-EXP_NAMES = {"exp", "exp2"}
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
-
-def _is_exp_of_sub(node: ast.AST) -> bool:
-    """``*.exp(... - ...)`` / ``exp2(... - ...)`` — a shifted exponential."""
-    if not isinstance(node, ast.Call) or not node.args:
-        return False
-    fn = node.func
-    name = fn.attr if isinstance(fn, ast.Attribute) else (
-        fn.id if isinstance(fn, ast.Name) else "")
-    if name not in EXP_NAMES:
-        return False
-    return any(isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Sub)
-               for sub in ast.walk(node.args[0]))
-
-
-def _is_mul_add_store(node: ast.AST) -> bool:
-    """``y = a * b + c`` or ``y += a * b`` — a rescaled accumulate."""
-    if isinstance(node, (ast.Assign, ast.AnnAssign)):
-        v = node.value
-        return (isinstance(v, ast.BinOp) and isinstance(v.op, ast.Add)
-                and any(isinstance(s, ast.BinOp)
-                        and isinstance(s.op, ast.Mult)
-                        for s in (v.left, v.right)))
-    if isinstance(node, ast.AugAssign):
-        return (isinstance(node.op, ast.Add)
-                and isinstance(node.value, ast.BinOp)
-                and isinstance(node.value.op, ast.Mult))
-    return False
-
-
-def _check_file(path: pathlib.Path) -> list[str]:
-    tree = ast.parse(path.read_text(), filename=str(path))
-    errors = []
-    for node in ast.walk(tree):
-        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            continue
-        # a nested def owns its own body: don't double-report the parent
-        body = [n for child in node.body for n in ast.walk(child)
-                if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
-                or n in node.body]
-        has_exp = any(_is_exp_of_sub(n) for n in body)
-        has_acc = any(_is_mul_add_store(n) for n in body)
-        if has_exp and has_acc:
-            rel = path.relative_to(REPO) if path.is_relative_to(REPO) else path
-            errors.append(
-                f"{rel}:{node.lineno}: function "
-                f"`{node.name}` hand-rolls an online-softmax rescale chain "
-                f"(exp-of-difference + mul-add accumulate); use "
-                f"repro.kernels.softmax_state instead (DESIGN.md §13)")
-    return errors
-
-
-def main() -> int:
-    errors = []
-    for root in SCAN_ROOTS:
-        for path in sorted((REPO / root).rglob("*.py")):
-            if path in ALLOWED:
-                continue
-            errors.extend(_check_file(path))
-    if errors:
-        print("\n".join(errors))
-        print(f"\nlint_softmax: {len(errors)} hand-rolled rescale chain(s); "
-              f"the one true definition is kernels/softmax_state.py")
-        return 1
-    print("lint_softmax: ok — no rescale chains outside softmax_state.py")
-    return 0
-
+from repro.analysis import cli  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    print("benchmarks/lint_softmax.py is deprecated; running "
+          "`python -m repro.analysis --select REPRO002`", file=sys.stderr)
+    sys.exit(cli.main(["--select", "REPRO002"]))

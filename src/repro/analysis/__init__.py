@@ -1,0 +1,18 @@
+"""repro.analysis — unified static invariant analyzer (DESIGN.md §16).
+
+Five passes over the tree's ASTs, each encoding a bug this codebase has
+actually shipped or structurally prevents:
+
+    dtype-flow   REPRO001/002  sub-fp32 softmax stats; hand-rolled rescale
+    retrace      REPRO003–006  stale-trace hazards around jax.jit/AttnSpec
+    pool-api     REPRO007      BlockPool/PrefixCache private-state touches
+    donation     REPRO008      use-after-donate of jitted buffers
+    bare-print   REPRO009      runtime stats escaping the telemetry registry
+
+Run ``python -m repro.analysis`` (stdlib-only — the CI lint job runs it
+with no JAX installed); suppress a single line with ``# noqa: REPRO0xx``;
+grandfathered findings live in ``analysis_baseline.txt``.
+"""
+from repro.analysis.baseline import DEFAULT_NAME
+from repro.analysis.cli import ALL_RULES, PASSES, main, run_passes
+from repro.analysis.core import Finding, Rule, SourceFile

@@ -1,0 +1,63 @@
+"""Baseline file: grandfathered findings, keyed by content fingerprint.
+
+A baseline entry is one line::
+
+    <fingerprint>  <rule>  <path>:<line>  # one-line justification
+
+Only the fingerprint (sha1 of path|rule|flagged-line-content, see
+:class:`repro.analysis.core.Finding`) is matched — the trailing fields
+are for the human reading the file, and the justification comment is
+REQUIRED by policy (DESIGN.md §16): a grandfathered violation without a
+why is just a violation.  Entries go stale when the flagged line is
+edited or removed; stale entries are reported (so the file shrinks over
+time) but do not fail the run.
+"""
+from __future__ import annotations
+
+import pathlib
+
+DEFAULT_NAME = "analysis_baseline.txt"
+
+_HEADER = """\
+# repro.analysis baseline — grandfathered findings (DESIGN.md §16).
+# One line per finding:  <fingerprint>  <rule>  <path>:<line>  # why
+# Regenerate with:  python -m repro.analysis --write-baseline
+# Policy: every entry carries a one-line justification; new code never
+# adds entries — fix the finding or suppress the single line with
+# `# noqa: REPRO0xx` and a reason.
+"""
+
+
+def load(path: pathlib.Path) -> set[str]:
+    """Fingerprints grandfathered by ``path`` (missing file = empty)."""
+    if not path.is_file():
+        return set()
+    fps: set[str] = set()
+    for raw in path.read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        fps.add(line.split()[0])
+    return fps
+
+
+def split(findings, fps):
+    """Partition ``findings`` into (kept, baselined) and report stale
+    baseline fingerprints that matched nothing."""
+    kept, baselined, seen = [], [], set()
+    for f in findings:
+        if f.fingerprint in fps:
+            baselined.append(f)
+            seen.add(f.fingerprint)
+        else:
+            kept.append(f)
+    stale = sorted(fps - seen)
+    return kept, baselined, stale
+
+
+def write(path: pathlib.Path, findings) -> None:
+    lines = [_HEADER]
+    for f in sorted(findings, key=lambda f: (f.rel, f.line, f.rule)):
+        lines.append(f"{f.fingerprint}  {f.rule}  {f.rel}:{f.line}"
+                     f"  # TODO: justify or fix")
+    path.write_text("\n".join(lines) + "\n")

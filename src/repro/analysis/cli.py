@@ -1,0 +1,159 @@
+"""``python -m repro.analysis`` — the unified invariant analyzer runner.
+
+Exit codes are stable and CI-facing:
+
+    0  clean (no findings, or all suppressed/baselined)
+    1  findings
+    2  usage or internal error (bad flag, unreadable root, git failure)
+
+Modes:
+
+    python -m repro.analysis                     # full tree
+    python -m repro.analysis --diff              # only files changed vs git
+    python -m repro.analysis src/repro/foo.py    # explicit file set
+    python -m repro.analysis --select REPRO002   # one rule (the shims)
+    python -m repro.analysis --list-rules        # the rule catalog
+    python -m repro.analysis --write-baseline    # grandfather current tree
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import subprocess
+import sys
+
+from repro.analysis import (baseline, core, donation, dtype_flow, pool_api,
+                            prints, retrace)
+
+PASSES = (dtype_flow, retrace, pool_api, donation, prints)
+
+_PARSE_RULE = core.Rule(
+    "REPRO000", "parse-error", "file failed to parse",
+    "an unparseable file is invisible to every other rule")
+
+ALL_RULES = (_PARSE_RULE,) + tuple(r for p in PASSES for r in p.RULES)
+
+
+def run_passes(sf: core.SourceFile, select: set[str] | None = None):
+    """All (kept, suppressed) findings for one file."""
+    found: list[core.Finding] = []
+    if sf.tree is None and sf.parse_error is not None:
+        e = sf.parse_error
+        found.append(core.Finding(sf.rel, e.lineno or 1, "REPRO000",
+                                  f"syntax error: {e.msg}"))
+    else:
+        for p in PASSES:
+            found.extend(p.run(sf))
+    if select is not None:
+        found = [f for f in found if f.rule in select]
+    kept = [f for f in found if not sf.suppressed(f)]
+    return kept, len(found) - len(kept)
+
+
+def _git_changed(root: pathlib.Path) -> set[str]:
+    """Repo-relative posix paths changed vs HEAD, plus untracked files."""
+    def lines(*cmd):
+        return subprocess.run(
+            ["git", "-C", str(root), *cmd], check=True,
+            capture_output=True, text=True).stdout.splitlines()
+    changed = lines("diff", "--name-only", "HEAD")
+    changed += lines("ls-files", "--others", "--exclude-standard")
+    return {p.strip() for p in changed if p.strip().endswith(".py")}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Unified invariant analyzer: dtype-flow, retrace-"
+                    "hazard, pool-API, donation-safety, bare-print "
+                    "(DESIGN.md §16).")
+    ap.add_argument("paths", nargs="*",
+                    help="restrict the scan to these repo-relative files")
+    ap.add_argument("--diff", action="store_true",
+                    help="scan only files changed vs git HEAD (+ untracked)")
+    ap.add_argument("--root", default=None,
+                    help="tree to scan (default: this checkout)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: <root>/"
+                         f"{baseline.DEFAULT_NAME})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather every current finding into the "
+                         "baseline file and exit 0")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run (e.g. REPRO002)")
+    ap.add_argument("--list-rules", action="store_true")
+    try:
+        args = ap.parse_args(argv)
+    except SystemExit as e:          # argparse exits 0 on --help, 2 on usage
+        return 0 if e.code in (0, None) else 2
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(f"{r.id}  [{r.name}] {r.summary}")
+            print(f"         why: {r.rationale}")
+        return 0
+
+    root = pathlib.Path(args.root).resolve() if args.root else core.REPO
+    if not root.is_dir():
+        print(f"repro.analysis: root {root} is not a directory",
+              file=sys.stderr)
+        return 2
+
+    select = None
+    if args.select:
+        select = {s.strip().upper() for s in args.select.split(",")}
+        known = {r.id for r in ALL_RULES}
+        if not select <= known:
+            print(f"repro.analysis: unknown rule(s) "
+                  f"{sorted(select - known)}; see --list-rules",
+                  file=sys.stderr)
+            return 2
+
+    only: set[str] | None = None
+    if args.diff:
+        try:
+            only = _git_changed(root)
+        except (subprocess.CalledProcessError, FileNotFoundError) as e:
+            print(f"repro.analysis: --diff needs a git checkout at {root} "
+                  f"({e})", file=sys.stderr)
+            return 2
+    if args.paths:
+        explicit = {pathlib.Path(p).as_posix() for p in args.paths}
+        only = explicit if only is None else (only & explicit)
+
+    findings: list[core.Finding] = []
+    n_suppressed = n_files = 0
+    for sf in core.iter_source_files(root, only):
+        n_files += 1
+        kept, sup = run_passes(sf, select)
+        findings.extend(kept)
+        n_suppressed += sup
+
+    bl_path = (pathlib.Path(args.baseline) if args.baseline
+               else root / baseline.DEFAULT_NAME)
+    if args.write_baseline:
+        baseline.write(bl_path, findings)
+        print(f"repro.analysis: wrote {len(findings)} baseline entr"
+              f"{'y' if len(findings) == 1 else 'ies'} to {bl_path}")
+        return 0
+    kept, baselined, stale = baseline.split(findings, baseline.load(bl_path))
+
+    for f in sorted(kept, key=lambda f: (f.rel, f.line, f.rule)):
+        print(f.render())
+    for fp in stale:
+        print(f"repro.analysis: stale baseline entry {fp} (fixed? remove "
+              f"it from {bl_path.name})")
+    tallies = []
+    if n_suppressed:
+        tallies.append(f"{n_suppressed} suppressed")
+    if baselined:
+        tallies.append(f"{len(baselined)} baselined")
+    extra = f" ({', '.join(tallies)})" if tallies else ""
+    if kept:
+        print(f"repro.analysis: {len(kept)} finding(s) across {n_files} "
+              f"file(s){extra} — scan just your changes with "
+              f"`python -m repro.analysis --diff`")
+        return 1
+    print(f"repro.analysis: ok — {len(PASSES)} passes, "
+          f"{len(ALL_RULES) - 1} rules, {n_files} files clean{extra}")
+    return 0

@@ -1,0 +1,157 @@
+"""Shared infrastructure for the repro.analysis passes (DESIGN.md §16).
+
+One :class:`SourceFile` per scanned file (text + lazily parsed AST), one
+:class:`Finding` per rule hit (repo-relative path, line, rule id, message,
+and the stripped source line — the line text, not the line NUMBER, feeds
+the fingerprint, so baselined findings survive unrelated edits above
+them).  Suppression is per-line and per-rule: ``# noqa: REPRO0xx`` on the
+flagged line silences exactly that rule (a bare ``# noqa`` does NOT — a
+suppression must say which invariant it is waiving).
+
+Everything in this package is stdlib-only: the CI lint job runs the
+analyzer in a ruff-only environment with no JAX/numpy installed, exactly
+like the three ``benchmarks/lint_*.py`` scripts it replaced.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import pathlib
+import re
+
+# repo root when running from a source checkout: src/repro/analysis/ -> repo
+REPO = pathlib.Path(__file__).resolve().parents[3]
+
+# directories the full run walks, repo-relative; per-rule scoping inside the
+# pass modules narrows further (e.g. dtype-flow only reads kernels/)
+SCAN_ROOTS = ("src/repro", "benchmarks", "tests", "examples")
+# the fixture corpus is INTENTIONALLY full of violations
+EXCLUDE_PREFIXES = ("tests/analysis_fixtures",)
+
+_NOQA = re.compile(r"#\s*noqa:\s*(?P<codes>[A-Z][A-Z0-9 ,]*)", re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """Catalog entry: the id is what suppressions and the baseline key on;
+    ``rationale`` names the historical bug the rule encodes."""
+    id: str
+    name: str
+    summary: str
+    rationale: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rel: str        # repo-relative posix path
+    line: int       # 1-indexed
+    rule: str       # "REPRO0xx"
+    message: str
+    source: str = ""   # stripped text of the flagged line
+    severity: str = "error"
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable id for baselining: path + rule + line CONTENT (not line
+        number), so entries survive edits elsewhere in the file."""
+        blob = f"{self.rel}|{self.rule}|{self.source.strip()}"
+        return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+    def render(self) -> str:
+        return f"{self.rel}:{self.line}: {self.rule} {self.message}"
+
+
+class SourceFile:
+    """One scanned file: text, lines, lazily parsed AST, suppression map."""
+
+    def __init__(self, rel: str, text: str):
+        self.rel = rel.replace("\\", "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self._tree: ast.Module | None = None
+        self.parse_error: SyntaxError | None = None
+
+    @property
+    def tree(self) -> ast.Module | None:
+        if self._tree is None and self.parse_error is None:
+            try:
+                self._tree = ast.parse(self.text, filename=self.rel)
+            except SyntaxError as e:          # surfaced as a REPRO000 finding
+                self.parse_error = e
+        return self._tree
+
+    def line(self, lineno: int) -> str:
+        if 0 < lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def finding(self, node: ast.AST | int, rule: str, message: str) -> Finding:
+        lineno = node if isinstance(node, int) else getattr(node, "lineno", 1)
+        return Finding(rel=self.rel, line=lineno, rule=rule, message=message,
+                       source=self.line(lineno).strip())
+
+    def suppressed(self, f: Finding) -> bool:
+        m = _NOQA.search(self.line(f.line))
+        if not m:
+            return False
+        codes = {c.strip().upper() for c in m.group("codes").split(",")}
+        return f.rule.upper() in codes
+
+
+def walk_scope(fn: ast.AST):
+    """Yield every node under ``fn`` WITHOUT descending into nested
+    function/class scopes (their bodies are analyzed on their own).
+    Lambda bodies are kept: they cannot assign, so they share the
+    enclosing scope's dataflow."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def functions_of(tree: ast.Module):
+    """Every function definition in the module, including nested ones and
+    methods — each is analyzed as its own scope."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def dotted_name(node: ast.AST) -> str:
+    """``jax.jit`` -> "jax.jit"; non-name chains -> "" (best-effort)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def iter_source_files(root: pathlib.Path, only: set[str] | None = None):
+    """Yield :class:`SourceFile` for every .py under the scan roots that
+    exist below ``root`` (missing roots are skipped so the analyzer also
+    runs on partial trees, e.g. the self-test's temp copy of kernels/).
+    ``only`` restricts to an explicit set of repo-relative posix paths —
+    the ``--diff`` / positional-paths mode."""
+    seen: set[str] = set()
+    for sub in SCAN_ROOTS:
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel in seen or "__pycache__" in rel:
+                continue
+            if any(rel.startswith(p) for p in EXCLUDE_PREFIXES):
+                continue
+            if only is not None and rel not in only:
+                continue
+            seen.add(rel)
+            yield SourceFile(rel, path.read_text())

@@ -1,0 +1,163 @@
+"""donation-safety pass: a donated buffer is gone after the call.
+
+REPRO008 — an argument donated through ``jax.jit(..., donate_argnums=)``
+that is read again later in the same scope without being rebound first.
+Donation hands the buffer to XLA: the old array aliases freed (or
+reused) memory, and reading it is undefined — sometimes stale bytes,
+sometimes a runtime error, never a type error.  The serve loop's donated
+decode/verify launches are safe only because every call site immediately
+rebinds the cache (``logits, holder["cache"] = step_fn(params,
+holder["cache"], ...)``) — a convention this pass machine-enforces.
+
+The check is intraprocedural and path-based: the donated argument
+expression is reduced to an access path (``cache``, ``holder['cache']``,
+``self.cache``); any LOAD of that path on a later line, before a STORE
+rebinds it, is flagged.  A store in the calling statement itself (the
+rebind idiom) clears the path immediately.  Nested function bodies are
+skipped — they execute at another time.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, SourceFile, functions_of, walk_scope
+
+RULES = (
+    Rule("REPRO008", "use-after-donate",
+         "argument donated via donate_argnums referenced after the call",
+         "the serve loop's donated verify launch was guarded only by the "
+         "rebind convention; a read of the donated buffer aliases freed "
+         "memory — stale bytes or a runtime error, never a type error"),
+)
+
+
+def _donate_nums(call: ast.Call) -> tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return tuple(e.value for e in v.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, int))
+    return ()
+
+
+def _is_jit(call: ast.AST) -> bool:
+    if not isinstance(call, ast.Call):
+        return False
+    fn = call.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else "")
+    return name == "jit"
+
+
+def _path(node: ast.AST):
+    """Reduce an expression to a hashable access path, or None.
+
+    ``cache`` -> ('cache',); ``holder["cache"]`` -> ('holder', "'cache'");
+    ``self.cache`` -> ('self', '.cache').  Non-constant subscripts are not
+    tracked (the alias set is unknowable statically)."""
+    if isinstance(node, ast.Name):
+        return (node.id,)
+    if isinstance(node, ast.Attribute):
+        base = _path(node.value)
+        return base + ("." + node.attr,) if base else None
+    if isinstance(node, ast.Subscript):
+        base = _path(node.value)
+        if base is None:
+            return None
+        sl = node.slice
+        if isinstance(sl, ast.Constant):
+            return base + (repr(sl.value),)
+        return None
+    return None
+
+
+def _statements(scope: ast.AST):
+    """Every statement in the scope in source order, nested compound
+    bodies flattened, nested function/class bodies excluded."""
+    stmts = []
+    for node in walk_scope(scope):
+        if isinstance(node, ast.stmt) and not isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            stmts.append(node)
+    return sorted(stmts, key=lambda s: (s.lineno, s.col_offset))
+
+
+def _loads_stores(stmt: ast.stmt):
+    """(loaded paths, stored paths) of one statement, skipping nested
+    function bodies."""
+    loads, stores = [], []
+    for node in walk_scope(stmt):
+        p = _path(node) if isinstance(
+            node, (ast.Name, ast.Attribute, ast.Subscript)) else None
+        if p is None:
+            continue
+        ctx = getattr(node, "ctx", None)
+        if isinstance(ctx, (ast.Store, ast.Del)):
+            stores.append(p)
+        elif isinstance(ctx, ast.Load):
+            loads.append(p)
+    # only the OUTERMOST path nodes matter, but inner Name loads of a
+    # subscripted store (holder["cache"] = ...) appear as loads of
+    # ('holder',); that read is part of the store and harmless.
+    return loads, stores
+
+
+def _check_scope(sf: SourceFile, scope: ast.AST, out: list) -> None:
+    # donated-jit aliases bound in this scope
+    donated_of: dict[str, tuple[int, ...]] = {}
+    for node in walk_scope(scope):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and _is_jit(node.value)):
+            nums = _donate_nums(node.value)
+            if nums:
+                donated_of[node.targets[0].id] = nums
+    if not donated_of:
+        return
+
+    stmts = _statements(scope)
+    # pending[path] = (call lineno, alias name) awaiting a rebind
+    pending: dict[tuple, tuple[int, str]] = {}
+    for stmt in stmts:
+        loads, stores = _loads_stores(stmt)
+        # flag loads of still-donated paths (reads inside the statement
+        # that rebinds the path at the SAME line are the rebind idiom)
+        stored_here = set(stores)
+        for p in loads:
+            if p in pending and p not in stored_here:
+                lineno, alias = pending[p]
+                out.append(sf.finding(
+                    stmt, "REPRO008",
+                    f"`{'.'.join(map(str, p))}` was donated to jitted "
+                    f"`{alias}` (line {lineno}) and read again without "
+                    f"rebinding — the donated buffer aliases freed memory"))
+                del pending[p]
+        for p in stores:
+            pending.pop(p, None)
+        # new donations from calls in this statement
+        for node in ast.walk(stmt):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in donated_of):
+                continue
+            for i in donated_of[node.func.id]:
+                if i < len(node.args):
+                    p = _path(node.args[i])
+                    if p is not None and p not in stored_here:
+                        pending[p] = (node.lineno, node.func.id)
+    # unrebound paths at scope end are fine: nothing read them again
+
+
+def run(sf: SourceFile) -> list:
+    out: list = []
+    if sf.tree is None:
+        return out
+    _check_scope(sf, sf.tree, out)
+    for fn in functions_of(sf.tree):
+        _check_scope(sf, fn, out)
+    return out

@@ -1,0 +1,255 @@
+"""dtype-flow pass: online-softmax statistics must live in fp32.
+
+REPRO001 — intraprocedural dtype/taint inference over kernel bodies in
+``src/repro/kernels/``.  The online-softmax state — the running max ``m``,
+denominator ``l``, accumulator ``acc``, and anything returned by
+``softmax_state.init/update/merge*`` — must never be cast to, or born in,
+a sub-fp32 dtype.  This is the PR 5 bug class: ``combine_splits`` once
+merged bf16 split statistics in bf16 (the exp/sum followed the input
+dtype), and near-tie maxima lost mass.  The fp32-on-entry upcasts now
+live INSIDE ``kernels/softmax_state.py`` (DESIGN.md §13), so any sub-fp32
+state sighting in a kernel body is a reintroduction.
+
+REPRO002 — a function outside ``softmax_state.py`` containing BOTH halves
+of a hand-rolled rescale chain: an ``exp``/``exp2``-of-difference (the
+shifted-softmax correction weight) and a mul-add accumulate.  Either half
+alone is fine (oracles call ``jax.nn.softmax``; rooflines do mul-adds);
+both in one function is an online-softmax recurrence that belongs behind
+the shared API.  Ported from ``benchmarks/lint_softmax.py``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.core import Rule, SourceFile, functions_of, walk_scope
+
+RULES = (
+    Rule("REPRO001", "dtype-flow",
+         "online-softmax state cast to or born in a sub-fp32 dtype",
+         "PR 5: combine_splits merged bf16 split stats in bf16 — exp/sum "
+         "followed the input dtype and near-tie maxima lost mass; stats "
+         "are fp32 by contract (DESIGN.md §13)"),
+    Rule("REPRO002", "rescale-chain",
+         "hand-rolled online-softmax rescale chain outside softmax_state.py",
+         "pre-§13 the (m, l, acc) recurrence was hand-copied across five "
+         "kernel bodies and the copies drifted; one true definition lives "
+         "in kernels/softmax_state.py"),
+)
+
+_KERNELS = "src/repro/kernels/"
+_CHAIN_SCOPES = ("src/repro/", "benchmarks/")
+_STATE_MODULE = "src/repro/kernels/softmax_state.py"
+
+# names that ARE online-softmax state in kernel scope: m, l, acc and their
+# decorated spellings (m_new, l_ref, accT, m2, ...).  "lengths"/"mask"/
+# "mode" do not match: the first character after the stem must be T, _, or
+# a digit.
+_STATE_NAME = re.compile(r"(?:m|l|acc)(?:T|[_0-9][A-Za-z0-9_]*)?$")
+# softmax_state calls whose RESULT is state (finalize returns the output)
+_STATE_CALLS = {"init", "update", "merge", "merge_splits", "merge_weights"}
+_SUB_FP32 = {"bfloat16", "float16", "half", "bf16", "fp16", "f16",
+             "float8_e4m3fn", "float8_e5m2", "float8_e4m3",
+             "float8_e4m3b11fnuz", "fp8", "int8", "uint8", "int4"}
+_ARRAY_CTORS = {"zeros", "ones", "full", "empty", "array", "asarray",
+                "zeros_like", "ones_like", "full_like", "empty_like"}
+_EXP_NAMES = {"exp", "exp2"}
+
+
+def _callee(node: ast.Call) -> str:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def _is_subfp32(node: ast.AST | None) -> bool:
+    """An explicit sub-fp32 dtype expression: ``jnp.bfloat16``,
+    ``"float16"``, ``jnp.dtype("int8")``, ..."""
+    if node is None:
+        return False
+    if isinstance(node, ast.Attribute):
+        return node.attr in _SUB_FP32
+    if isinstance(node, ast.Name):
+        return node.id in _SUB_FP32
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, str) and node.value in _SUB_FP32
+    if isinstance(node, ast.Call) and _callee(node) == "dtype" and node.args:
+        return _is_subfp32(node.args[0])
+    return False
+
+
+def _is_state_call(node: ast.AST) -> bool:
+    """``softmax_state.update(...)`` / ``merge_splits(...)`` — a call whose
+    result is online-softmax state."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = _callee(node)
+    if name not in _STATE_CALLS:
+        return False
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        # require the receiver to be the module (softmax_state.update), so
+        # dict.update()/set.update() never taint
+        return isinstance(fn.value, ast.Name) and "softmax" in fn.value.id
+    # from-imported spellings: only the unambiguous names taint
+    return name in {"merge_splits", "merge_weights"}
+
+
+def _is_state_expr(node: ast.AST, tainted: set[str]) -> bool:
+    """Is this expression online-softmax state?  Names (seeded + inferred),
+    their subscripts/transposes, state-producing calls, tuples and binops
+    of state.  ``finalize(...)`` is NOT state — its result is the attention
+    output, legitimately cast back to the query dtype."""
+    if isinstance(node, ast.Name):
+        return node.id in tainted or bool(_STATE_NAME.match(node.id))
+    if isinstance(node, ast.Subscript):
+        return _is_state_expr(node.value, tainted)
+    if isinstance(node, ast.Attribute) and node.attr == "T":
+        return _is_state_expr(node.value, tainted)
+    if isinstance(node, ast.Call):
+        return _is_state_call(node)
+    if isinstance(node, ast.BinOp):
+        return (_is_state_expr(node.left, tainted)
+                or _is_state_expr(node.right, tainted))
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(_is_state_expr(e, tainted) for e in node.elts)
+    return False
+
+
+def _target_names(target: ast.AST):
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            yield from _target_names(e)
+    elif isinstance(target, ast.Starred):
+        yield from _target_names(target.value)
+
+
+def _taint(fn: ast.AST) -> set[str]:
+    """Forward taint propagation over the function scope: parameters and
+    locals named like state seed the set; assignment from a state
+    expression spreads it.  Two sweeps pick up loop-carried flows."""
+    tainted: set[str] = set()
+    args = getattr(fn, "args", None)
+    if args is not None:
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if _STATE_NAME.match(a.arg):
+                tainted.add(a.arg)
+    for _ in range(2):
+        for node in walk_scope(fn):
+            if isinstance(node, ast.Assign):
+                value, targets = node.value, node.targets
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                value, targets = node.value, [node.target]
+            elif isinstance(node, ast.NamedExpr):
+                value, targets = node.value, [node.target]
+            else:
+                continue
+            if value is None:
+                continue
+            if any(_is_state_expr(n, tainted) for n in ast.walk(value)
+                   if isinstance(n, (ast.Name, ast.Call))):
+                for t in targets:
+                    tainted.update(_target_names(t))
+    return tainted
+
+
+def _check_dtype_flow(sf: SourceFile, fn: ast.AST, out: list) -> None:
+    tainted = _taint(fn)
+    for node in walk_scope(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _callee(node)
+        # state.astype(<sub-fp32>) — the cast
+        if (callee == "astype" and node.args
+                and _is_subfp32(node.args[0])
+                and isinstance(node.func, ast.Attribute)
+                and _is_state_expr(node.func.value, tainted)):
+            out.append(sf.finding(
+                node, "REPRO001",
+                "online-softmax state cast to a sub-fp32 dtype — m/l/acc "
+                "stay fp32; the domain belongs to kernels/softmax_state.py "
+                "(DESIGN.md §13)"))
+        # softmax_state.init(..., dtype=<sub-fp32>) — born narrow
+        if _is_state_call(node) and callee == "init":
+            for kw in node.keywords:
+                if kw.arg == "dtype" and _is_subfp32(kw.value):
+                    out.append(sf.finding(
+                        node, "REPRO001",
+                        "softmax_state.init with a sub-fp32 dtype — state "
+                        "is born narrow; stats must start fp32 "
+                        "(DESIGN.md §13)"))
+    # state-named variable built by an array ctor carrying a sub-fp32 dtype
+    for node in walk_scope(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        value = node.value
+        if not (isinstance(value, ast.Call)
+                and _callee(value) in _ARRAY_CTORS):
+            continue
+        dtype_args = list(value.args) + [kw.value for kw in value.keywords]
+        if not any(_is_subfp32(a) for a in dtype_args):
+            continue
+        if any(_STATE_NAME.match(name)
+               for t in node.targets for name in _target_names(t)):
+            out.append(sf.finding(
+                node, "REPRO001",
+                "online-softmax state born in a sub-fp32 dtype — allocate "
+                "m/l/acc as fp32 (DESIGN.md §13)"))
+
+
+# --- REPRO002: the ported lint_softmax chain detector -----------------------
+
+def _is_exp_of_sub(node: ast.AST) -> bool:
+    """``exp(... - ...)`` / ``exp2(... - ...)`` — a shifted exponential."""
+    if not isinstance(node, ast.Call) or not node.args:
+        return False
+    if _callee(node) not in _EXP_NAMES:
+        return False
+    return any(isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Sub)
+               for sub in ast.walk(node.args[0]))
+
+
+def _is_mul_add_store(node: ast.AST) -> bool:
+    """``y = a * b + c`` or ``y += a * b`` — a rescaled accumulate."""
+    if isinstance(node, (ast.Assign, ast.AnnAssign)):
+        v = node.value
+        return (isinstance(v, ast.BinOp) and isinstance(v.op, ast.Add)
+                and any(isinstance(s, ast.BinOp)
+                        and isinstance(s.op, ast.Mult)
+                        for s in (v.left, v.right)))
+    if isinstance(node, ast.AugAssign):
+        return (isinstance(node.op, ast.Add)
+                and isinstance(node.value, ast.BinOp)
+                and isinstance(node.value.op, ast.Mult))
+    return False
+
+
+def _check_chain(sf: SourceFile, fn: ast.AST, out: list) -> None:
+    body = list(walk_scope(fn))
+    if (any(_is_exp_of_sub(n) for n in body)
+            and any(_is_mul_add_store(n) for n in body)):
+        out.append(sf.finding(
+            fn, "REPRO002",
+            f"function `{fn.name}` hand-rolls an online-softmax rescale "
+            f"chain (exp-of-difference + mul-add accumulate); use "
+            f"repro.kernels.softmax_state instead (DESIGN.md §13)"))
+
+
+def run(sf: SourceFile) -> list:
+    out: list = []
+    in_kernels = sf.rel.startswith(_KERNELS)
+    in_chain_scope = (sf.rel.startswith(_CHAIN_SCOPES)
+                      and sf.rel != _STATE_MODULE)
+    if not (in_kernels or in_chain_scope) or sf.tree is None:
+        return out
+    for fn in functions_of(sf.tree):
+        if in_kernels and sf.rel != _STATE_MODULE:
+            _check_dtype_flow(sf, fn, out)
+        if in_chain_scope:
+            _check_chain(sf, fn, out)
+    return out

@@ -1,0 +1,50 @@
+"""pool-invariant pass: BlockPool/PrefixCache private state stays home.
+
+REPRO007 — any read or write of the paged-cache/prefix-cache private
+state (`_free`, `_chain`, `_nshared`, `_budget`, `_host_free`, `_lru`,
+`_pinned`, `_root`, `_uid`, `_assert_writable`) outside
+``runtime/paged_cache.py`` / ``runtime/prefix_cache.py``.  The free-list /
+refcount / trie invariants from PRs 4–6 (free ⟺ refcount 0 conservation,
+COW write guards, LRU-leaf-only eviction) hold because every mutation
+funnels through the public API — ``admit/extend/append/truncate/swap_*/
+release`` for state motion, ``audit/check_conservation/observe/stats/
+free_ids/cached_block_ids`` for inspection.  A test or benchmark peeking
+at ``bp._free`` works until the representation changes; hypothesis stress
+tests then catch the corruption only after the fact.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, SourceFile
+
+RULES = (
+    Rule("REPRO007", "pool-private-state",
+         "BlockPool/PrefixCache private state touched outside its module",
+         "PRs 4–6: free-list/refcount/trie corruption was only caught by "
+         "hypothesis stress tests after the fact; the invariants hold "
+         "because mutation funnels through the public API"),
+)
+
+_OWNERS = ("src/repro/runtime/paged_cache.py",
+           "src/repro/runtime/prefix_cache.py")
+# attribute names distinctive to BlockPool/PrefixCache internals
+_PRIVATE = {"_free", "_chain", "_nshared", "_budget", "_host_free",
+            "_lru", "_pinned", "_root", "_uid", "_assert_writable"}
+
+
+def run(sf: SourceFile) -> list:
+    out: list = []
+    if sf.rel in _OWNERS or sf.tree is None:
+        return out
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Attribute) and node.attr in _PRIVATE:
+            kind = ("written" if isinstance(node.ctx, (ast.Store, ast.Del))
+                    else "read")
+            out.append(sf.finding(
+                node, "REPRO007",
+                f"private BlockPool/PrefixCache state `.{node.attr}` "
+                f"{kind} outside runtime/paged_cache.py / "
+                f"runtime/prefix_cache.py — go through the public "
+                f"audit/observe/accessor API (DESIGN.md §16)"))
+    return out

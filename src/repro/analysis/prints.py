@@ -1,0 +1,45 @@
+"""bare-print pass: runtime/serving numbers flow through telemetry.
+
+REPRO009 — a bare ``print(...)`` in ``src/repro/runtime/`` or the serve
+loop.  The observability layer (DESIGN.md §15) exists so every number the
+serving stack emits flows through ONE snapshot: counters/gauges/
+histograms land in the MetricsRegistry, summaries render from that
+snapshot via ``obs.summarize_*`` and print through ``obs.emit``.  A bare
+print is a stat that escaped the registry — it can't be exported by
+``--metrics-out``, can't be asserted by tests, and drifts from the
+summary the next time someone edits one but not the other.  Ported from
+``benchmarks/lint_prints.py``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, SourceFile
+
+RULES = (
+    Rule("REPRO009", "bare-print",
+         "bare print() in runtime/serving code",
+         "DESIGN.md §15: a printed stat escaped the MetricsRegistry — not "
+         "exportable, not assertable, drifts from the rendered summary"),
+)
+
+_SCOPE = ("src/repro/runtime/", "src/repro/launch/serve.py")
+# telemetry owns no stats, but keep the door open for a debug dump
+_ALLOWED = {"src/repro/runtime/telemetry.py"}
+
+
+def run(sf: SourceFile) -> list:
+    out: list = []
+    if (not (sf.rel.startswith(_SCOPE[0]) or sf.rel == _SCOPE[1])
+            or sf.rel in _ALLOWED or sf.tree is None):
+        return out
+    for node in ast.walk(sf.tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "print"):
+            out.append(sf.finding(
+                node, "REPRO009",
+                "bare print() in runtime/serving code — record the number "
+                "in the MetricsRegistry and render it via "
+                "launch/obs.summarize_* / obs.emit (DESIGN.md §15)"))
+    return out

@@ -1,0 +1,316 @@
+"""retrace-hazard pass: jit traces must not depend on ambient state.
+
+REPRO003 — a jitted function (``jax.jit``, ``@attn_entry``,
+``@jit_with_rescale``) that reads a MUTABLE module-level global (dict /
+list / set / deque / ...) or declares ``global``.  The global's value is
+baked into the trace at first call; mutating it later silently serves the
+stale trace.  This is exactly the bug class ``jit_with_rescale`` was
+built to kill: the process-default rescale mode is resolved BEFORE the
+jit-cache lookup so flipping it can never serve a stale trace.
+
+REPRO004 — an ``@attn_entry(uses=...)`` entry whose body reads a spec
+field NOT declared in its ``uses`` tuple.  ``canonicalize`` projects the
+spec onto ``uses`` before keying the jit cache (DESIGN.md §14), so an
+undeclared field is reset to its default before the trace ever sees it —
+the entry silently runs the default no matter what the caller set.
+
+REPRO005 — an unhashable literal (list/dict/set/comprehension) passed as
+a static argument of a jitted callable.  jax raises at call time, but
+only on the paths that actually execute; the analyzer catches the dead
+branches too.
+
+REPRO006 — a function signature outside ``core/attn_spec.py`` declaring
+BOTH ``mode=`` and ``rescale=``: a re-introduced pre-AttnSpec keyword-soup
+attention entry.  Ported from ``benchmarks/lint_attn_spec.py``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Rule, SourceFile, dotted_name, functions_of,
+                                 walk_scope)
+
+RULES = (
+    Rule("REPRO003", "retrace-mutable-global",
+         "jitted function closes over mutable module/global state",
+         "a traced read of a module-level dict/list bakes the value into "
+         "the compiled function; later mutation serves a stale trace "
+         "(the bug class jit_with_rescale's pre-cache resolution kills)"),
+    Rule("REPRO004", "attn-spec-uses",
+         "attn_entry reads a spec field not declared in its uses= tuple",
+         "canonicalize() projects the spec onto uses= before the jit key "
+         "(DESIGN.md §14); an undeclared field is silently reset to its "
+         "default before the trace sees it"),
+    Rule("REPRO005", "unhashable-static",
+         "unhashable literal passed as a static jit argument",
+         "static args key the jit cache and must hash; a list/dict/set "
+         "raises at call time — and only on the paths that run"),
+    Rule("REPRO006", "attn-spec-signature",
+         "function declares both mode= and rescale= (pre-AttnSpec entry)",
+         "pre-§14 every attention entry grew the same six keywords and "
+         "call sites drifted; the one true bundle is core/attn_spec.py"),
+)
+
+_SCOPE = ("src/repro/", "benchmarks/")
+_ATTN_SPEC_MODULE = "src/repro/core/attn_spec.py"
+
+# kept in sync with core/attn_spec.AttnSpec (tests/test_analysis.py pins
+# this list against dataclasses.fields(AttnSpec) — the analyzer itself
+# must not import jax)
+SPEC_FIELDS = ("scale", "mode", "rescale", "kv_splits", "kv_dtype", "block",
+               "use_kernels", "interpret", "spec_tokens", "spec_draft")
+# fields every entry may read: scale is always kept by project()
+_ALWAYS_KEPT = {"scale"}
+
+_MUTABLE_CTORS = {"dict", "list", "set", "defaultdict", "deque",
+                  "OrderedDict", "Counter"}
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp, ast.GeneratorExp)
+_JIT_NAMES = {"jax.jit", "jit", "jit_with_rescale",
+              "softmax_state.jit_with_rescale"}
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = dotted_name(node.func)
+    if name in _JIT_NAMES or name.endswith(".jit"):
+        return True
+    # functools.partial(jax.jit, ...)
+    if name.endswith("partial") and node.args:
+        return dotted_name(node.args[0]).endswith("jit")
+    return False
+
+
+def _jit_decorated(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        name = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+        if (name in _JIT_NAMES or name.endswith(".jit")
+                or name.endswith("jit_with_rescale")
+                or name.endswith("attn_entry")):
+            return True
+        if isinstance(dec, ast.Call) and _is_jit_call(dec):
+            return True
+    return False
+
+
+def _mutable_globals(tree: ast.Module) -> set[str]:
+    """Module-level names bound to a mutable container."""
+    out: set[str] = set()
+    for node in tree.body:
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        value = node.value
+        if value is None:
+            continue
+        mutable = isinstance(value, (ast.Dict, ast.List, ast.Set,
+                                     ast.ListComp, ast.DictComp, ast.SetComp))
+        if (isinstance(value, ast.Call)
+                and dotted_name(value.func).split(".")[-1] in _MUTABLE_CTORS):
+            mutable = True
+        if not mutable:
+            continue
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name):
+                out.add(t.id)
+    return out
+
+
+def _local_names(fn: ast.AST) -> set[str]:
+    """Names bound inside the function: params, assignments, loop targets,
+    withitems, comprehension targets — anything shadowing a global."""
+    names: set[str] = set()
+    args = getattr(fn, "args", None)
+    if args is not None:
+        for a in (args.posonlyargs + args.args + args.kwonlyargs
+                  + ([args.vararg] if args.vararg else [])
+                  + ([args.kwarg] if args.kwarg else [])):
+            names.add(a.arg)
+    for node in walk_scope(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.comprehension):
+            names.update(n.id for n in ast.walk(node.target)
+                         if isinstance(n, ast.Name))
+    return names
+
+
+def _check_mutable_closure(sf: SourceFile, fn: ast.AST, mutable: set[str],
+                           out: list) -> None:
+    locals_ = _local_names(fn)
+    flagged: set[str] = set()
+    for node in walk_scope(fn):
+        if isinstance(node, ast.Global):
+            out.append(sf.finding(
+                node, "REPRO003",
+                f"jitted function `{getattr(fn, 'name', '<lambda>')}` "
+                f"declares `global` — traced writes to module state are a "
+                f"retrace/staleness hazard (DESIGN.md §14)"))
+        if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                and node.id in mutable and node.id not in locals_
+                and node.id not in flagged):
+            flagged.add(node.id)
+            out.append(sf.finding(
+                node, "REPRO003",
+                f"jitted function `{getattr(fn, 'name', '<lambda>')}` reads "
+                f"mutable module-level `{node.id}` — its value is baked "
+                f"into the trace; pass it as an argument or resolve it "
+                f"before the jit-cache lookup (DESIGN.md §14)"))
+
+
+def _attn_entry_uses(fn: ast.FunctionDef | ast.AsyncFunctionDef):
+    """The uses= tuple of an @attn_entry decorator, or None."""
+    for dec in fn.decorator_list:
+        if not (isinstance(dec, ast.Call)
+                and dotted_name(dec.func).endswith("attn_entry")):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "uses" and isinstance(kw.value, (ast.Tuple, ast.List)):
+                return {e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)}
+        return set()
+    return None
+
+
+def _check_uses(sf: SourceFile, fn, out: list) -> None:
+    uses = _attn_entry_uses(fn)
+    if uses is None:
+        return
+    allowed = uses | _ALWAYS_KEPT
+    # first occurrence per field (walk_scope order is not source order)
+    hits: dict[str, ast.Attribute] = {}
+    for node in walk_scope(fn):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "spec"
+                and node.attr in SPEC_FIELDS
+                and node.attr not in allowed):
+            prev = hits.get(node.attr)
+            if prev is None or ((node.lineno, node.col_offset)
+                                < (prev.lineno, prev.col_offset)):
+                hits[node.attr] = node
+    for _, node in sorted(hits.items(), key=lambda kv: kv[1].lineno):
+        out.append(sf.finding(
+            node, "REPRO004",
+            f"entry `{fn.name}` reads spec.{node.attr} but its "
+            f"attn_entry uses= tuple does not declare it — "
+            f"canonicalize() resets the field to its default before "
+            f"the trace sees it (DESIGN.md §14)"))
+
+
+def _static_spec(call: ast.Call):
+    """(static_argnames, static_argnums) declared on a jax.jit call."""
+    names: set[str] = set()
+    nums: set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            vals = (kw.value.elts if isinstance(kw.value, (ast.Tuple, ast.List))
+                    else [kw.value])
+            names |= {v.value for v in vals
+                      if isinstance(v, ast.Constant) and isinstance(v.value, str)}
+        elif kw.arg == "static_argnums":
+            vals = (kw.value.elts if isinstance(kw.value, (ast.Tuple, ast.List))
+                    else [kw.value])
+            nums |= {v.value for v in vals
+                     if isinstance(v, ast.Constant) and isinstance(v.value, int)}
+    return names, nums
+
+
+def _jit_aliases(scope: ast.AST) -> dict[str, tuple[set[str], set[int]]]:
+    """`g = jax.jit(f, static_arg...)` bindings made directly in ``scope``."""
+    aliases: dict[str, tuple[set[str], set[int]]] = {}
+    for node in walk_scope(scope):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and _is_jit_call(node.value)):
+            names, nums = _static_spec(node.value)
+            if names or nums:
+                aliases[node.targets[0].id] = (names, nums)
+    return aliases
+
+
+def _check_static_args(sf: SourceFile, scope: ast.AST,
+                       aliases: dict[str, tuple[set[str], set[int]]],
+                       out: list) -> None:
+    """Flag calls in ``scope`` to a known jit alias passing an unhashable
+    literal in a static position.  ``aliases`` carries the module-level
+    bindings down into function scopes (the common layout: the alias is
+    built once at import, the call sites live inside functions)."""
+    if not aliases:
+        return
+    for node in walk_scope(scope):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in aliases):
+            continue
+        names, nums = aliases[node.func.id]
+        for kw in node.keywords:
+            if kw.arg in names and isinstance(kw.value, _UNHASHABLE):
+                out.append(sf.finding(
+                    kw.value, "REPRO005",
+                    f"unhashable literal passed as static arg "
+                    f"`{kw.arg}` of jitted `{node.func.id}` — static args "
+                    f"key the jit cache and must hash"))
+        for i, arg in enumerate(node.args):
+            if i in nums and isinstance(arg, _UNHASHABLE):
+                out.append(sf.finding(
+                    arg, "REPRO005",
+                    f"unhashable literal passed as static arg {i} of "
+                    f"jitted `{node.func.id}` — static args key the jit "
+                    f"cache and must hash"))
+
+
+def _param_names(fn) -> set[str]:
+    a = fn.args
+    return {p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)}
+
+
+def run(sf: SourceFile) -> list:
+    out: list = []
+    if not sf.rel.startswith(_SCOPE) or sf.tree is None:
+        return out
+    mutable = _mutable_globals(sf.tree)
+
+    # jitted scopes: decorated defs + jax.jit(<fn or lambda>) args
+    jitted: list[ast.AST] = []
+    for fn in functions_of(sf.tree):
+        if _jit_decorated(fn):
+            jitted.append(fn)
+    defs = {fn.name: fn for fn in functions_of(sf.tree)}
+    seen = set(map(id, jitted))
+    for node in ast.walk(sf.tree):
+        if not _is_jit_call(node):
+            continue
+        if node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Lambda) and id(target) not in seen:
+                jitted.append(target)
+                seen.add(id(target))
+            elif (isinstance(target, ast.Name) and target.id in defs
+                    and id(defs[target.id]) not in seen):
+                jitted.append(defs[target.id])
+                seen.add(id(defs[target.id]))
+    if mutable:
+        for fn in jitted:
+            _check_mutable_closure(sf, fn, mutable, out)
+
+    for fn in functions_of(sf.tree):
+        _check_uses(sf, fn, out)
+        if (sf.rel != _ATTN_SPEC_MODULE
+                and {"mode", "rescale"} <= _param_names(fn)):
+            out.append(sf.finding(
+                fn, "REPRO006",
+                f"function `{fn.name}` declares both `mode=` and "
+                f"`rescale=` — a pre-AttnSpec attention entry point; take "
+                f"a single `spec: AttnSpec` instead (core/attn_spec.py, "
+                f"DESIGN.md §14)"))
+
+    module_aliases = _jit_aliases(sf.tree)
+    _check_static_args(sf, sf.tree, module_aliases, out)
+    for fn in functions_of(sf.tree):
+        _check_static_args(sf, fn, {**module_aliases, **_jit_aliases(fn)},
+                           out)
+    return out

@@ -19,7 +19,6 @@ import os
 import re
 import shutil
 import threading
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -103,7 +102,7 @@ def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True):
     return t
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def latest_step(ckpt_dir: str) -> int | None:
     """Newest *committed* checkpoint (manifest present)."""
     if not os.path.isdir(ckpt_dir):
         return None

@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
+from collections.abc import Sequence
 from dataclasses import dataclass
-from typing import Optional, Sequence
 
 import jax.numpy as jnp
 
@@ -68,12 +68,12 @@ class ModelConfig:
     qk_norm: bool = False
     rope_theta: float = 10000.0
     window_size: int = 2048       # local attention window
-    mla: Optional[MLAConfig] = None
-    moe: Optional[MoEConfig] = None
-    ssm: Optional[SSMConfig] = None
+    mla: MLAConfig | None = None
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
     # hybrid layer pattern, cycled over num_layers. e.g. ("rglru","rglru","attn")
-    block_pattern: Optional[Sequence[str]] = None
-    frontend: Optional[str] = None       # "audio" | "vision" stub frontends
+    block_pattern: Sequence[str] | None = None
+    frontend: str | None = None       # "audio" | "vision" stub frontends
     tie_embeddings: bool = False
     norm_eps: float = 1e-6
     dtype: str = "bfloat16"

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import queue
 import threading
+from collections.abc import Iterator
 from dataclasses import dataclass
-from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,7 @@ def batch_struct(cfg, data: DataConfig):
 
 
 def make_batch(cfg, data: DataConfig, step: int, *, lo: int = 0,
-               hi: Optional[int] = None) -> dict:
+               hi: int | None = None) -> dict:
     """Deterministic batch for `step`; [lo, hi) selects a host's batch rows."""
     hi = data.global_batch if hi is None else hi
     rng = np.random.default_rng((data.seed, step))

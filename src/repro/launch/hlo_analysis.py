@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -57,7 +56,7 @@ class Instr:
     name: str
     shape: str
     op: str
-    operands: List[str]
+    operands: list[str]
     attrs: str
     inside: str = ""
 
@@ -65,8 +64,8 @@ class Instr:
 @dataclass
 class Computation:
     name: str
-    instrs: List[Instr] = field(default_factory=list)
-    int_constants: List[int] = field(default_factory=list)
+    instrs: list[Instr] = field(default_factory=list)
+    int_constants: list[int] = field(default_factory=list)
 
 
 _COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
@@ -81,10 +80,10 @@ _ATTR_COMP = {
 }
 
 
-def parse_module(text: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    entry: Optional[str] = None
-    cur: Optional[Computation] = None
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    entry: str | None = None
+    cur: Computation | None = None
     for line in text.splitlines():
         mc = _COMP_RE.match(line)
         if mc and "{" in line:
@@ -123,7 +122,7 @@ def parse_module(text: str) -> Dict[str, Computation]:
     return comps
 
 
-def _dot_flops(inst: Instr, shapes: Dict[str, str]) -> float:
+def _dot_flops(inst: Instr, shapes: dict[str, str]) -> float:
     rb, re_ = _shape_info(inst.shape)
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
     if not m or not inst.operands:
@@ -144,13 +143,13 @@ def analyze(text: str) -> dict:
     comps = parse_module(text)
     entry = comps["__entry__"]
     # global name->result-shape map (names are unique per module in practice)
-    shapes: Dict[str, str] = {}
+    shapes: dict[str, str] = {}
     for c in comps.values():
         for i in c.instrs:
             shapes[i.name] = i.shape
 
-    memo: Dict[tuple, dict] = {}
-    _eff_memo: Dict[str, dict] = {}
+    memo: dict[tuple, dict] = {}
+    _eff_memo: dict[str, dict] = {}
 
     def eff_param_bytes(cname: str) -> dict:
         """index -> effective read bytes (or None = full) of a fused

@@ -39,7 +39,7 @@ def _scan_layers(body, x, xs):
         n = jax.tree.leaves(xs)[0].shape[0]
         ys = []
         for i in range(n):
-            x, y = body(x, jax.tree.map(lambda a: a[i], xs))
+            x, y = body(x, jax.tree.map(lambda a, i=i: a[i], xs))
             ys.append(y)
         return x, jax.tree.map(lambda *rows: jnp.stack(rows), *ys)
     return jax.lax.scan(body, x, xs)
@@ -196,9 +196,9 @@ def init(rng, cfg):
     if fe is not None:
         params["frontend"] = fe
     gp = []
-    for g, key in zip(groups, keys[2:]):
+    for g, key in zip(groups, keys[2:], strict=True):
         gkeys = jax.random.split(key, g["n"])
-        def one(k):
+        def one(k, g=g):
             ks = jax.random.split(k, len(g["sigs"]))
             return {f"b{j}": _init_block(ks[j], cfg, s, dtype)
                     for j, s in enumerate(g["sigs"])}
@@ -225,8 +225,8 @@ def forward(params, cfg, batch, *, collect_cache: bool = False):
     aux_total = _zero_aux()
     caches = []
 
-    for g, gparams in zip(groups, params["groups"]):
-        def body(carry, xs):
+    for g, gparams in zip(groups, params["groups"], strict=True):
+        def body(carry, xs, g=g):
             x, aux = carry
             lp = xs
             crows = {}
@@ -446,8 +446,9 @@ def _chunk_forward(params, cfg, cache, tokens, block_table, lengths, spec,
     x = constrain(layers.embed(params["embed"], tokens), P(BATCH, None, None))
     groups = layer_groups(cfg)
     new_caches = []
-    for g, gparams, gcache in zip(groups, params["groups"], cache):
-        def body(x, xs):
+    for g, gparams, gcache in zip(groups, params["groups"], cache,
+                                  strict=True):
+        def body(x, xs, g=g):
             lp, lc = xs
             ncs = {}
             for j, sig in enumerate(g["sigs"]):
@@ -513,7 +514,7 @@ def prefill(params, cfg, batch, max_len: int):
     S = logits.shape[1]
     groups = layer_groups(cfg)
     padded = []
-    for g, gc in zip(groups, caches):
+    for g, gc in zip(groups, caches, strict=True):
         padded.append({f"b{j}": jax.vmap(
             lambda rows, s=s: _pad_cache_rows(cfg, s, rows, max_len, S))(gc[f"b{j}"])
             for j, s in enumerate(g["sigs"])})
@@ -543,8 +544,9 @@ def decode_step(params, cfg, cache, tokens, pos, *, spec=None,
     x = constrain(layers.embed(params["embed"], tokens), P(BATCH, None))
     groups = layer_groups(cfg)
     new_caches = []
-    for g, gparams, gcache in zip(groups, params["groups"], cache):
-        def body(x, xs):
+    for g, gparams, gcache in zip(groups, params["groups"], cache,
+                                  strict=True):
+        def body(x, xs, g=g):
             lp, lc = xs
             ncs = {}
             for j, sig in enumerate(g["sigs"]):

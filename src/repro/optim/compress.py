@@ -12,8 +12,6 @@ Two integration points:
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 
@@ -28,7 +26,7 @@ def _pad_to_chunks(x):
     return flat.reshape(-1, CHUNK), pad
 
 
-def quantize(g) -> Tuple[jax.Array, jax.Array]:
+def quantize(g) -> tuple[jax.Array, jax.Array]:
     """g: any-shape f32/bf16 -> (int8 chunks [n,CHUNK], scales f32 [n])."""
     chunks, _ = _pad_to_chunks(g.astype(jnp.float32))
     scale = jnp.max(jnp.abs(chunks), axis=1) / 127.0 + 1e-30
@@ -81,7 +79,7 @@ def pod_reduce_with_feedback(grads, residual, axis: str = "pod"):
         return deq.astype(g.dtype), new_r
     flat_g, td = jax.tree.flatten(grads)
     flat_r = td.flatten_up_to(residual)
-    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r, strict=True)]
     return td.unflatten([o[0] for o in outs]), td.unflatten([o[1] for o in outs])
 
 

@@ -118,7 +118,7 @@ def adafactor_update(cfg: OptimizerConfig, grads, state, params):
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)
     flat_v = treedef.flatten_up_to(state["v"])
-    outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p, strict=True)]
     new_p = treedef.unflatten([o[0] for o in outs])
     new_v = treedef.unflatten([o[1] for o in outs])
     return new_p, {"v": new_v, "count": c}

@@ -20,8 +20,8 @@ missing.  Telemetry never changes any decision these classes make.
 from __future__ import annotations
 
 import time
+from collections.abc import Sequence
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -31,7 +31,7 @@ class HeartbeatRegistry:
                  metrics=None):
         self.timeout_s = timeout_s
         self._clock = clock
-        self._last: Dict[str, float] = {}
+        self._last: dict[str, float] = {}
         self.metrics = metrics
 
     def beat(self, worker: str):
@@ -39,11 +39,11 @@ class HeartbeatRegistry:
         if self.metrics is not None:
             self.metrics.inc("ft/heartbeats")
 
-    def alive(self) -> List[str]:
+    def alive(self) -> list[str]:
         now = self._clock()
         return [w for w, t in self._last.items() if now - t <= self.timeout_s]
 
-    def dead(self) -> List[str]:
+    def dead(self) -> list[str]:
         now = self._clock()
         return [w for w, t in self._last.items() if now - t > self.timeout_s]
 
@@ -54,7 +54,7 @@ class StragglerDetector:
     def __init__(self, window: int = 16, z: float = 4.0, *, metrics=None):
         self.window = window
         self.z = z
-        self._times: Dict[str, List[float]] = {}
+        self._times: dict[str, list[float]] = {}
         self.metrics = metrics
 
     def record(self, worker: str, step_time_s: float):
@@ -67,7 +67,7 @@ class StragglerDetector:
             self.metrics.observe(f"ft/step_ms/{worker}",
                                  step_time_s * 1e3)
 
-    def stragglers(self) -> List[str]:
+    def stragglers(self) -> list[str]:
         if len(self._times) < 2:
             return []
         med_per = {w: float(np.median(t)) for w, t in self._times.items()
@@ -115,7 +115,7 @@ class WorkerFailure(RuntimeError):
 
 
 def plan_remesh(n_alive_hosts: int, chips_per_host: int,
-                model_parallel: int) -> Optional[tuple]:
+                model_parallel: int) -> tuple | None:
     """Largest (data, model) mesh that fits the surviving chips with the
     required model-parallel degree; None if impossible. Elastic scale-down
     keeps TP intact and shrinks the data axis (checkpoint reshard-on-load

@@ -75,7 +75,6 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -183,6 +182,17 @@ class BlockPool:
     def free_slots(self) -> list[int]:
         return [b for b in range(self.batch_slots) if not self.active[b]]
 
+    def free_ids(self) -> set[int]:
+        """Snapshot of the free-list block ids — the public inspection
+        surface for invariant tests (free ⟺ refcount 0 conservation);
+        mutation still goes through admit/extend/append/release."""
+        return set(self._free)
+
+    def budget(self, slot: int) -> int:
+        """Reserved token budget of `slot` (0 when torn down): the cap
+        ``extend``/``append`` enforce and ``truncate`` rewinds to."""
+        return int(self._budget[slot])
+
     def can_admit(self, max_total_len: int, n_shared: int = 0) -> bool:
         """Admission predicate: a free batch slot AND enough free blocks to
         reserve the request's whole token budget.  ``n_shared`` counts FULL
@@ -199,7 +209,7 @@ class BlockPool:
         need = self.layout.blocks_for(max_total_len) - int(n_shared)
         return bool(self.free_slots()) and need <= self.num_free
 
-    def admit(self, prompt_len: int, max_total_len: int) -> Optional[int]:
+    def admit(self, prompt_len: int, max_total_len: int) -> int | None:
         """Reserve a slot + blocks for `max_total_len` tokens; returns the
         slot id, or None (admission refusal — the caller keeps the request
         queued).  `prompt_len` rows are accounted as already written (the
@@ -212,7 +222,7 @@ class BlockPool:
         return None if got is None else got[0]
 
     def admit_shared(self, prompt_len: int, max_total_len: int,
-                     shared_ids) -> Optional[tuple]:
+                     shared_ids) -> tuple | None:
         """Admission with a cached prefix: map `shared_ids` — the physical
         chain holding the request's first `prompt_len` tokens, found by the
         prefix-cache trie — into the new slot's table with a refcount bump
@@ -393,7 +403,7 @@ class BlockPool:
         nb = self.layout.blocks_for(n) if n else 0
         return nb <= self.host_free
 
-    def swap_out(self, slot: int, key) -> Optional[SwapRecord]:
+    def swap_out(self, slot: int, key) -> SwapRecord | None:
         """Evacuate `slot` to the host tier: reserve one host block per
         WRITTEN device block, record (key, host ids, written length,
         original budget), then fully release the slot — device blocks the

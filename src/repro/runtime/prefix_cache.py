@@ -142,7 +142,7 @@ class PrefixCache:
         block is kept and the caller's duplicate stays owned by its slot
         alone.  Returns the number of blocks newly inserted."""
         node, new = self._root, 0
-        for key, bid in zip(self._keys(tokens), chain):
+        for key, bid in zip(self._keys(tokens), chain, strict=False):
             child = node.children.get(key)
             if child is None:
                 child = _Node(key, int(bid), node, next(self._uid))
@@ -223,6 +223,25 @@ class PrefixCache:
         return sum(1 for n in self._lru.values()
                    if int(pool.ref[n.block_id]) == 1
                    and n.block_id not in protect)
+
+    def cached_block_ids(self) -> set[int]:
+        """Snapshot of every physical block id the trie holds a reference
+        on — the public inspection surface for conservation tests; recency
+        order is untouched (unlike :meth:`match`)."""
+        return {n.block_id for n in self._lru.values()}
+
+    def peek_chain(self, tokens) -> list[int]:
+        """Physical block ids cached for the full-block prefix of
+        ``tokens`` — a side-effect-free :meth:`match`: no LRU touch, no
+        counter motion, and no last-token cap (the full cached chain)."""
+        node, chain = self._root, []
+        for key in self._keys(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            chain.append(child.block_id)
+            node = child
+        return chain
 
     def stats(self) -> dict:
         """Counters for serve-loop observability (DESIGN.md §10)."""

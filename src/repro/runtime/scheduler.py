@@ -59,7 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import numpy as np
 
@@ -120,7 +120,7 @@ class Request:
     priority: int = 0
     arrival: int = 0                     # tick the request becomes visible
     state: str = WAITING
-    slot: Optional[int] = None
+    slot: int | None = None
     pf_pos: int = 0                      # prompt tokens resident in KV
     decoding: bool = False               # prompt fully prefilled
     cur: int = -1                        # next token to feed the decoder
@@ -131,12 +131,12 @@ class Request:
     attempts: int = 0                    # refused placements since placed
     next_try: int = 0                    # earliest retry tick
     preemptions: int = 0
-    pinned: Optional[list] = None        # trie chain pinned while out
+    pinned: list | None = None        # trie chain pinned while out
     admit_seq: int = -1                  # FCFS order among cold slots
     t_arrival: float = 0.0               # wall clock, for SLO accounting
-    t_first: Optional[float] = None
-    t_last: Optional[float] = None
-    ttft_ms: Optional[float] = None
+    t_first: float | None = None
+    t_last: float | None = None
+    ttft_ms: float | None = None
 
     @property
     def plen(self) -> int:
@@ -161,9 +161,9 @@ class Scheduler:
     token, ``finish`` at budget exhaustion, ``fail_running`` on injected
     worker failures, ``cancel`` to drop a request in any state."""
 
-    def __init__(self, pool, prefix, kv: Optional[KVOps] = None,
-                 cfg: Optional[SchedulerConfig] = None, *,
-                 metrics: Optional[telemetry.MetricsRegistry] = None,
+    def __init__(self, pool, prefix, kv: KVOps | None = None,
+                 cfg: SchedulerConfig | None = None, *,
+                 metrics: telemetry.MetricsRegistry | None = None,
                  tracer=None):
         self.pool = pool
         self.prefix = prefix
@@ -198,7 +198,7 @@ class Scheduler:
         return {n: c.value for n, c in self._c.items()}
 
     # -------------------------------------------------------- telemetry
-    def _instant(self, name: str, r: Request, args: Optional[dict] = None
+    def _instant(self, name: str, r: Request, args: dict | None = None
                  ) -> None:
         """One lifecycle instant on the request's trace thread
         (tid 1000+id; tid 0 is the engine timeline)."""
@@ -296,7 +296,7 @@ class Scheduler:
             return -1
         return r.priority
 
-    def _next_candidate(self, tick: int, now: float) -> Optional[Request]:
+    def _next_candidate(self, tick: int, now: float) -> Request | None:
         elig = [r for r in self.queue
                 if r.arrival <= tick and r.next_try <= tick]
         if not elig:
@@ -451,7 +451,7 @@ class Scheduler:
         return True
 
     def preempt(self, v: Request, tick: int,
-                mode: Optional[str] = None) -> str:
+                mode: str | None = None) -> str:
         """Evacuate RUNNING request `v`.  Tries the configured mode; swap
         falls back to recompute when the host tier cannot absorb the
         victim (graceful degradation, never a refusal).  Returns the mode

@@ -10,7 +10,6 @@ Policy (DESIGN.md §5):
 from __future__ import annotations
 
 import re
-from typing import Optional
 
 import jax
 import numpy as np
@@ -97,7 +96,7 @@ _RULES = [
 
 
 def _spec_for(path: str, ndim: int, mesh: Mesh, shape) -> P:
-    raw: Optional[tuple] = None
+    raw: tuple | None = None
     # 3-D (stacked-expert) weights need the MoE rules; check those first.
     for pat, spec in _RULES:
         if pat.startswith("ffn/") and re.search(pat, path) and ndim - _lead(path) == 3:

@@ -1,0 +1,25 @@
+# The PR 5 bug, reconstructed: split online-softmax statistics merged in
+# bf16.  The exp/sum followed the input dtype, and near-tie maxima lost
+# accumulated mass.  Scanned as if it lived under src/repro/kernels/.
+import jax.numpy as jnp
+
+
+def combine_partials_bf16(m, l, acc):
+    # stats arrive fp32 from the partial kernels; the cast narrows them
+    m = m.astype(jnp.bfloat16)              # REPRO001: cast
+    m_new = jnp.max(m, axis=1)
+    w = jnp.exp(m - m_new[:, None])
+    l_new = jnp.sum(l * w, axis=1)
+    return m_new, l_new, acc
+
+
+def init_state_narrow(H, Dv):
+    m = jnp.full((1, H), -1e30, dtype=jnp.bfloat16)   # REPRO001: born narrow
+    l = jnp.zeros((1, H), jnp.float16)                # REPRO001: born narrow
+    acc = jnp.zeros((Dv, H), jnp.float32)
+    return m, l, acc
+
+
+def init_via_api_narrow(softmax_state, H, Dv):
+    state = softmax_state.init((1, H), (Dv, H), dtype=jnp.float16)  # REPRO001
+    return state

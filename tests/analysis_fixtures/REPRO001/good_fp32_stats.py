@@ -1,0 +1,22 @@
+# The sanctioned shape: stats live in fp32, only the finalized OUTPUT is
+# cast back to the query dtype.
+import jax.numpy as jnp
+
+from repro.kernels import softmax_state
+
+
+def combine_partials_fp32(m, l, acc, o_ref):
+    state = softmax_state.merge_splits(
+        m.astype(jnp.float32), l.astype(jnp.float32),
+        acc.astype(jnp.float32), axis=1, mode="amla")
+    # casting the finalize() RESULT is fine: it is the attention output,
+    # not state
+    return softmax_state.finalize(state).T.astype(o_ref.dtype)
+
+
+def init_state_fp32(H, Dv):
+    m = jnp.full((1, H), -1e30, dtype=jnp.float32)
+    l = jnp.zeros((1, H), jnp.float32)
+    acc = jnp.zeros((Dv, H), dtype=jnp.float32)
+    state = softmax_state.init((1, H), (Dv, H), dtype=jnp.float32)
+    return m, l, acc, state

@@ -1,0 +1,13 @@
+# A hand-rolled online-softmax rescale chain: exp-of-difference
+# correction weights feeding a mul-add accumulate, outside
+# softmax_state.py.  Pre-§13 this was copy-pasted five times and drifted.
+import jax.numpy as jnp
+
+
+def my_online_softmax_step(m, l, acc, s, v):
+    m_new = jnp.maximum(m, jnp.max(s, axis=0))
+    corr = jnp.exp(m - m_new)                 # exp of difference
+    p = jnp.exp(s - m_new)
+    l = l * corr + jnp.sum(p, axis=0)         # mul-add accumulate
+    acc = acc * corr + p @ v
+    return m_new, l, acc

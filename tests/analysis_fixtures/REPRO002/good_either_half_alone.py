@@ -1,0 +1,16 @@
+# Either half of the chain ALONE is fine: oracles exponentiate shifted
+# scores, rooflines do mul-adds — only both in one function is a
+# hand-rolled recurrence.
+import jax.numpy as jnp
+
+
+def shifted_softmax_oracle(s):
+    # exp-of-difference, no rescaled accumulate
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def roofline_terms(bytes_hbm, flops, bw, peak):
+    # mul-add store, no shifted exponential
+    t = bytes_hbm * (1.0 / bw) + flops / peak
+    return t

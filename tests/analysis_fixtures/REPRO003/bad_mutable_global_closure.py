@@ -1,0 +1,21 @@
+# Jitted functions reading mutable module state: the value is baked into
+# the trace at first call; mutating the dict later serves a stale trace.
+import jax
+
+CONFIG = {"scale": 1.0}
+TABLE = [1, 2, 3]
+
+
+@jax.jit
+def decode_step(x):
+    return x * CONFIG["scale"]          # REPRO003: traced dict read
+
+
+def make_step():
+    return jax.jit(lambda x: x + TABLE[0])   # REPRO003: traced list read
+
+
+@jax.jit
+def bump(x):
+    global COUNTER                      # REPRO003: global in a jitted body
+    return x

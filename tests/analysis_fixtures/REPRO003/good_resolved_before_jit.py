@@ -1,0 +1,27 @@
+# The sanctioned shapes: immutable module constants trace fine, and
+# mutable defaults are resolved BEFORE the jit-cache lookup (the
+# jit_with_rescale contract).
+import jax
+
+SCALE = 0.125                # immutable: safe to close over
+CONFIG = {"mode": "amla"}
+
+
+@jax.jit
+def decode_step(x):
+    return x * SCALE         # constant closure: no hazard
+
+
+def entry(x, mode=None):
+    mode = CONFIG["mode"] if mode is None else mode   # resolved pre-cache
+
+    @jax.jit
+    def body(x, mode_):
+        return x if mode_ else -x
+
+    return body(x, mode == "amla")
+
+
+def shadowed(x):
+    CONFIG = {"local": True}          # local shadows the module dict
+    return jax.jit(lambda y: y)(x), CONFIG

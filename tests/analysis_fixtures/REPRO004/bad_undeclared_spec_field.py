@@ -1,0 +1,12 @@
+# An attn_entry that reads spec fields its uses= tuple does not declare:
+# canonicalize() resets them to defaults before the trace runs, so the
+# caller's setting silently does nothing.
+from repro.core import attn_spec
+
+
+@attn_spec.attn_entry(uses=("block", "interpret"))
+def decode(q, k, v, length, *, spec):
+    block = min(spec.block, 64)
+    if spec.kv_splits:                  # REPRO004: kv_splits not in uses=
+        block = block // spec.kv_splits
+    return q * spec.scale, block, spec.rescale   # REPRO004: rescale too

@@ -1,0 +1,11 @@
+# Every spec field the body reads is declared in uses= (scale is always
+# kept by project(), so it needs no declaration).
+from repro.core import attn_spec
+
+
+@attn_spec.attn_entry(uses=("block", "kv_splits", "interpret", "rescale"))
+def decode(q, k, v, length, *, spec):
+    block = min(spec.block, 64)
+    if spec.kv_splits:
+        block = block // spec.kv_splits
+    return q * spec.scale, block, spec.rescale, spec.replace()

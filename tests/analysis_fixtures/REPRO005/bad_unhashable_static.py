@@ -1,0 +1,18 @@
+# Unhashable literals in static jit positions: the cache key must hash,
+# so these raise at call time — but only on the branches that execute.
+import jax
+
+
+def f(x, shape, dims=None):
+    return x
+
+
+jfn = jax.jit(f, static_argnames=("shape",))
+gfn = jax.jit(f, static_argnums=(1,))
+
+
+def call_sites(x):
+    a = jfn(x, shape=[4, 4])           # REPRO005: list as static kwarg
+    b = gfn(x, [4, 4])                 # REPRO005: list in static position
+    c = jfn(x, shape={"h": 4})         # REPRO005: dict as static kwarg
+    return a, b, c

@@ -1,0 +1,17 @@
+# Hashable statics (tuples, strings, ints) key the jit cache fine; the
+# same literals are also fine in NON-static positions.
+import jax
+
+
+def f(x, shape, dims=None):
+    return x
+
+
+jfn = jax.jit(f, static_argnames=("shape",))
+
+
+def call_sites(x):
+    a = jfn(x, shape=(4, 4))           # tuple: hashable
+    b = jfn(x, shape="auto")
+    c = jfn(x, shape=(4, 4), dims=[0, 1])   # dims is not static
+    return a, b, c

@@ -1,0 +1,5 @@
+# A re-introduced pre-AttnSpec attention entry: both mode= and rescale=
+# on one signature, outside core/attn_spec.py.
+def attention_decode(q, k, v, length, *, scale, mode="etap", rescale=None,
+                     kv_splits=None):
+    return q, (scale, mode, rescale, kv_splits)

@@ -1,0 +1,12 @@
+# Either knob alone is fine: softmax_state helpers take rescale, CLI
+# builders take mode — only both on one signature is a pre-spec entry.
+def resolve_rescale(rescale=None):
+    return rescale or "amla"
+
+
+def build_cli_spec(mode="etap"):
+    return {"mode": mode}
+
+
+def spec_entry(q, k, v, length, *, spec):
+    return q, spec

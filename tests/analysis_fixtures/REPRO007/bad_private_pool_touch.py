@@ -1,0 +1,14 @@
+# Test/benchmark code peeking at BlockPool/PrefixCache internals: works
+# until the representation changes, then corrupts silently.
+def leak_check(bp, trie, slot):
+    free = set(bp._free)                       # REPRO007
+    chain = bp._chain[slot]                    # REPRO007
+    budget = bp._budget[slot]                  # REPRO007
+    cached = {n.block_id for n in trie._lru.values()}   # REPRO007
+    trie._pinned.clear()                       # REPRO007
+    return free, chain, budget, cached
+
+
+def rebuild(trie, bp):
+    trie._root.children = {}                   # REPRO007: write
+    bp._free = []                              # REPRO007: write

@@ -1,0 +1,16 @@
+# The public inspection surface: conservation and invariant tests read
+# through accessors, mutation goes through the lifecycle API.
+def leak_check(bp, trie, slot):
+    bp.check_conservation()
+    free = bp.free_ids()
+    chain = bp.block_ids(slot)
+    budget = bp.budget(slot)
+    cached = trie.cached_block_ids()
+    pinned = trie.stats()["pinned_blocks"]
+    return free, chain, budget, cached, pinned
+
+
+def rebuild(trie, bp, slot):
+    bp.truncate(slot, 0)
+    bp.release(slot)
+    bp.audit()

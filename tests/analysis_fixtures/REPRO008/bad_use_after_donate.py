@@ -1,0 +1,16 @@
+# Donated buffers read after the jitted call: the array aliases freed
+# memory — stale bytes or a runtime error, never a type error.
+import jax
+
+
+def serve(params, cache, model, tokens):
+    step = jax.jit(model.decode, donate_argnums=(1,))
+    logits = step(params, cache, tokens)       # cache donated, NOT rebound
+    stale = cache.sum()                        # REPRO008
+    return logits, stale
+
+
+def serve_holder(params, holder, model, tokens):
+    step = jax.jit(model.decode, donate_argnums=(1,))
+    logits = step(params, holder["cache"], tokens)   # donated, not rebound
+    return logits, holder["cache"]             # REPRO008

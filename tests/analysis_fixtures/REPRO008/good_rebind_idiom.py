@@ -1,0 +1,21 @@
+# The serve-loop rebind idiom: the donated argument is rebound from the
+# call's result in the same statement, so later reads see the new buffer.
+import jax
+
+
+def serve(params, cache, model, tokens):
+    step = jax.jit(model.decode, donate_argnums=(1,))
+    for t in tokens:
+        logits, cache = step(params, cache, t)     # rebound each call
+    return logits, cache.sum()
+
+
+def serve_holder(params, holder, model, tokens):
+    step = jax.jit(model.decode, donate_argnums=(1,))
+    logits, holder["cache"] = step(params, holder["cache"], tokens)
+    return logits, holder["cache"]
+
+
+def serve_last_use(params, cache, model, tokens):
+    step = jax.jit(model.decode, donate_argnums=(1,))
+    return step(params, cache, tokens)             # nothing reads it after

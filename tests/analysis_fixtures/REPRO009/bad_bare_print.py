@@ -1,0 +1,6 @@
+# A stat printed straight from the runtime: it escaped the registry —
+# not exportable, not assertable, drifts from the rendered summary.
+def tick_summary(sched, reg):
+    print(f"tok/s {sched.tok_s:.1f}")          # REPRO009
+    for cls, p99 in sched.tails().items():
+        print(cls, p99)                        # REPRO009

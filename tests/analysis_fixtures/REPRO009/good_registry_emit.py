@@ -1,0 +1,7 @@
+# The sanctioned sink: numbers land in the MetricsRegistry, summaries
+# render from the snapshot through obs.emit.
+def tick_summary(sched, reg, obs):
+    reg.gauge("serve/tok_s").set(sched.tok_s)
+    for cls, p99 in sched.tails().items():
+        reg.histogram(f"sched/class{cls}/itl_ms").record(p99)
+    obs.emit(obs.summarize_paged(reg.snapshot()))

@@ -1,0 +1,271 @@
+"""Tests for the unified invariant analyzer (``repro.analysis``, DESIGN.md §16).
+
+Four layers, mirroring the acceptance criteria:
+
+* fixture corpus — every rule fires on its ``bad_*`` snippets (flagged
+  lines must exactly match the ``# REPRO0xx`` annotations when present)
+  and stays silent on the ``good_*`` rewrites;
+* mechanics — per-rule ``# noqa`` suppression, fingerprint baseline
+  round-trip (including line-number drift), ``--diff`` on a synthetic
+  git tree, stable exit codes;
+* self-test — an injected violation in a temp copy of the real
+  ``kernels/`` tree fails the run (the PR 5 bf16-stat bug pattern),
+  mirroring ``check_regression.py``'s injected-slowdown self-test;
+* integration — the real tree is clean, the deprecation shims still
+  run, and ``retrace.SPEC_FIELDS`` tracks the AttnSpec dataclass.
+"""
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import cli, core, retrace
+
+FIXDIR = pathlib.Path(__file__).resolve().parent / "analysis_fixtures"
+RULE_IDS = tuple(f"REPRO00{i}" for i in range(1, 10))
+
+# Pretend repo-relative path each rule's fixtures are scanned under.
+# Rules are scoped (dtype-flow only reads kernels/, bare-print only the
+# runtime), so a fixture must land inside the right scope to exercise
+# its rule — and the good twin must stay silent *at the same path*.
+RULE_REL = {
+    "REPRO001": "src/repro/kernels/fixture.py",
+    "REPRO002": "src/repro/kernels/fixture.py",
+    "REPRO003": "src/repro/core/fixture.py",
+    "REPRO004": "src/repro/core/fixture.py",
+    "REPRO005": "src/repro/core/fixture.py",
+    "REPRO006": "src/repro/core/fixture.py",
+    "REPRO007": "tests/fixture.py",
+    "REPRO008": "src/repro/launch/fixture.py",
+    "REPRO009": "src/repro/runtime/fixture.py",
+}
+
+_ANNOT = re.compile(r"#\s*(REPRO\d{3})")
+
+
+def _scan(text, rel, select=None):
+    sf = core.SourceFile(rel, text)
+    return cli.run_passes(sf, select)
+
+
+def _cases(kind):
+    out = []
+    for rule in RULE_IDS:
+        for path in sorted((FIXDIR / rule).glob(f"{kind}_*.py")):
+            out.append(pytest.param(rule, path, id=f"{rule}/{path.name}"))
+    return out
+
+
+def test_fixture_corpus_is_complete():
+    for rule in RULE_IDS:
+        d = FIXDIR / rule
+        assert list(d.glob("bad_*.py")), f"{rule}: no bad fixture"
+        assert list(d.glob("good_*.py")), f"{rule}: no good fixture"
+
+
+@pytest.mark.parametrize("rule, path", _cases("bad"))
+def test_bad_fixture_fires(rule, path):
+    text = path.read_text()
+    kept, _ = _scan(text, RULE_REL[rule])
+    assert kept, f"{path.name}: rule {rule} did not fire"
+    assert {f.rule for f in kept} == {rule}, (
+        f"{path.name}: unexpected cross-rule findings {kept}")
+    annotated = {i for i, ln in enumerate(text.splitlines(), 1)
+                 if _ANNOT.search(ln)}
+    if annotated:     # annotations pin the exact flagged lines
+        assert {f.line for f in kept} == annotated
+
+
+@pytest.mark.parametrize("rule, path", _cases("good"))
+def test_good_fixture_is_silent(rule, path):
+    kept, _ = _scan(path.read_text(), RULE_REL[rule])
+    assert kept == [], [f.render() for f in kept]
+
+
+@pytest.mark.parametrize("rule, path", _cases("bad"))
+def test_noqa_suppresses_exactly_that_rule(rule, path):
+    text = path.read_text()
+    kept, _ = _scan(text, RULE_REL[rule])
+    lines = text.splitlines()
+    for f in kept:
+        lines[f.line - 1] += f"  # noqa: {f.rule}"
+    kept2, suppressed = _scan("\n".join(lines), RULE_REL[rule])
+    assert kept2 == []
+    assert suppressed == len(kept)
+
+
+def test_bare_noqa_does_not_suppress():
+    text = "def f(reg):\n    print('tok/s')  # noqa\n"
+    kept, suppressed = _scan(text, RULE_REL["REPRO009"])
+    assert [f.rule for f in kept] == ["REPRO009"]
+    assert suppressed == 0
+
+
+def test_parse_error_is_a_finding():
+    kept, _ = _scan("def f(:\n", "src/repro/kernels/broken.py")
+    assert [f.rule for f in kept] == ["REPRO000"]
+
+
+def test_select_restricts_rules():
+    text = (FIXDIR / "REPRO009" / "bad_bare_print.py").read_text()
+    kept, _ = _scan(text, RULE_REL["REPRO009"], select={"REPRO007"})
+    assert kept == []
+
+
+def test_spec_fields_track_attn_spec_dataclass():
+    import dataclasses
+
+    from repro.core.attn_spec import AttnSpec
+    assert retrace.SPEC_FIELDS == tuple(
+        f.name for f in dataclasses.fields(AttnSpec)), (
+        "AttnSpec grew/lost a field: update retrace.SPEC_FIELDS so the "
+        "uses= completeness check (REPRO004) keeps seeing every field")
+
+
+# ---------------------------------------------------------------- runner
+
+BAD_PRINT = ("def tick(sched):\n"
+             "    print('tok/s', sched.tok_s)\n")
+CLEAN = "def tick(sched, reg):\n    reg.gauge('serve/tok_s').set(1.0)\n"
+
+
+def _mk(root, rel, text):
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+    return p
+
+
+def test_runner_flags_and_baseline_roundtrip(tmp_path, capsys):
+    bad = _mk(tmp_path, "src/repro/runtime/stats.py", BAD_PRINT)
+    assert cli.main(["--root", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "REPRO009" in out and "stats.py:2" in out
+    assert "--diff" in out          # failure text advertises the fast path
+
+    # grandfather, then the same tree is green
+    assert cli.main(["--root", str(tmp_path), "--write-baseline"]) == 0
+    assert (tmp_path / "analysis_baseline.txt").is_file()
+    capsys.readouterr()
+    assert cli.main(["--root", str(tmp_path)]) == 0
+    assert "1 baselined" in capsys.readouterr().out
+
+    # fingerprints key on line CONTENT: drift the line number, stay green
+    bad.write_text("# a comment pushed above\n# another\n" + BAD_PRINT)
+    assert cli.main(["--root", str(tmp_path)]) == 0
+
+    # fixing the finding makes the entry stale (reported, still exit 0)
+    bad.write_text(CLEAN)
+    capsys.readouterr()
+    assert cli.main(["--root", str(tmp_path)]) == 0
+    assert "stale baseline entry" in capsys.readouterr().out
+
+
+def test_new_finding_not_masked_by_baseline(tmp_path, capsys):
+    _mk(tmp_path, "src/repro/runtime/stats.py", BAD_PRINT)
+    assert cli.main(["--root", str(tmp_path), "--write-baseline"]) == 0
+    _mk(tmp_path, "src/repro/runtime/fresh.py", BAD_PRINT.replace(
+        "tok/s", "p99"))
+    capsys.readouterr()
+    assert cli.main(["--root", str(tmp_path)]) == 1
+    assert "fresh.py" in capsys.readouterr().out
+
+
+def _git(root, *args):
+    subprocess.run(
+        ["git", "-C", str(root), "-c", "user.email=t@t", "-c", "user.name=t",
+         *args], check=True, capture_output=True)
+
+
+def test_diff_mode_scans_only_changed_files(tmp_path, capsys):
+    ok = _mk(tmp_path, "src/repro/runtime/ok.py", CLEAN)
+    _mk(tmp_path, "src/repro/runtime/old_bad.py", BAD_PRINT)
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", "-A")
+    _git(tmp_path, "commit", "-qm", "seed")
+
+    # full mode sees the committed violation; --diff scans nothing
+    assert cli.main(["--root", str(tmp_path)]) == 1
+    capsys.readouterr()
+    assert cli.main(["--root", str(tmp_path), "--diff"]) == 0
+
+    # a modified tracked file and a new untracked file are both scanned;
+    # the unchanged committed violation stays out of the diff scan
+    ok.write_text(CLEAN + "\n\ndef leak():\n    print('oops')\n")
+    _mk(tmp_path, "src/repro/runtime/new_bad.py", BAD_PRINT)
+    capsys.readouterr()
+    assert cli.main(["--root", str(tmp_path), "--diff"]) == 1
+    out = capsys.readouterr().out
+    assert "ok.py" in out and "new_bad.py" in out
+    assert "old_bad.py" not in out
+
+
+def test_explicit_paths_restrict_scan(tmp_path, capsys):
+    _mk(tmp_path, "src/repro/runtime/a.py", BAD_PRINT)
+    _mk(tmp_path, "src/repro/runtime/b.py", BAD_PRINT)
+    capsys.readouterr()
+    assert cli.main(["--root", str(tmp_path),
+                     "src/repro/runtime/b.py"]) == 1
+    out = capsys.readouterr().out
+    assert "b.py" in out and "a.py" not in out
+
+
+def test_exit_codes_are_stable(tmp_path):
+    assert cli.main(["--no-such-flag"]) == 2
+    assert cli.main(["--select", "NOPE"]) == 2
+    assert cli.main(["--root", str(tmp_path / "missing")]) == 2
+    assert cli.main(["--list-rules"]) == 0
+
+
+def test_list_rules_covers_catalog(capsys):
+    assert cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ("REPRO000",) + RULE_IDS:
+        assert rule in out
+
+
+# ------------------------------------------------------------- self-test
+
+def test_injected_kernel_violation_fails_the_run(tmp_path, capsys):
+    """Mirror of check_regression.py's injected-slowdown self-test: copy
+    the real kernels/ tree, confirm it is green, inject the PR 5 bug
+    pattern (bf16 running max) into etap.py, confirm the analyzer is the
+    thing that would have caught it."""
+    import shutil
+    src = core.REPO / "src" / "repro" / "kernels"
+    dst = tmp_path / "src" / "repro" / "kernels"
+    shutil.copytree(src, dst)
+    assert cli.main(["--root", str(tmp_path)]) == 0
+
+    etap = dst / "etap" / "etap.py"
+    etap.write_text(etap.read_text() + (
+        "\n\ndef _injected_combine(m, l, acc):\n"
+        "    m = m.astype(jnp.bfloat16)\n"
+        "    return m, l, acc\n"))
+    capsys.readouterr()
+    assert cli.main(["--root", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "REPRO001" in out and "etap/etap.py" in out
+
+
+# ----------------------------------------------------------- integration
+
+def test_real_tree_is_clean(capsys):
+    assert cli.main([]) == 0
+    assert "repro.analysis: ok" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("shim, rule", [
+    ("lint_softmax.py", "REPRO002"),
+    ("lint_attn_spec.py", "REPRO006"),
+    ("lint_prints.py", "REPRO009"),
+])
+def test_deprecation_shims_still_run(shim, rule):
+    proc = subprocess.run(
+        [sys.executable, str(core.REPO / "benchmarks" / shim)],
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "deprecated" in proc.stderr
+    assert rule in proc.stderr

@@ -232,12 +232,12 @@ def _drive(seed: int) -> None:
 
     def check():
         bp.check_conservation()
-        free = set(bp._free)
+        free = bp.free_ids()
         owned = set()
         for s in range(slots):
             if bp.active[s]:
                 owned |= set(int(x) for x in bp.block_ids(s))
-        cached = {n.block_id for n in trie._lru.values()}
+        cached = trie.cached_block_ids()
         assert not free & (owned | cached)
         assert free | owned | cached == set(range(1, layout.num_blocks))
 

@@ -129,7 +129,7 @@ def test_model_copy_paged_block_covers_sz_pools(kv_dtype):
         lambda p: p.at[:, 1].set(jnp.ones_like(p[:, 1])), cache)
     copied = model.copy_paged_block(cache, 1, 3)
     for src_leaf, dst_leaf in zip(jax.tree.leaves(cache),
-                                  jax.tree.leaves(copied)):
+                                  jax.tree.leaves(copied), strict=True):
         np.testing.assert_array_equal(
             np.asarray(dst_leaf[:, 3].astype(jnp.float32)),
             np.asarray(src_leaf[:, 1].astype(jnp.float32)))
@@ -361,7 +361,7 @@ def test_decode_step_quant_tracks_fp(kv_dtype, arch):
     def run(kvd):
         bp = pc.BlockPool(layout, B)
         cache = model.init_paged_cache(cfg, layout, kv_dtype=kvd)
-        for b in range(B):
+        for _ in range(B):
             bp.admit(0, Sp + GEN)
         table, lengths = bp.device_views()
         _, cache = model.prefill_chunk(params, cfg, cache, toks, table,
@@ -382,5 +382,5 @@ def test_decode_step_quant_tracks_fp(kv_dtype, arch):
 
     fp = run("fp")
     qt = run(kv_dtype)
-    for a, b in zip(fp, qt):
+    for a, b in zip(fp, qt, strict=True):
         np.testing.assert_allclose(b, a, atol=atol, rtol=0)

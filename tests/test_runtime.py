@@ -24,7 +24,8 @@ def test_checkpoint_roundtrip(tmp_path):
     ckpt.save(str(tmp_path), 7, tree)
     out, step = ckpt.restore(str(tmp_path), 7, tree)
     assert step == 7
-    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -85,7 +86,7 @@ def test_straggler_detector():
         det.record("slow", 3.0)
     assert det.stragglers() == ["slow"]
     det2 = StragglerDetector()
-    for i in range(8):
+    for _ in range(8):
         for h in ("h0", "h1", "h2"):
             det2.record(h, 1.0)
     assert det2.stragglers() == []

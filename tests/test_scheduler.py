@@ -113,7 +113,7 @@ def test_swap_roundtrip_accounting():
     slot, cow, rec2 = got
     assert rec2 is rec and cow == []
     assert int(bp.lengths[slot]) == 10       # restored rows accounted
-    assert int(bp._budget[slot]) == 20       # original budget re-reserved
+    assert bp.budget(slot) == 20       # original budget re-reserved
     assert bp.host_free == 8                 # host ids returned
     assert "r0" not in bp.swapped
     bp.check_conservation()
@@ -296,11 +296,11 @@ def test_recompute_restore_pins_prompt_chain():
     sched.preempt(donor, tick=0)
     # the pinned chain is the MATCHABLE prefix (match caps at plen-1, so
     # the final prompt block re-prefills regardless): one block here
-    assert donor.pinned == [int(trie._root.children[(0, 1, 2, 3)].block_id)]
-    assert len(trie._pinned) == 1
+    assert donor.pinned == [int(trie.peek_chain([0, 1, 2, 3])[0])]
+    assert trie.stats()["pinned_blocks"] == 1
     sched.admit(1)                               # restore
     assert donor.state == sch.RUNNING
-    assert donor.pinned is None and not trie._pinned
+    assert donor.pinned is None and trie.stats()["pinned_blocks"] == 0
     assert donor.matched == 4                    # trie served the re-match
     assert donor.replay == sch.deque()           # nothing delivered yet
 
@@ -349,12 +349,12 @@ def _drive(seed: int) -> None:
 
     def check():
         bp.check_conservation()
-        free = set(bp._free)
+        free = bp.free_ids()
         owned = set()
         for s in range(slots):
             if bp.active[s]:
                 owned |= set(int(x) for x in bp.block_ids(s))
-        cached = {n.block_id for n in trie._lru.values()}
+        cached = trie.cached_block_ids()
         assert not free & (owned | cached)
         assert free | owned | cached == set(range(1, layout.num_blocks))
 
@@ -394,7 +394,7 @@ def _drive(seed: int) -> None:
             cands = [s for s in range(slots) if bp.active[s]
                      and prompts[s] is not None
                      and pf[s] == len(prompts[s]) and gen_left[s] > 0
-                     and bp.lengths[s] < bp._budget[s]]
+                     and bp.lengths[s] < bp.budget(s)]
             if cands:
                 s = cands[int(rng.integers(len(cands)))]
                 bp.append(s)
@@ -410,7 +410,7 @@ def _drive(seed: int) -> None:
                 if rng.integers(2):            # spec-decode shape: length
                     bp.truncate(s, n, free_blocks=False)
                     for _ in range(int(bp.lengths[s]),
-                                   min(hi, int(bp._budget[s]))):
+                                   min(hi, bp.budget(s))):
                         bp.append(s)           # rows re-append in place
                 else:
                     rolled = hi - n

@@ -39,7 +39,7 @@ def test_param_specs_cover_all_archs():
         flat = jax.tree_util.tree_flatten_with_path(specs)[0]
         shapes = jax.tree_util.tree_flatten_with_path(ps)[0]
         n_model_sharded = 0
-        for (kp, spec), (_, leaf) in zip(flat, shapes):
+        for (kp, spec), (_, leaf) in zip(flat, shapes, strict=True):
             # every spec entry must divide its dim (validity invariant)
             for i, entry in enumerate(spec):
                 if entry is None:
@@ -106,7 +106,8 @@ _SUBPROC = textwrap.dedent("""
         p_new, o_new, m = step(params, opt_state, batch, 0)
     d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
                                   b.astype(jnp.float32))))
-            for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_new)))
+            for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_new),
+                            strict=True))
     print(json.dumps({"nll": float(m["nll"]), "nll_ref": float(m_ref["nll"]),
                       "max_param_diff": d}))
 """)

@@ -56,7 +56,7 @@ def _chunks(rng, S):
     """A random contiguous partition of range(S)."""
     cuts = sorted(rng.choice(np.arange(1, S), size=rng.integers(0, S - 1),
                              replace=False).tolist())
-    return list(zip([0] + cuts, cuts + [S]))
+    return list(zip([0] + cuts, cuts + [S], strict=True))
 
 
 # ------------------------------------------------------------ flag plumbing
@@ -160,7 +160,7 @@ def test_merge_split_order_invariant_on_lattice(data):
     _assert_bitwise(ss.finalize(folded), want,
                     f"fold order {order.tolist()} diverged (mode={mode})")
 
-    stacked = [jnp.stack(x) for x in zip(*parts)]
+    stacked = [jnp.stack(x) for x in zip(*parts, strict=True)]
     m_g, l_g, acc_g = ss.merge_splits(*stacked, axis=0, mode=mode,
                                       expand=lambda w: w[:, None, :])
     _assert_bitwise(ss.finalize((m_g, l_g, acc_g)), want,
@@ -176,10 +176,10 @@ def test_merge_associative_commutative_on_lattice(mode):
         a, b, c = states
         ab_c = ss.merge(ss.merge(a, b, mode=mode), c, mode=mode)
         a_bc = ss.merge(a, ss.merge(b, c, mode=mode), mode=mode)
-        for x, y in zip(ab_c, a_bc):
+        for x, y in zip(ab_c, a_bc, strict=True):
             _assert_bitwise(x, y, f"associativity, mode={mode}")
         ba = ss.merge(b, a, mode=mode)
-        for x, y in zip(ss.merge(a, b, mode=mode), ba):
+        for x, y in zip(ss.merge(a, b, mode=mode), ba, strict=True):
             _assert_bitwise(x, y, f"commutativity, mode={mode}")
 
 
@@ -215,7 +215,7 @@ def test_masked_split_drops_out(mode):
             jnp.full((2, 3), 1e20, jnp.float32))
     for merged in (ss.merge(real, junk, mode=mode),
                    ss.merge(junk, real, mode=mode)):
-        for x, y in zip(merged, real):
+        for x, y in zip(merged, real, strict=True):
             _assert_bitwise(x, y, f"masked split leaked, mode={mode}")
 
 
@@ -224,13 +224,13 @@ def test_merge_upcasts_half_precision_stats():
     inputs come out as fp32 math, bitwise the fp32-input result."""
     rng = np.random.default_rng(4)
     parts = [_state_of(*_lattice(8, 3, 2, rng), "amla") for _ in range(2)]
-    stacked = [jnp.stack(x) for x in zip(*parts)]
+    stacked = [jnp.stack(x) for x in zip(*parts, strict=True)]
     want = ss.merge_splits(*stacked, axis=0, mode="amla",
                            expand=lambda w: w[:, None, :])
     half = [x.astype(jnp.bfloat16) for x in stacked]
     got = ss.merge_splits(*half, axis=0, mode="amla",
                           expand=lambda w: w[:, None, :])
-    for x, y in zip(got, want):
+    for x, y in zip(got, want, strict=True):
         assert x.dtype == jnp.float32
         # lattice stats are small integers: exactly representable in bf16,
         # so the upcast path must reproduce the fp32 result bitwise

@@ -55,7 +55,7 @@ def test_head_draft_chains_without_self_loops():
     assert (hd.table != np.arange(16)).all()      # -inf diagonal: no fixpoint
     ds = hd.propose([3], 4)
     assert len(ds) == 4 and ds[0] == int(hd.table[3])
-    for a, b in zip(ds, ds[1:]):
+    for a, b in zip(ds, ds[1:], strict=False):
         assert b == int(hd.table[a])              # chained, not repeated
 
 
@@ -224,7 +224,8 @@ def test_verify_step_bitwise_equals_prefill_chunk(mla_model, kv_dtype):
                                   spec=attn_spec.AttnSpec())
     assert np.array_equal(np.asarray(lg_pf), np.asarray(lg_vf))
     # the appended KV rows are bitwise identical too
-    for xa, xb in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+    for xa, xb in zip(jax.tree.leaves(ca), jax.tree.leaves(cb),
+                      strict=True):
         assert np.array_equal(np.asarray(xa), np.asarray(xb))
 
 
@@ -340,14 +341,14 @@ def _drive_spec_pool(seed):
                 bp.admit(0, budget)
         elif op == 1 and act:
             s = int(act[int(rng.integers(len(act)))])
-            room = int(bp._budget[s]) - int(bp.lengths[s])
+            room = bp.budget(s) - int(bp.lengths[s])
             if room:
                 bp.extend(s, int(rng.integers(1, min(room, 5) + 1)))
         elif op == 2 and act:                        # speculative verify
             s = int(act[int(rng.integers(len(act)))])
             k = int(rng.integers(1, 5))
             start = int(bp.lengths[s])
-            if start + k <= int(bp._budget[s]):
+            if start + k <= bp.budget(s):
                 bp.extend(s, k)                      # commit k rows...
                 acc = int(rng.integers(0, k))        # ...accept 1 + acc
                 bp.truncate(s, start + 1 + acc, free_blocks=False)
@@ -358,7 +359,7 @@ def _drive_spec_pool(seed):
             # test_truncate_keeps_cow_blocks_read_only pins (the write
             # guard would fire on the next op into the shared block)
             lo = 0
-            for i, bid in enumerate(bp._chain[s]):
+            for i, bid in enumerate(bp.block_ids(s)):
                 if int(bp.ref[bid]) > 1:
                     lo = (i + 1) * page
             keep = int(rng.integers(lo, int(bp.lengths[s]) + 1))
@@ -371,7 +372,7 @@ def _drive_spec_pool(seed):
             bp.release(s)
     bp.check_conservation()
     # every block is back on the free list: nothing leaked, nothing lost
-    assert len(bp._free) == layout.num_blocks - 1
+    assert len(bp.free_ids()) == layout.num_blocks - 1
 
 
 if HAVE_HYPOTHESIS:

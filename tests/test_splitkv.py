@@ -136,7 +136,7 @@ def test_scheduler_monotone_in_context_length():
     (more context → more parallel work), at fixed batch/head geometry."""
     seqs = [256, 512, 1024, 4096, 16384, 65536, 262144]
     ns = [plan_splits(1, s, 16, 512).n_splits for s in seqs]
-    assert all(a <= b for a, b in zip(ns, ns[1:])), ns
+    assert all(a <= b for a, b in zip(ns, ns[1:], strict=False)), ns
     assert ns[-1] > 1                      # long context does split
     assert plan_splits(1, 256, 16, 512).n_splits == 1   # short doesn't
 
@@ -179,7 +179,7 @@ def test_split_geometry_exhaustive_small_shapes():
     for S in (1, 3, 5, 9):
         for block in (1, 2, 4):
             ns = [split_geometry(S, block, r)[1] for r in range(1, 12)]
-            assert all(a <= b for a, b in zip(ns, ns[1:])), (S, block, ns)
+            assert all(a <= b for a, b in zip(ns, ns[1:], strict=False)), (S, block, ns)
     # paged twin: same invariants at table granularity
     for nb in range(1, 10):
         for n_req in range(1, 12):

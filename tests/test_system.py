@@ -47,7 +47,7 @@ def test_grad_accumulation_equivalence():
         p2, _, m = make_train_step(cfg, tcfg)(params, opt_state, batch, 0)
         outs[n] = (jax.tree.leaves(p2), float(m["nll"]))
     assert abs(outs[1][1] - outs[4][1]) < 1e-2
-    for a, b in zip(outs[1][0], outs[4][0]):
+    for a, b in zip(outs[1][0], outs[4][0], strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=3e-2)
 
@@ -60,7 +60,7 @@ def test_optimizers_step_and_descend(name):
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
                                           0, cfg.vocab_size)}
     l0, _ = model.loss_fn(params, cfg, batch)
-    for s in range(10):
+    for _ in range(10):
         grads, _ = jax.grad(lambda p: model.loss_fn(p, cfg, batch),
                             has_aux=True)(params)
         grads, _ = opt.clip_by_global_norm(grads, 1.0)
